@@ -1,0 +1,82 @@
+"""Perf-iteration runner: measure a config variant's roofline terms against
+the baseline for one (arch x shape) cell.
+
+  PYTHONPATH=src:. python -m benchmarks.perf_iter --arch yi-9b \
+      --shape train_4k --variant castbf16 --override cast_params_once=True
+
+Runs the cell's probe plan with the extra overrides (tagged by variant so
+baseline probes are untouched), analyzes both, and prints the three-term
+delta.  Results append to experiments/perf_log.json for EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .roofline import analyze_cell, probe_plan, run_probes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--override", default="")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--log", default="experiments/perf_log.json")
+    ap.add_argument("--hypothesis", default="")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import parse_overrides
+    overrides = parse_overrides(args.override)
+    cfg = get_config(args.arch, **overrides)
+    plan, _ = probe_plan(args.arch, cfg)
+
+    # baseline probes (assumed present from the sweep; run if missing)
+    base_cfg = get_config(args.arch)
+    base_plan, _ = probe_plan(args.arch, base_cfg)
+    run_probes(args.arch, args.shape, args.out, base_plan)
+    run_probes(args.arch, args.shape, args.out, plan, variant=args.variant,
+               extra=args.override, attn_impl=args.attn_impl)
+
+    base = analyze_cell(args.arch, args.shape, args.out)
+    var = analyze_cell(args.arch, args.shape, args.out, variant=args.variant,
+                       extra_cfg=overrides,
+                       attn_impl=None if args.attn_impl == "auto"
+                       else args.attn_impl)
+    if not base or not var:
+        raise SystemExit("missing probes")
+
+    print(f"{'term':14s} {'baseline':>12s} {'variant':>12s} {'delta':>8s}")
+    deltas = {}
+    for term in ("compute_s", "memory_s", "collective_s", "roofline_s"):
+        b, v = base[term], var[term]
+        d = (v - b) / b if b else 0.0
+        deltas[term] = d
+        print(f"{term:14s} {b:12.4f} {v:12.4f} {d:+8.1%}")
+    print(f"dominant: {base['dominant']} -> {var['dominant']}")
+
+    entry = {"arch": args.arch, "shape": args.shape,
+             "variant": args.variant, "override": args.override,
+             "attn_impl": args.attn_impl, "hypothesis": args.hypothesis,
+             "baseline": {k: base[k] for k in
+                          ("compute_s", "memory_s", "collective_s",
+                           "dominant", "useful_ratio")},
+             "result": {k: var[k] for k in
+                        ("compute_s", "memory_s", "collective_s",
+                         "dominant", "useful_ratio")},
+             "deltas": deltas}
+    log = []
+    if os.path.exists(args.log):
+        with open(args.log) as f:
+            log = json.load(f)
+    log.append(entry)
+    with open(args.log, "w") as f:
+        json.dump(log, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

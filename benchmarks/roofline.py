@@ -1,0 +1,447 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Method
+------
+XLA's HLO cost analysis counts a `while` (scan) body ONCE regardless of trip
+count, so full-depth modules under-report FLOPs/bytes/collectives.  We
+therefore reconstruct exact full-model numbers from *unrolled shallow
+probes*: per (arch x shape), lower/compile the same global shapes at 1-2
+layers with ``scan_unroll=True`` and combine linearly:
+
+    full_metric = fixed + n_layers * marginal_per_layer
+
+with family-appropriate probe plans (deepseek keeps its first dense layer;
+zamba2 probes both the 6-layer shared-attention group and the bare mamba
+layer; seamless separates encoder and decoder marginals).  Peak memory is
+NOT linear, so memory_analysis comes from the full-depth scan dry-run.
+
+Terms (single-pod 16x16 = 256 chips of TPU v5e):
+    compute    = HLO_FLOPs / (chips * 197e12)          [bf16 peak]
+    memory     = HLO_bytes / (chips * 819e9)           [HBM]
+    collective = sum_ops per_device_bytes * ring_factor / 50e9 [ICI/link]
+with ring factors: all-reduce 2x, all-gather/reduce-scatter 1x,
+all-to-all 1/axis, collective-permute 1x.  (Cross-pod rows would use the
+25 GB/s DCN figure; the roofline table is single-pod per the assignment.)
+
+MODEL_FLOPS = 6 * N_active * tokens (train) / 2 * N_active * tokens
+(prefill/decode), N_active = active matmul params per token (analytic,
+per config — includes lm_head, excludes embedding gather).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 0.25, "collective-permute": 1.0}
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+# ---------------------------------------------------------------------------
+# Probe plans: list of (tag, overrides); combine(probes) -> full estimate.
+# ---------------------------------------------------------------------------
+
+def _linear_plan(l_small, l_big, n_layers, extra=""):
+    # grad_accum=1 in probes: the accumulation scan's body would otherwise
+    # be counted once (FLOPs are accum-invariant; memory comes from the
+    # full-depth run anyway).
+    base = "scan_unroll=True,grad_accum=1"
+    ov = (lambda l: f"n_layers={l},{base}" + (("," + extra) if extra else ""))
+    def combine(p):
+        marg = {k: p[f"L{l_big}"][k] - p[f"L{l_small}"][k]
+                for k in p[f"L{l_small}"]}
+        fixed = {k: p[f"L{l_small}"][k] - l_small * marg[k]
+                 for k in marg}
+        return {k: fixed[k] + n_layers * marg[k] for k in marg}
+    return [(f"L{l_small}", ov(l_small)), (f"L{l_big}", ov(l_big))], combine
+
+
+def probe_plan(arch: str, cfg):
+    if arch == "deepseek-v2-236b":
+        # layer 0 is dense; marginal = one MoE layer
+        return _linear_plan(2, 3, cfg.n_layers)
+    if arch == "zamba2-7b":
+        # group = 6 mamba + 1 shared-attn application; 81 = 13 groups + 3 tail
+        probes = [("G1", "n_layers=6,scan_unroll=True,grad_accum=1"),
+                  ("G2", "n_layers=12,scan_unroll=True,grad_accum=1"),
+                  ("M1", "n_layers=1,shared_attn_period=0,"
+                         "scan_unroll=True,grad_accum=1"),
+                  ("M2", "n_layers=2,shared_attn_period=0,"
+                         "scan_unroll=True,grad_accum=1")]
+
+        def combine(p):
+            group = {k: p["G2"][k] - p["G1"][k] for k in p["G1"]}
+            mamba = {k: p["M2"][k] - p["M1"][k] for k in p["M1"]}
+            fixed = {k: p["G1"][k] - group[k] for k in group}
+            return {k: fixed[k] + 13 * group[k] + 3 * mamba[k]
+                    for k in group}
+        return probes, combine
+    if arch == "seamless-m4t-medium":
+        probes = [("A", "enc_layers=1,n_layers=1,scan_unroll=True,grad_accum=1"),
+                  ("B", "enc_layers=2,n_layers=1,scan_unroll=True,grad_accum=1"),
+                  ("C", "enc_layers=1,n_layers=2,scan_unroll=True,grad_accum=1")]
+
+        def combine(p):
+            enc = {k: p["B"][k] - p["A"][k] for k in p["A"]}
+            dec = {k: p["C"][k] - p["A"][k] for k in p["A"]}
+            fixed = {k: p["A"][k] - enc[k] - dec[k] for k in enc}
+            return {k: fixed[k] + cfg.enc_layers * enc[k]
+                    + cfg.n_layers * dec[k] for k in enc}
+        return probes, combine
+    return _linear_plan(1, 2, cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS.
+# ---------------------------------------------------------------------------
+
+def active_params_per_token(cfg) -> float:
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    h, g = cfg.n_heads, cfg.n_kv_heads
+    glu = 3 if cfg.act.endswith("_glu") else 2
+
+    def attn_params():
+        if cfg.kv_lora:
+            ql, kvl = cfg.q_lora, cfg.kv_lora
+            nd, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+            q = (d * ql + ql * h * (nd + rd)) if ql else d * h * (nd + rd)
+            return (q + d * kvl + kvl * h * nd + kvl * h * vd + d * rd
+                    + h * vd * d)
+        return d * h * hd + 2 * d * g * hd + h * hd * d
+
+    def mlp_dense(ff):
+        return glu * d * ff
+
+    def moe_active():
+        return (d * cfg.n_experts                       # router
+                + cfg.top_k * glu * d * cfg.expert_d_ff
+                + cfg.n_shared_experts * glu * d * cfg.expert_d_ff)
+
+    def ssm_params():
+        di = cfg.ssm_expand * d
+        gs = cfg.ssm_groups * cfg.ssm_state
+        return 2 * d * di + 2 * d * gs + d * (di // cfg.ssm_head_dim) + di * d
+
+    per_layer = 0.0
+    if cfg.family in ("dense", "vlm", "encoder"):
+        per_layer = cfg.n_layers * (attn_params() + mlp_dense(f))
+    elif cfg.family == "moe":
+        first = cfg.first_dense_layers
+        per_layer = (first * (attn_params() + mlp_dense(f))
+                     + (cfg.n_layers - first) * (attn_params() + moe_active()))
+    elif cfg.family == "ssm":
+        per_layer = cfg.n_layers * ssm_params()
+    elif cfg.family == "hybrid":
+        groups = (cfg.n_layers // cfg.shared_attn_period
+                  if cfg.shared_attn_period else 0)
+        per_layer = (cfg.n_layers * ssm_params()
+                     + groups * (2 * d * d + attn_params() + mlp_dense(f)))
+    elif cfg.family == "encdec":
+        per_layer = (cfg.enc_layers * (attn_params() + mlp_dense(f))
+                     + cfg.n_layers * (2 * attn_params() + mlp_dense(f)))
+    head = d * cfg.padded_vocab
+    return per_layer + head
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = active_params_per_token(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # one decode token
+
+
+# ---------------------------------------------------------------------------
+# Analytic supplement for intra-layer scans.
+#
+# flash attention (kv x q chunk scans), the causal-LLN / SSD chunk scans and
+# the chunked-xent scan are `lax.scan`s whose trip counts are NOT layer
+# counts — the probe reconstruction cannot recover them, and unrolling a
+# 32k/1024-step scan is not compilable.  Their FLOPs/bytes are exact,
+# shape-derived quantities of our own implementations, added analytically.
+# They contain no collectives (all resharding happens at the projections,
+# which the probes DO count).
+# ---------------------------------------------------------------------------
+
+TRAIN_MULT = 4.0    # fwd + bwd(2x) + full-remat recompute (1x)
+SERVE_MULT = 1.0
+
+
+def _attn_divisor(cfg, shape, impl) -> float:
+    """How many devices share the global attention work (see sharding.py)."""
+    msize = 16
+    batch_div = min(shape.global_batch, 16) if shape.global_batch > 1 else 1
+    if cfg.attn_shard == "replicate":
+        return batch_div * (msize if (shape.global_batch * shape.seq_len)
+                            % (16 * msize) == 0 else 1)
+    if impl in ("lln", "lln_diag") and cfg.attn_shard == "context":
+        return batch_div                     # LLN replicated over model
+    return batch_div * msize                 # heads- or seq-sharded
+
+
+def attention_supplement(cfg, shape, impl) -> tuple[float, float]:
+    """(flops, bytes) per DEVICE for the intra-layer attention scans (plus
+    the chunked-xent tail).  Forward counts x train/serve multiplier."""
+    bsz, n = shape.global_batch, shape.seq_len
+    h, hd = cfg.n_heads, cfg.hd
+    d_attn = (cfg.nope_head_dim + cfg.rope_head_dim) if cfg.kv_lora else hd
+    dv = cfg.v_head_dim if cfg.kv_lora else hd
+    bytes_el = 2.0                            # bf16 activations
+    mult = TRAIN_MULT if shape.kind == "train" else SERVE_MULT
+
+    def softmax_full(num_layers, n_q, n_k):
+        # our flash computes every (q-block, kv-block) pair incl. masked
+        f = num_layers * 4.0 * bsz * n_q * n_k * h * (d_attn + dv) / 2
+        # kv re-read once per q-block (chunk 1024), q/o once
+        nqc = max(n_q // 1024, 1)
+        by = num_layers * bsz * h * bytes_el * (
+            n_k * d_attn * 2 * nqc + n_q * (d_attn + dv))
+        return f, by
+
+    def lln_(num_layers, n_):
+        c = cfg.lln_chunk
+        f = num_layers * bsz * n_ * h * (
+            2 * c * (d_attn + dv) + 6 * d_attn * dv)
+        by = num_layers * bsz * h * bytes_el * 3 * n_ * d_attn
+        if impl == "lln_diag":
+            f += num_layers * 4.0 * bsz * n_ * cfg.diag_block * h * \
+                (d_attn + dv) / 2
+            by *= 2
+        return f, by
+
+    def ssd_(num_layers, n_):
+        di = cfg.ssm_expand * cfg.d_model
+        hh = di // cfg.ssm_head_dim
+        c, s, pdim = cfg.ssm_chunk, cfg.ssm_state, cfg.ssm_head_dim
+        f = num_layers * 2.0 * bsz * n_ * hh * (c * s + c * pdim
+                                                + 2 * s * pdim)
+        by = num_layers * bsz * n_ * hh * bytes_el * 2 * (pdim + 2 * s)
+        return f, by
+
+    def decode_softmax(num_layers, ctx):
+        f = num_layers * 4.0 * bsz * ctx * h * (d_attn + dv) / 2
+        by = num_layers * bsz * ctx * cfg.n_kv_heads * d_attn * 2 * bytes_el
+        if cfg.kv_lora:   # absorbed MLA: latent-space scores + context
+            f = num_layers * 4.0 * bsz * ctx * h * cfg.kv_lora
+            by = num_layers * bsz * ctx * cfg.kv_lora * bytes_el
+        return f, by
+
+    def decode_lln(num_layers):
+        f = num_layers * bsz * h * (6 * d_attn * dv
+                                    + 4 * cfg.diag_block * (d_attn + dv) / 2)
+        by = num_layers * bsz * h * d_attn * dv * 4.0   # fp32 state
+        return f, by
+
+    fl, by = 0.0, 0.0
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "ssm":
+            fl, by = ssd_(cfg.n_layers, n)
+        elif cfg.family == "hybrid":
+            fl, by = ssd_(cfg.n_layers, n)
+            groups = cfg.n_layers // max(cfg.shared_attn_period, 1)
+            f2, b2 = (lln_(groups, n) if impl in ("lln", "lln_diag")
+                      else softmax_full(groups, n, n))
+            fl, by = fl + f2, by + b2
+        elif cfg.family == "encdec":
+            if impl in ("lln", "lln_diag"):
+                fe, be = lln_(cfg.enc_layers, n)
+                fd, bd = lln_(cfg.n_layers, n)
+            else:
+                fe, be = softmax_full(cfg.enc_layers, n, n)
+                fd, bd = softmax_full(cfg.n_layers, n, n)
+            fx, bx = softmax_full(cfg.n_layers, n, n)   # cross attention
+            fl, by = fe + fd + fx, be + bd + bx
+        else:
+            fl, by = (lln_(cfg.n_layers, n) if impl in ("lln", "lln_diag")
+                      else softmax_full(cfg.n_layers, n, n))
+    else:  # decode
+        if cfg.family == "ssm":
+            fl, by = ssd_(cfg.n_layers, 1)
+        elif cfg.family == "hybrid":
+            fl, by = ssd_(cfg.n_layers, 1)
+            groups = cfg.n_layers // max(cfg.shared_attn_period, 1)
+            f2, b2 = (decode_lln(groups) if impl in ("lln", "lln_diag")
+                      else decode_softmax(groups, n))
+            fl, by = fl + f2, by + b2
+        else:
+            layers = cfg.n_layers + (cfg.enc_layers
+                                     if cfg.family == "encdec" else 0) * 0
+            fl, by = (decode_lln(layers) if impl in ("lln", "lln_diag")
+                      else decode_softmax(layers, n))
+            if cfg.family == "encdec":   # cross-attention over the memory
+                f2, b2 = decode_softmax(cfg.n_layers, n)
+                fl, by = fl + f2, by + b2
+
+    # chunked-xent tail (vocab matmul beyond the single probe-counted chunk)
+    if shape.kind == "train":
+        tokens = bsz * n
+        fl += 2.0 * tokens * cfg.d_model * cfg.padded_vocab * \
+            (TRAIN_MULT - 1) / TRAIN_MULT  # probe counted ~one fwd chunk
+    div = _attn_divisor(cfg, shape, impl)
+    return fl * mult / div, by * mult / div
+
+
+# ---------------------------------------------------------------------------
+# Assembly.
+# ---------------------------------------------------------------------------
+
+def _metrics_of(result: dict) -> dict:
+    m = {"flops": result.get("flops", 0.0),
+         "bytes": result.get("bytes_accessed", 0.0)}
+    for op, rec in (result.get("collectives") or {}).items():
+        m[f"coll_{op}"] = float(rec["bytes"])
+        m[f"cnt_{op}"] = float(rec["count"])
+    return m
+
+
+def _metric_keys(probes: dict) -> set:
+    keys = set()
+    for p in probes.values():
+        keys |= set(p)
+    return keys
+
+
+def load_cell(out_dir, arch, shape, tag):
+    path = os.path.join(out_dir, f"{arch}__{shape}__{tag}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run_probes(arch, shape, out_dir, plan, *, variant="", extra="",
+               attn_impl="auto"):
+    pre = f"p{variant}_" if variant else "p"
+    for tag, override in plan:
+        path = os.path.join(out_dir, f"{arch}__{shape}__16x16__{pre}{tag}.json")
+        if os.path.exists(path):
+            continue
+        ov = override + ("," + extra if extra else "")
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", out_dir, "--override", ov,
+               "--tag", f"{pre}{tag}", "--attn-impl", attn_impl]
+        print("[probe]", arch, shape, variant or "base", tag, flush=True)
+        subprocess.run(cmd, check=False)
+
+
+def analyze_cell(arch, shape_name, out_dir, *, variant="", extra_cfg=None,
+                 attn_impl=None):
+    from repro.configs import SHAPES_BY_NAME, get_config
+    cfg = get_config(arch, **(extra_cfg or {}))
+    shape = SHAPES_BY_NAME[shape_name]
+    plan, combine = probe_plan(arch, cfg)
+    pre = f"p{variant}_" if variant else "p"
+    probes = {}
+    for tag, _ in plan:
+        r = load_cell(out_dir, arch, shape_name, f"16x16__{pre}{tag}")
+        if r is None or not r.get("ok"):
+            return None
+        probes[tag] = _metrics_of(r)
+    keys = _metric_keys(probes)
+    for p in probes.values():
+        for k in keys:
+            p.setdefault(k, 0.0)
+    full = combine(probes)
+
+    base = load_cell(out_dir, arch, shape_name, "16x16") or {}
+    impl = attn_impl or base.get("attn_impl", cfg.attn_impl)
+    sup_f, sup_b = attention_supplement(cfg, shape, impl)
+    flops_dev = max(full["flops"], 0.0) + sup_f
+    bytes_dev = max(full["bytes"], 0.0) + sup_b
+    coll_s = 0.0
+    coll_detail = {}
+    for op, fac in RING_FACTOR.items():
+        b = max(full.get(f"coll_{op}", 0.0), 0.0)
+        coll_detail[op] = b
+        coll_s += b * fac / ICI_BW
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * CHIPS
+    result = {
+        "arch": arch, "shape": shape_name,
+        "attn_impl": impl,
+        "attn_supplement_flops": sup_f,
+        "attn_supplement_bytes": sup_b,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": round(mf / hlo_total, 4) if hlo_total else None,
+        "collective_bytes_per_dev": coll_detail,
+        "temp_bytes_full": base.get("temp_size_in_bytes"),
+        "arg_bytes_full": base.get("argument_size_in_bytes"),
+        "roofline_s": round(max(terms.values()), 6),
+    }
+    best = max(terms.values())
+    result["bound_fraction"] = {
+        k.replace("_s", ""): round(v / best, 3) for k, v in terms.items()}
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--probes", action="store_true",
+                    help="run missing probe dry-runs (subprocesses)")
+    ap.add_argument("--archs", default="")
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--report", default="experiments/roofline.json")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.registry import ASSIGNED_ARCHS
+    archs = args.archs.split(",") if args.archs else list(ASSIGNED_ARCHS)
+    shapes = args.shapes.split(",")
+
+    if args.probes:
+        for arch in archs:
+            cfg = get_config(arch)
+            plan, _ = probe_plan(arch, cfg)
+            for shape in shapes:
+                run_probes(arch, shape, args.out, plan)
+
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            r = analyze_cell(arch, shape, args.out)
+            if r:
+                rows.append(r)
+            else:
+                rows.append({"arch": arch, "shape": shape,
+                             "error": "missing probes"})
+    os.makedirs(os.path.dirname(args.report), exist_ok=True)
+    with open(args.report, "w") as f:
+        json.dump(rows, f, indent=2)
+
+    hdr = (f"{'arch':24s} {'shape':12s} {'impl':9s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'bound':>9s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if "error" in r:
+            print(f"{r['arch']:24s} {r['shape']:12s} -- {r['error']}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['attn_impl']:9s} "
+              f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+              f"{r['collective_s']:10.4f} {r['dominant']:>9s} "
+              f"{r['useful_ratio'] if r['useful_ratio'] else 0:7.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
+
+  bench_distribution   Fig. 5 / Fig. 7 / Props. 3.1 & 4.1
+  bench_concentration  Fig. 2 (entropy + spectral gap vs temperature)
+  bench_convergence    Fig. 8a / Table 1 proxy (+ Fig. 9 alpha tracking)
+  bench_scaling        Table 2 (+ LRA Table 4 timing class)
+
+Roofline terms (EXPERIMENTS.md §Roofline) are produced separately by
+``python -m benchmarks.roofline`` from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_concentration, bench_convergence,
+                   bench_distribution, bench_scaling)
+    modules = [("distribution", bench_distribution),
+               ("concentration", bench_concentration),
+               ("convergence", bench_convergence),
+               ("scaling", bench_scaling)]
+    all_rows = []
+    for name, mod in modules:
+        print(f"== {name} ==", file=sys.stderr, flush=True)
+        t0 = time.time()
+        rows = mod.run(verbose=True)
+        print(f"   ({time.time() - t0:.1f}s)", file=sys.stderr)
+        all_rows.extend(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

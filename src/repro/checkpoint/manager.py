@@ -1,0 +1,46 @@
+"""CheckpointManager: resume/restart orchestration on top of checkpointer.
+
+Train loops interact only with this class:
+    mgr = CheckpointManager(dir, keep_n=3, interval=100)
+    state, start_step = mgr.restore_or_init(init_fn, shardings)
+    ...
+    mgr.maybe_save(step, state)     # async, interval-gated
+    mgr.finalize(step, state)       # sync flush at exit/preemption
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from .checkpointer import (AsyncCheckpointer, committed_steps, restore)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_n: int = 3,
+                 interval: int = 100):
+        self.directory = directory
+        self.interval = interval
+        self.async_ckpt = AsyncCheckpointer(directory, keep_n=keep_n)
+
+    def latest_step(self) -> Optional[int]:
+        steps = committed_steps(self.directory)
+        return steps[-1] if steps else None
+
+    def restore_or_init(self, init_fn: Callable[[], Any],
+                        shardings: Any = None) -> tuple[Any, int]:
+        """Resume from the latest committed checkpoint, else fresh init.
+        Re-sharding onto the *current* mesh happens here (elastic restart)."""
+        step = self.latest_step()
+        template = init_fn()
+        if step is None:
+            return template, 0
+        state = restore(self.directory, step, template, shardings)
+        return state, step
+
+    def maybe_save(self, step: int, state: Any):
+        if self.interval and step % self.interval == 0 and step > 0:
+            self.async_ckpt.save_async(step, state)
+
+    def finalize(self, step: int, state: Any):
+        self.async_ckpt.wait()
+        self.async_ckpt.save_async(step, state)
+        self.async_ckpt.wait()

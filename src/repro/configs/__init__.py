@@ -1,0 +1,3 @@
+"""Architecture configs: the 10 assigned archs + the paper's RoBERTa setting."""
+from .base import ArchConfig, ShapeSpec, SHAPES, SHAPES_BY_NAME
+from .registry import ASSIGNED_ARCHS, get_config, list_archs

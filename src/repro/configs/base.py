@@ -1,0 +1,130 @@
+"""Architecture configuration schema.
+
+One dataclass covers all assigned families; family-specific fields are
+ignored by other families.  Every assigned architecture provides both its
+full (paper-exact) config and a reduced smoke config of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | mla_moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+
+    # --- attention ---------------------------------------------------------
+    attn_impl: str = "softmax"       # softmax | lln | lln_diag (paper technique)
+    diag_block: int = 256
+    lln_chunk: int = 256
+    use_kernel: bool = False         # Pallas kernels (TPU); jnp path on CPU
+    qk_norm: bool = False
+    lln_fixed_ab: float = 0.0        # fixed alpha=beta (paper §A.8.4); 0=dynamic
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0          # stablelm 0.25; chatglm 0.5 ("2d" RoPE)
+    softmax_chunk: int = 1024
+
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0      # deepseek-v2: first layer keeps dense FFN
+    router_aux_coef: float = 0.001
+
+    # --- MLA (deepseek-v2) ---------------------------------------------------
+    kv_lora: int = 0
+    q_lora: int = 0
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- SSM (mamba2 / zamba2) ----------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    shared_attn_period: int = 6      # zamba2: shared attn block cadence
+
+    # --- enc-dec / vlm frontends ---------------------------------------------
+    enc_layers: int = 0              # seamless: encoder depth
+    frontend_dim: int = 0            # stub embedding dim (audio frames / patches)
+    num_prefix_tokens: int = 0       # vlm: image patch count
+
+    # --- norm / act / misc ---------------------------------------------------
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu_glu"            # silu_glu | gelu_glu | gelu
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma-style sqrt(d_model) embed scaling
+    logit_softcap: float = 0.0
+
+    # --- dtypes / remat / microbatching --------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"              # full | dots | none
+    grad_accum: int = 1              # microbatches per step (activation peak /N)
+    cast_params_once: bool = False   # bf16-cast before FSDP gathers (2x comm)
+    scan_unroll: bool = False        # unroll layer scans (roofline probes:
+                                     # makes HLO cost_analysis trip-count-exact)
+
+    # --- distribution policy -------------------------------------------------
+    attn_shard: str = "tp_heads"     # tp_heads | context | replicate
+    vocab_pad_to: int = 256
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_serve(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+# The four assigned LM shapes (identical for all 10 archs).
+SHAPES: Tuple[ShapeSpec, ...] = (
+    ShapeSpec("train_4k", 4096, 256, "train"),
+    ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32768, 128, "decode"),
+    ShapeSpec("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}

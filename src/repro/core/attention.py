@@ -1,0 +1,367 @@
+"""Unified multi-head attention front-end.
+
+One entry point — :func:`multi_head_attention` — dispatching on
+``impl in {"softmax", "lln", "lln_diag"}``:
+
+* ``softmax``  — arch-faithful baseline; flash-style (online-softmax, chunked
+  over keys) so 32k-token prefill never materializes an N x N matrix.
+* ``lln``      — the paper's Linear Log-Normal attention (eq. 8) with
+  moment-matched (alpha, beta) (eq. 10), causal or bidirectional.
+* ``lln_diag`` — the paper's §4.2 hybrid: average of LLN and block-diagonal
+  softmax attention.
+
+GQA/MQA: k/v may carry fewer heads (G) than q (H); G must divide H.
+All inputs are (batch, seq, heads, head_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import lln as lln_mod
+from .numerics import einsum_f32
+from .diag import block_diag_attn
+from .lln import LLNState, lln_bidir, lln_causal
+from .moment_matching import constants_for_dim, solve_alpha_beta
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    impl: str = "softmax"          # softmax | lln | lln_diag
+    causal: bool = True
+    diag_block: int = 256          # block size of the §4.2 diagonal component
+    lln_chunk: int = 128           # chunk of the causal LLN scan
+    softmax_chunk: int = 1024      # key-chunk of the flash softmax path
+    use_kernel: bool = False       # route through Pallas kernels (kernels/ops)
+    # Moment-matching constants; None -> calibrated defaults for head_dim.
+    mm_a: Optional[float] = None
+    mm_b: Optional[float] = None
+    # Fixed alpha=beta (paper §A.8.4 ablation); 0 = dynamic moment matching.
+    fixed_ab: float = 0.0
+
+
+def _repeat_kv(t: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Expand (B, N, G, D) kv heads to H = G*R query heads."""
+    g = t.shape[2]
+    if g == h:
+        return t
+    return jnp.repeat(t, h // g, axis=2)
+
+
+def batch_alpha_beta(q: jnp.ndarray, k: jnp.ndarray,
+                     cfg: AttnConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Moment-matched (alpha, beta) from current-batch statistics.
+
+    Mirrors the artifact: sigma_q/sigma_k are measured on the fly
+    (stop-gradient) and eq. 10 is applied — this is what makes alpha/beta
+    drift during training as in the paper's Fig. 9.
+
+    GQA: statistics are pooled per kv *group* (the r query heads sharing one
+    kv head), so alpha: (H,) and beta: (G,) stay consistent within a group.
+    """
+    h, g = q.shape[2], k.shape[2]
+    if cfg.fixed_ab:
+        return (jnp.full((h,), cfg.fixed_ab, jnp.float32),
+                jnp.full((g,), cfg.fixed_ab, jnp.float32))
+    a, b = (cfg.mm_a, cfg.mm_b)
+    if a is None or b is None:
+        a, b = constants_for_dim(q.shape[-1])
+    r = h // g
+    sq = jnp.sqrt(jnp.mean(jnp.square(q.astype(jnp.float32)), axis=(0, 1, 3)))
+    sq_g = jnp.mean(sq.reshape(g, r), axis=1)                       # (G,)
+    sk_g = jnp.sqrt(jnp.mean(jnp.square(k.astype(jnp.float32)),
+                             axis=(0, 1, 3)))                       # (G,)
+    alpha_g, beta_g = solve_alpha_beta(sq_g, sk_g, a, b)
+    # Per-query-head alpha re-solved against the group's sigma_tilde so each
+    # q head is correctly normalized by its own sigma_q (eq. 10).
+    sigma_sm_sq = jnp.square(sq_g) * jnp.square(sk_g)
+    st = jnp.sqrt(jnp.maximum((sigma_sm_sq - b) / a, 1e-4))         # (G,)
+    alpha = jnp.repeat(st, r) / (jnp.sqrt(2.0) * jnp.maximum(sq, 1e-4))
+    del alpha_g
+    return alpha, beta_g
+
+
+# ---------------------------------------------------------------------------
+# Flash-style softmax attention (chunked over keys, online softmax).
+# ---------------------------------------------------------------------------
+
+def flash_softmax(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    chunk: int = 1024,
+    mask: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+    prefix_len: int = 0,
+) -> jnp.ndarray:
+    """q: (B,Nq,H,D); k/v: (B,Nk,G,D[v]).  mask: (B, Nk) key validity.
+
+    Online-softmax accumulation over key chunks; O(Nq * chunk) live scores.
+    Assumes query i attends keys j <= i + (Nk - Nq) when causal (i.e. the
+    queries are the *last* Nq positions — the decode/prefill convention).
+    ``prefix_len``: prefix-LM — keys < prefix_len are visible to every query
+    (PaliGemma-style bidirectional image prefix).
+    """
+    from repro.distributed.sharding import constrain
+
+    b, nq, h, d = q.shape
+    nk, g = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    # Flat heads throughout: a (G, R) head split would leave both factors
+    # un-shardable by the model axis for GQA archs (e.g. 4 x 8 vs 16), which
+    # makes the SPMD partitioner replicate heads and gather batch instead.
+    # Repeating KV costs (N * H * D) bf16 transient; sharded it is tiny.
+    if g != h:
+        k = jnp.repeat(k, h // g, axis=2)
+        v = jnp.repeat(v, h // g, axis=2)
+
+    nkc = -(-nk // chunk)
+    kpad = nkc * chunk - nk
+    if mask is None:
+        mask = jnp.ones((b, nk), jnp.bool_)
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, kpad)))
+
+    qchunk = min(chunk, nq)
+    nqc = -(-nq // qchunk)
+    qpad = nqc * qchunk - nq
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+
+    # Arrays stay in their input dtype (bf16 in models) — only the online-
+    # softmax statistics and accumulators are fp32 (preferred_element_type
+    # on the two matmuls).  Upcasting k/v here would materialize fp32
+    # copies of the whole cache.  The stacked scan operands are explicitly
+    # constrained (no-op outside a mesh) so the partitioner keeps batch on
+    # the data axis and heads on the model axis.
+    qg = (q.reshape(b, nqc, qchunk, h, d).transpose(1, 0, 2, 3, 4)
+          * jnp.asarray(scale, q.dtype))                     # (nqc,B,Cq,H,D)
+    kc = k.reshape(b, nkc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nkc, chunk, h, dv).transpose(1, 0, 2, 3, 4)
+    qg = constrain(qg, None, "act_batch", None, "heads", None)
+    kc = constrain(kc, None, "act_batch", None, "heads", None)
+    vc = constrain(vc, None, "act_batch", None, "heads", None)
+    mc = mask.reshape(b, nkc, chunk).transpose(1, 0, 2)
+    key_pos_all = jnp.arange(nkc * chunk).reshape(nkc, chunk)
+
+    def q_block(carry, xs):
+        qq, qbase = xs                           # (B,Cq,H,D), scalar
+        q_pos = qbase + jnp.arange(qchunk) + (nk - nq)
+
+        def kv_step(inner, ys):
+            m, l, acc = inner                    # (B,H,Cq), ..., (...,Dv)
+            ck, cv, cm, key_pos = ys
+            s = einsum_f32("bqhd,bjhd->bhqj", qq, ck)
+            bias = jnp.where(cm[:, None, None, :], 0.0, NEG_INF)
+            if causal:
+                allowed = q_pos[:, None] >= key_pos[None, :]
+                if prefix_len:
+                    allowed = allowed | (key_pos[None, :] < prefix_len)
+                bias = bias + jnp.where(allowed[None, None], 0.0, NEG_INF)
+            s = s + bias
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + einsum_f32(
+                "bhqj,bjhv->bhqv", p.astype(v.dtype), cv)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, qchunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qchunk), jnp.float32)
+        acc0 = jnp.zeros((b, h, qchunk, dv), jnp.float32)
+        # remat: the VJP of the scan must recompute each block's p rather
+        # than stash (Cq x chunk) probabilities per step (flash backward).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step),
+                                      (m0, l0, acc0),
+                                      (kc, vc, mc, key_pos_all))
+        out = acc / jnp.maximum(l[..., None], 1e-20)         # (B,H,Cq,Dv)
+        return carry, out.astype(v.dtype)
+
+    qbases = jnp.arange(nqc) * qchunk
+    _, blocks = jax.lax.scan(q_block, 0, (qg, qbases))       # (nqc,B,H,Cq,Dv)
+    out = blocks.transpose(1, 0, 3, 2, 4).reshape(b, nqc * qchunk, h, dv)
+    return out[:, :nq].astype(v.dtype)
+
+
+def naive_softmax(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+    causal: bool = True, mask: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None, prefix_len: int = 0,
+) -> jnp.ndarray:
+    """Quadratic reference (small N / tests only)."""
+    b, nq, h, d = q.shape
+    nk = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bqhd,bjhd->bhqj", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if mask is not None:
+        s = s + jnp.where(mask[:, None, None, :], 0.0, NEG_INF)
+    if causal:
+        qp = jnp.arange(nq) + (nk - nq)
+        allowed = qp[:, None] >= jnp.arange(nk)[None, :]
+        if prefix_len:
+            allowed = allowed | (jnp.arange(nk)[None, :] < prefix_len)
+        s = s + jnp.where(allowed[None, None], 0.0, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqj,bjhv->bqhv", p, v.astype(jnp.float32)).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Unified entry point.
+# ---------------------------------------------------------------------------
+
+def multi_head_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cfg: AttnConfig,
+    *,
+    mask: Optional[jnp.ndarray] = None,
+    alpha: Optional[jnp.ndarray] = None,
+    beta: Optional[jnp.ndarray] = None,
+    prefix_len: int = 0,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).  See module docstring."""
+    h = q.shape[2]
+    if cfg.impl == "softmax":
+        return flash_softmax(q, k, v, causal=cfg.causal,
+                             chunk=min(cfg.softmax_chunk, k.shape[1]),
+                             mask=mask, prefix_len=prefix_len)
+    g = k.shape[2]
+    if alpha is None or beta is None:
+        alpha, beta = batch_alpha_beta(q, k, cfg)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32)
+    if alpha.ndim == 0:
+        alpha = jnp.broadcast_to(alpha, (h,))
+    if beta.ndim == 0:
+        beta = jnp.broadcast_to(beta, (g,))
+    if beta.shape[0] == h and g != h:      # caller passed per-q-head beta
+        beta = beta.reshape(g, h // g).mean(axis=1)
+
+    if cfg.use_kernel:
+        # Kernels handle GQA via BlockSpec index maps — no KV repeat.
+        from repro.kernels import ops as kops
+        if cfg.impl == "lln":
+            return kops.lln_attention(q, k, v, alpha, beta, cfg.causal,
+                                      cfg.lln_chunk)
+        if cfg.impl == "lln_diag":
+            return kops.lln_diag_attention(q, k, v, alpha, beta, cfg.causal,
+                                           cfg.diag_block)
+        raise ValueError(f"unknown attention impl: {cfg.impl}")
+
+    kv_k = _repeat_kv(k, h)
+    kv_v = _repeat_kv(v, h)
+    beta_h = jnp.repeat(beta, h // g) if g != h else beta
+    if cfg.causal:
+        lln_out = lln_causal(q, kv_k, kv_v, alpha, beta_h, chunk=cfg.lln_chunk)
+    else:
+        lln_out = lln_bidir(q, kv_k, kv_v, alpha, beta_h, mask=mask)
+    if cfg.impl == "lln":
+        return lln_out
+    if cfg.impl == "lln_diag":
+        diag_out = block_diag_attn(q, kv_k, kv_v, block=cfg.diag_block,
+                                   causal=cfg.causal, mask=mask)
+        return (0.5 * (lln_out.astype(jnp.float32)
+                       + diag_out.astype(jnp.float32))).astype(v.dtype)
+    raise ValueError(f"unknown attention impl: {cfg.impl}")
+
+
+# ---------------------------------------------------------------------------
+# Decode-time state: softmax KV cache / LLN running state (+ diag tail).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Ring-less softmax KV cache: k/v (B, S, G, D[v]) + filled length."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray     # scalar int32
+
+    @staticmethod
+    def init(batch: int, max_len: int, g: int, d: int, dv: int,
+             dtype=jnp.bfloat16) -> "KVCache":
+        return KVCache(k=jnp.zeros((batch, max_len, g, d), dtype),
+                       v=jnp.zeros((batch, max_len, g, dv), dtype),
+                       length=jnp.zeros((), jnp.int32))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LLNDecodeState:
+    """LLN decode state + rolling tail buffer for the diagonal component.
+
+    The diag component of §4.2 only ever needs the current block's history,
+    so decode keeps a (B, diag_block, H, D) tail instead of the full cache —
+    this is what makes long_500k decode O(d^2 + block) per token.
+    """
+    lln: LLNState
+    tail_k: jnp.ndarray     # (B, BLK, H, D)
+    tail_v: jnp.ndarray     # (B, BLK, H, Dv)
+    pos: jnp.ndarray        # scalar int32: absolute next position
+
+    @staticmethod
+    def init(batch: int, heads: int, d: int, dv: int, block: int,
+             dtype=jnp.bfloat16) -> "LLNDecodeState":
+        return LLNDecodeState(
+            lln=LLNState.init(batch, heads, d, dv),
+            tail_k=jnp.zeros((batch, block, heads, d), dtype),
+            tail_v=jnp.zeros((batch, block, heads, dv), dtype),
+            pos=jnp.zeros((), jnp.int32))
+
+
+def decode_softmax(cache: KVCache, q: jnp.ndarray, k_new: jnp.ndarray,
+                   v_new: jnp.ndarray, *, scale: Optional[float] = None
+                   ) -> tuple[jnp.ndarray, KVCache]:
+    """One-token softmax decode against a KV cache. q/k/v_new: (B,1,H|G,D)."""
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), cache.length, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), cache.length, axis=1)
+    new_len = cache.length + q.shape[1]
+    valid = jnp.arange(kc.shape[1])[None, :] < new_len
+    valid = jnp.broadcast_to(valid, (q.shape[0], kc.shape[1]))
+    out = flash_softmax(q, kc, vc, causal=True, chunk=min(1024, kc.shape[1]),
+                        mask=valid, scale=scale)
+    return out, KVCache(k=kc, v=vc, length=new_len)
+
+
+def decode_lln(state: LLNDecodeState, q: jnp.ndarray, k_new: jnp.ndarray,
+               v_new: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray,
+               *, impl: str = "lln_diag") -> tuple[jnp.ndarray, LLNDecodeState]:
+    """One-token LLN(+Diag) decode.  q/k/v_new: (B, 1, H, D[v])."""
+    h = q.shape[2]
+    k_new = _repeat_kv(k_new, h)
+    v_new = _repeat_kv(v_new, h)
+    lln_out, lln_state = lln_mod.decode_step(state.lln, q, k_new, v_new,
+                                             alpha, beta)
+    block = state.tail_k.shape[1]
+    slot = jnp.mod(state.pos, block)
+    tail_k = jax.lax.dynamic_update_slice_in_dim(
+        state.tail_k, k_new.astype(state.tail_k.dtype), slot, axis=1)
+    tail_v = jax.lax.dynamic_update_slice_in_dim(
+        state.tail_v, v_new.astype(state.tail_v.dtype), slot, axis=1)
+    new_state = LLNDecodeState(lln=lln_state, tail_k=tail_k, tail_v=tail_v,
+                               pos=state.pos + 1)
+    if impl == "lln":
+        return lln_out, new_state
+    # Diagonal component: softmax over the current block's prefix (<= slot).
+    valid = jnp.arange(block)[None, :] <= slot
+    valid = jnp.broadcast_to(valid, (q.shape[0], block))
+    diag_out = naive_softmax(q, tail_k, tail_v, causal=False, mask=valid)
+    out = 0.5 * (lln_out.astype(jnp.float32) + diag_out.astype(jnp.float32))
+    return out.astype(v_new.dtype), new_state

@@ -1,0 +1,228 @@
+"""Linear Log-Normal (LLN) attention — the paper's core contribution (eq. 8-9).
+
+Feature maps Phi_Q(q) = exp(alpha * q), Phi_K(k) = exp(beta * k) turn Gaussian
+q/k into log-normal features; the induced attention matrix is approximately
+log-normal (Prop. 4.1) and, with moment-matched (alpha, beta) (eq. 10), emulates
+the distribution and concentration behaviour of softmax attention.
+
+Shapes follow the framework convention:  (batch, seq, heads, head_dim) for
+q/k, (batch, seq, heads, v_dim) for v.  All functions are pure and jit-safe.
+
+Numerical stabilization
+-----------------------
+exp(alpha*q) can overflow.  The normalized LLN form (eq. 8) is *exactly*
+invariant to subtracting a global (per batch*head) constant from alpha*q and
+from beta*k: both numerator and denominator scale by exp(-c_q - c_k).  We use
+stop-gradient global maxima as those constants.  For decode, the running state
+carries its own reference constant and is rescaled when the constant moves
+(see :func:`decode_step`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .numerics import einsum_f32
+
+EPS = 1e-6
+
+
+def _stab_const(x: jnp.ndarray, axes: tuple[int, ...]) -> jnp.ndarray:
+    """Global stabilization constant (stop-gradient max over seq & feature)."""
+    c = jax.lax.stop_gradient(jnp.max(x, axis=axes, keepdims=True))
+    # Guard fully-masked/empty inputs.
+    return jnp.where(jnp.isfinite(c), c, 0.0)
+
+
+def feature_map_q(q: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Phi_Q(q) = exp(alpha*q - c_q);  q: (B, N, H, D), alpha scalar or (H,)."""
+    aq = q * _bcast(alpha, q)
+    return jnp.exp(aq - _stab_const(aq, (1, 3)))
+
+
+def feature_map_k(k: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """Phi_K(k) = exp(beta*k - c_k);  k: (B, N, H, D), beta scalar or (H,)."""
+    bk = k * _bcast(beta, k)
+    return jnp.exp(bk - _stab_const(bk, (1, 3)))
+
+
+def _bcast(p: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a scalar or per-head (H,) parameter over (B, N, H, D)."""
+    p = jnp.asarray(p, like.dtype)
+    if p.ndim == 0:
+        return p
+    return p.reshape((1, 1, -1, 1))
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional (encoder) LLN attention — the paper's published setting.
+# ---------------------------------------------------------------------------
+
+def lln_bidir(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    *,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Non-causal LLN attention, O(N d^2) time, O(d^2) state.
+
+    out_i = Phi(q_i) @ S / (Phi(q_i) . z),  S = sum_j Phi(k_j) v_j^T,
+    z = sum_j Phi(k_j).   `mask`: optional (B, N) 1/0 key validity.
+    """
+    fq = feature_map_q(q, alpha).astype(q.dtype)
+    fk = feature_map_k(k, beta).astype(k.dtype)
+    vf = v
+    if mask is not None:
+        fk = fk * mask[:, :, None, None].astype(fk.dtype)
+    s = einsum_f32("bnhd,bnhv->bhdv", fk, vf)            # (B, H, D, Dv)
+    z = jnp.sum(fk.astype(jnp.float32), axis=1)          # (B, H, D)
+    num = einsum_f32("bnhd,bhdv->bnhv", fq, s.astype(fq.dtype))
+    den = einsum_f32("bnhd,bhd->bnh", fq, z.astype(fq.dtype))
+    return (num / (den[..., None] + EPS)).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal (decoder) LLN attention — chunked prefix-state form.
+# ---------------------------------------------------------------------------
+
+def lln_causal(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    *,
+    chunk: int = 128,
+) -> jnp.ndarray:
+    """Causal LLN via chunked scan: intra-chunk masked quadratic + inter-chunk
+    state pass.  O(N * (chunk*d + d^2)) compute, O(d^2) carried state.
+    """
+    b, n, h, d = q.shape
+    dv = v.shape[-1]
+    if n % chunk:
+        pad = chunk - n % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = q.shape[1] // chunk
+
+    from repro.distributed.sharding import constrain
+
+    fq = feature_map_q(q, alpha).astype(q.dtype)
+    fk = feature_map_k(k, beta).astype(k.dtype)
+    vf = v
+    # (nc, B, C, H, D); constrained so the partitioner keeps batch on the
+    # data axis and heads on the model axis (see flash_softmax).
+    fq = fq.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    fk = fk.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vf = vf.reshape(b, nc, chunk, h, dv).transpose(1, 0, 2, 3, 4)
+    fq = constrain(fq, None, "act_batch", None, "heads", None)
+    fk = constrain(fk, None, "act_batch", None, "heads", None)
+    vf = constrain(vf, None, "act_batch", None, "heads", None)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def step(carry, xs):
+        s, z = carry                                   # f32 (B,H,D,Dv),(B,H,D)
+        cq, ck, cv = xs
+        scores = einsum_f32("bihd,bjhd->bhij", cq, ck) \
+            * causal[None, None]
+        intra = einsum_f32("bhij,bjhv->bihv", scores.astype(cv.dtype), cv)
+        intra_z = jnp.sum(scores, axis=-1).transpose(0, 2, 1)   # (B,C,H)
+        inter = einsum_f32("bihd,bhdv->bihv", cq, s.astype(cq.dtype))
+        inter_z = einsum_f32("bihd,bhd->bih", cq, z.astype(cq.dtype))
+        out = (intra + inter) / (intra_z + inter_z + EPS)[..., None]
+        s = s + einsum_f32("bjhd,bjhv->bhdv", ck, cv)
+        z = z + jnp.sum(ck.astype(jnp.float32), axis=1)
+        return (s, z), out
+
+    s0 = jnp.zeros((b, h, d, dv), jnp.float32)
+    z0 = jnp.zeros((b, h, d), jnp.float32)
+    # remat: recompute intra-chunk scores in the backward instead of
+    # stashing (C x C) blocks per step.
+    _, out = jax.lax.scan(jax.checkpoint(step), (s0, z0), (fq, fk, vf))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, dv)
+    return out[:, :n].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1)-per-token state ("KV state" replaces the KV cache).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LLNState:
+    """Running LLN decode state for one layer.
+
+    s:  (B, H, D, Dv)  accumulated Phi(k)^T v  (fp32)
+    z:  (B, H, D)      accumulated Phi(k)      (fp32)
+    c_k: (B, 1, H, 1)  reference stabilization constant the state was built with
+    """
+    s: jnp.ndarray
+    z: jnp.ndarray
+    c_k: jnp.ndarray
+
+    @staticmethod
+    def init(batch: int, heads: int, d: int, dv: int) -> "LLNState":
+        return LLNState(
+            s=jnp.zeros((batch, heads, d, dv), jnp.float32),
+            z=jnp.zeros((batch, heads, d), jnp.float32),
+            c_k=jnp.zeros((batch, 1, heads, 1), jnp.float32),
+        )
+
+
+def prefill(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    *,
+    chunk: int = 128,
+) -> tuple[jnp.ndarray, LLNState]:
+    """Causal forward over a prompt, returning outputs and the decode state."""
+    out = lln_causal(q, k, v, alpha, beta, chunk=chunk)
+    bk = k * _bcast(beta, k)
+    c_k = _stab_const(bk, (1, 3))
+    fk = jnp.exp(bk - c_k).astype(jnp.float32)
+    s = jnp.einsum("bnhd,bnhv->bhdv", fk, v.astype(jnp.float32))
+    z = jnp.sum(fk, axis=1)
+    return out, LLNState(s=s, z=z, c_k=c_k.astype(jnp.float32))
+
+
+def decode_step(
+    state: LLNState,
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+) -> tuple[jnp.ndarray, LLNState]:
+    """One decode step.  q/k/v: (B, 1, H, D[v]).  Returns (out, new_state).
+
+    If the new key pushes the stabilization constant up, the state is rescaled
+    by exp(c_old - c_new) so history and update share one reference constant.
+    """
+    bk = k * _bcast(beta, k)
+    c_new = jnp.maximum(state.c_k, jax.lax.stop_gradient(
+        jnp.max(bk, axis=(1, 3), keepdims=True)))
+    rescale = jnp.exp(state.c_k - c_new)               # (B,1,H,1) <= 1
+    r = rescale[:, 0, :, 0][..., None]                 # (B,H,1)
+    fk = jnp.exp(bk - c_new).astype(jnp.float32)[:, 0]           # (B,H,D)
+    vt = jnp.swapaxes(v.astype(jnp.float32), 1, 2)[:, :, 0]      # (B,H,Dv)
+    # outer product Phi(k) v^T: (B,H,D,1)*(B,H,1,Dv) -> (B,H,D,Dv)
+    s = state.s * r[..., None] + fk[..., None] * vt[:, :, None, :]
+    z = state.z * r + fk
+    aq = q * _bcast(alpha, q)
+    fq = jnp.exp(aq - _stab_const(aq, (1, 3))).astype(jnp.float32)[:, 0]  # (B,H,D)
+    num = jnp.einsum("bhd,bhdv->bhv", fq, s)
+    den = jnp.einsum("bhd,bhd->bh", fq, z)
+    out = (num / (den[..., None] + EPS)).astype(v.dtype)[:, None]  # (B,1,H,Dv)
+    return out, LLNState(s=s, z=z, c_k=c_new)

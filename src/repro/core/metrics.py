@@ -1,0 +1,104 @@
+"""Attention-concentration instruments (paper §3.2).
+
+* entropy (eq. 7) — *biased* concentration; monotone increasing in the
+  temperature (Thm. 3.2);
+* spectral gap gamma = 1 - |lambda_2| — *unbiased* concentration (Thm. 3.3:
+  lambda_2^2 equals the variance along the major principal component of the
+  centered attention matrix);
+* temperatures tau_sm (eq. 5) and tau_lln (eq. 11).
+
+These are analysis tools (paper Figs. 1-2): they operate on explicit (N, N)
+attention matrices and are intended for small-N probes, not the training path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .moment_matching import DEFAULT_A, DEFAULT_B
+
+
+def row_entropy(p: jnp.ndarray) -> jnp.ndarray:
+    """Mean base-2 row entropy of a stochastic matrix (eq. 7).  (..., N, N)."""
+    logp = jnp.log2(jnp.clip(p, 1e-30, None))
+    return -jnp.mean(jnp.sum(p * logp, axis=-1), axis=-1)
+
+
+def spectral_gap(p: np.ndarray) -> float:
+    """gamma = 1 - |lambda_2| of a right-stochastic matrix (numpy, analysis)."""
+    ev = np.linalg.eigvals(np.asarray(p, np.float64))
+    ev = np.sort(np.abs(ev))[::-1]
+    lam2 = ev[1] if ev.size > 1 else 0.0
+    return float(1.0 - lam2)
+
+
+def variance_along_pc(p: np.ndarray) -> float:
+    """sigma^2 along the major principal component of the centered matrix
+    (Thm. 3.3 asserts this equals lambda_2^2)."""
+    p = np.asarray(p, np.float64)
+    n = p.shape[-1]
+    mu = p.mean(axis=0, keepdims=True)
+    pbar = p - np.ones((n, 1)) @ mu
+    cov = pbar.T @ pbar
+    return float(np.max(np.linalg.eigvalsh(cov)))
+
+
+def temperature_sm(sigma_q: float, sigma_k: float, c_cross: float = 0.0) -> float:
+    """tau_sm = 1 / sqrt(sigma_q^2 sigma_k^2 + C_cross)   (eq. 5)."""
+    return float(1.0 / np.sqrt(sigma_q ** 2 * sigma_k ** 2 + c_cross))
+
+
+def temperature_lln(alpha: float, beta: float, sigma_q: float, sigma_k: float,
+                    a: float = DEFAULT_A, b: float = DEFAULT_B) -> float:
+    """tau_lln = 1 / sqrt(a (alpha^2 s_q^2 + beta^2 s_k^2) + b)   (eq. 11)."""
+    s2 = a * (alpha ** 2 * sigma_q ** 2 + beta ** 2 * sigma_k ** 2) + b
+    return float(1.0 / np.sqrt(max(s2, 1e-12)))
+
+
+def attention_log_moments(p: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(mean, var) of ln P — the log-normal parameters (Prop. 3.1 / 4.1)."""
+    logp = jnp.log(jnp.clip(p, 1e-30, None))
+    return jnp.mean(logp), jnp.var(logp)
+
+
+def lognormality_score(p: jnp.ndarray, num_q: int = 256) -> float:
+    """Quantile-quantile normality check of ln P: Pearson correlation between
+    empirical quantiles of ln P and Gaussian quantiles (1.0 = log-normal)."""
+    logp = np.asarray(jnp.log(jnp.clip(p, 1e-30, None))).ravel()
+    probs = (np.arange(1, num_q + 1) - 0.5) / num_q
+    emp = np.quantile(logp, probs)
+    theo = _norm_ppf(probs)
+    return float(np.corrcoef(emp, theo)[0, 1])
+
+
+def _norm_ppf(p: np.ndarray) -> np.ndarray:
+    """Acklam's inverse-normal-CDF approximation (no scipy dependency)."""
+    a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00]
+    p = np.asarray(p, np.float64)
+    out = np.empty_like(p)
+    plow, phigh = 0.02425, 1 - 0.02425
+    lo = p < plow
+    hi = p > phigh
+    mid = ~(lo | hi)
+    if lo.any():
+        ql = np.sqrt(-2 * np.log(p[lo]))
+        out[lo] = (((((c[0] * ql + c[1]) * ql + c[2]) * ql + c[3]) * ql + c[4]) * ql + c[5]) / \
+                  ((((d[0] * ql + d[1]) * ql + d[2]) * ql + d[3]) * ql + 1)
+    if hi.any():
+        qh = np.sqrt(-2 * np.log(1 - p[hi]))
+        out[hi] = -(((((c[0] * qh + c[1]) * qh + c[2]) * qh + c[3]) * qh + c[4]) * qh + c[5]) / \
+                   ((((d[0] * qh + d[1]) * qh + d[2]) * qh + d[3]) * qh + 1)
+    if mid.any():
+        qm = p[mid] - 0.5
+        r = qm * qm
+        out[mid] = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * qm / \
+                   (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+    return out

@@ -1,0 +1,32 @@
+"""fp32-accumulating einsum that is both TPU-shaped and CPU-runnable.
+
+On TPU (the target), bf16 x bf16 -> f32 dots run natively on the MXU via
+``preferred_element_type`` — upcasting operands first would materialize
+fp32 copies of whole activation streams (measured: 36 GB/layer of gathers,
+see EXPERIMENTS.md §Perf cell 2).  The CPU backend, however, cannot
+*execute* several of those mixed dots (``DotThunk: BF16 x BF16 = F32``).
+
+Resolution: the AOT dry-run (compile-only) keeps the TPU-shaped program —
+``repro.launch.dryrun`` sets REPRO_AOT_ONLY=1 — while CPU *execution*
+paths (tests, smoke training, examples) upcast operands instead.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def _cpu_exec() -> bool:
+    return (jax.default_backend() == "cpu"
+            and not os.environ.get("REPRO_AOT_ONLY"))
+
+
+def einsum_f32(subscripts: str, *operands) -> jnp.ndarray:
+    """einsum with fp32 accumulation; see module docstring."""
+    if _cpu_exec():
+        return jnp.einsum(subscripts,
+                          *(o.astype(jnp.float32) for o in operands))
+    return jnp.einsum(subscripts, *operands,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,95 @@
+"""Sharded, prefetched host data pipeline.
+
+Production behaviours implemented (and unit-tested):
+* per-host sharding: each process draws only its slice of the global batch
+  (deterministic in (seed, step, host) — restart-safe, no data duplication);
+* double-buffered background prefetch so a slow host's input pipeline never
+  stalls the collective (straggler mitigation at the input layer);
+* device placement with the train step's input shardings (pjit-ready
+  global arrays via ``jax.make_array_from_process_local_data``).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class HostShardedSource:
+    """Wrap a (seed, step)-deterministic generator factory into a per-host
+    sharded source: global batch B -> this host's B/num_hosts rows."""
+
+    def __init__(self, make_gen: Callable[[int, int], Iterator[dict]],
+                 global_batch: int, *, process_index: Optional[int] = None,
+                 process_count: Optional[int] = None, start_step: int = 0):
+        self.pi = jax.process_index() if process_index is None else process_index
+        self.pc = jax.process_count() if process_count is None else process_count
+        assert global_batch % self.pc == 0, "global batch must split over hosts"
+        self.local_batch = global_batch // self.pc
+        self.gen = make_gen(self.local_batch, start_step * self.pc + self.pi)
+        self.step = start_step
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        batch = next(self.gen)
+        self.step += 1
+        return batch
+
+
+class Prefetcher:
+    """Background-thread double buffering (depth configurable)."""
+
+    def __init__(self, source: Iterator[dict], depth: int = 2,
+                 place: Optional[Callable[[dict], dict]] = None):
+        self.source = source
+        self.place = place or (lambda x: x)
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _worker(self):
+        try:
+            for item in self.source:
+                if self._stop.is_set():
+                    return
+                self.q.put(self.place(item))
+        except Exception as e:  # surface errors to the consumer
+            self.q.put(e)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def device_placer(mesh, batch_specs):
+    """Returns a callable placing a host-local numpy batch onto the mesh as
+    global arrays with the given PartitionSpecs (dict key -> spec)."""
+    from jax.sharding import NamedSharding
+
+    def place(batch: dict) -> dict:
+        out = {}
+        for k, v in batch.items():
+            sharding = NamedSharding(mesh, batch_specs[k])
+            out[k] = jax.make_array_from_process_local_data(
+                sharding, np.asarray(v))
+        return out
+    return place

@@ -1,0 +1,53 @@
+"""Elastic scaling: mesh reconstruction after node loss + state resharding.
+
+On a real fleet the launcher detects failed hosts (heartbeat timeout),
+restarts the job on the surviving set, and this module picks the largest
+runnable mesh and reshards the checkpointed state onto it.  In this
+container the same code paths are exercised by tests with different
+``xla_force_host_platform_device_count`` values in subprocesses.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from .sharding import param_shardings
+
+
+def viable_mesh_shapes(n_devices: int,
+                       prefer_model: int = 16) -> list[tuple[int, int]]:
+    """(data, model) candidates for a degraded device count, largest first.
+
+    Keeps the model axis as close to ``prefer_model`` as divisibility
+    allows — TP degree changes force weight-gather layout changes, so we
+    shrink the data axis first (the cheap direction).
+    """
+    shapes = []
+    model = prefer_model
+    while model >= 1:
+        if n_devices % model == 0:
+            shapes.append((n_devices // model, model))
+        model //= 2
+    return shapes
+
+
+def make_degraded_mesh(devices: Optional[Sequence] = None,
+                       prefer_model: int = 16) -> Mesh:
+    devices = list(jax.devices()) if devices is None else list(devices)
+    # Largest power-of-two prefix: collectives want regular topology.
+    n = 1
+    while n * 2 <= len(devices):
+        n *= 2
+    data, model = viable_mesh_shapes(n, prefer_model)[0]
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
+
+
+def reshard_state(state, mesh: Mesh):
+    """Re-place a (host-restored or differently-sharded) state pytree onto a
+    new mesh using the standard param rules."""
+    shardings = param_shardings(state, mesh)
+    return jax.tree_util.tree_map(jax.device_put, state, shardings)

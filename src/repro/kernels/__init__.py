@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical attention paths.
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers
+with custom_vjp and interpret-mode dispatch for the CPU container.
+"""
+from .ops import (block_diag_attention, lln_attention,
+                  lln_diag_attention, ssd_scan)
+
+__all__ = ["lln_attention", "block_diag_attention",
+           "lln_diag_attention", "ssd_scan"]

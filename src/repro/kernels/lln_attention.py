@@ -1,0 +1,237 @@
+"""Pallas TPU kernels for Linear Log-Normal attention (paper eq. 8).
+
+TPU adaptation (vs. the paper's PyTorch einsum implementation):
+* the feature map exp(.) is fused into the matmul pipeline — Phi(Q), Phi(K)
+  (each N x D in HBM) are never materialized;
+* the running state S (D x DV) and normalizer z (1 x D) live in fp32 VMEM
+  scratch across sequence blocks (grid minor dimension is sequential on TPU);
+* block sizes are MXU-aligned (multiples of 128 on the lane dim; D = head_dim
+  is 64/128 for all assigned archs);
+* GQA without materializing repeated KV: query row ``bh`` reads kv row
+  ``bh // r`` via BlockSpec index maps.
+
+Inputs are pre-scaled and pre-stabilized by ops.py:  qs = alpha*q - c_q,
+ks = beta*k - c_k  with per-(batch,head) global constants that cancel exactly
+in the normalized form (see core/lln.py docstring).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Causal LLN: chunked scan with VMEM-resident state.
+# ---------------------------------------------------------------------------
+
+def _lln_causal_kernel(qs_ref, ks_ref, v_ref, o_ref, s_acc, z_acc, *, blk):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        z_acc[...] = jnp.zeros_like(z_acc)
+
+    fq = jnp.exp(qs_ref[0].astype(jnp.float32))          # (blk, d)
+    fk = jnp.exp(ks_ref[0].astype(jnp.float32))          # (blk, d)
+    vv = v_ref[0].astype(jnp.float32)                    # (blk, dv)
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    causal = (row >= col).astype(jnp.float32)
+
+    scores = jax.lax.dot_general(fq, fk, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * causal
+    intra = jnp.dot(scores, vv, preferred_element_type=jnp.float32)
+    intra_z = jnp.sum(scores, axis=-1)
+
+    inter = jnp.dot(fq, s_acc[...], preferred_element_type=jnp.float32)
+    inter_z = jnp.dot(fq, z_acc[...].reshape(-1, 1),
+                      preferred_element_type=jnp.float32)[:, 0]
+
+    den = intra_z + inter_z + EPS
+    o_ref[0] = ((intra + inter) / den[:, None]).astype(o_ref.dtype)
+
+    s_acc[...] += jax.lax.dot_general(fk, vv, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    z_acc[...] += jnp.sum(fk, axis=0, keepdims=True)
+
+
+def lln_causal_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
+                      r: int = 1, blk: int = 256,
+                      interpret: bool = False) -> jnp.ndarray:
+    """qs: (BH, N, D) pre-scaled; ks/v: (BG, N, D[v]); N % blk == 0."""
+    bh, n, d = qs.shape
+    dv = v.shape[-1]
+    nb = n // blk
+    grid = (bh, nb)
+    return pl.pallas_call(
+        functools.partial(_lln_causal_kernel, blk=blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, blk, d), lambda h, j, r=r: (h // r, j, 0)),
+            pl.BlockSpec((1, blk, dv), lambda h, j, r=r: (h // r, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dv), v.dtype),
+        scratch_shapes=[pltpu.VMEM((d, dv), jnp.float32),
+                        pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(qs, ks, v)
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional LLN: reduce pass (S, z) + apply pass.
+# ---------------------------------------------------------------------------
+
+def _lln_reduce_kernel(ks_ref, v_ref, s_ref, z_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    fk = jnp.exp(ks_ref[0].astype(jnp.float32))
+    vv = v_ref[0].astype(jnp.float32)
+    s_ref[0] += jax.lax.dot_general(fk, vv, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    z_ref[0] += jnp.sum(fk, axis=0, keepdims=True)
+
+
+def _lln_apply_kernel(qs_ref, s_ref, z_ref, o_ref):
+    fq = jnp.exp(qs_ref[0].astype(jnp.float32))
+    num = jnp.dot(fq, s_ref[0], preferred_element_type=jnp.float32)
+    den = jnp.dot(fq, z_ref[0].reshape(-1, 1),
+                  preferred_element_type=jnp.float32)[:, 0]
+    o_ref[0] = (num / (den[:, None] + EPS)).astype(o_ref.dtype)
+
+
+def lln_bidir_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
+                     r: int = 1, blk: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """qs: (BH, N, D); ks/v: (BG, N, D[v]); N % blk == 0."""
+    bh, n, d = qs.shape
+    bg = ks.shape[0]
+    dv = v.shape[-1]
+    nb = n // blk
+    s, z = pl.pallas_call(
+        _lln_reduce_kernel,
+        grid=(bg, nb),
+        in_specs=[
+            pl.BlockSpec((1, blk, d), lambda g, j: (g, j, 0)),
+            pl.BlockSpec((1, blk, dv), lambda g, j: (g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, dv), lambda g, j: (g, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda g, j: (g, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bg, d, dv), jnp.float32),
+                   jax.ShapeDtypeStruct((bg, 1, d), jnp.float32)],
+        interpret=interpret,
+    )(ks, v)
+    return pl.pallas_call(
+        _lln_apply_kernel,
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, blk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, d, dv), lambda h, j, r=r: (h // r, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda h, j, r=r: (h // r, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dv), v.dtype),
+        interpret=interpret,
+    )(qs, s, z)
+
+
+# ---------------------------------------------------------------------------
+# Fused LLN + block-diagonal softmax (the §4.2 hybrid in a single pass).
+# Beyond-paper optimization: shares the v (and q/k) block loads between the
+# two components and writes the averaged output once.
+# ---------------------------------------------------------------------------
+
+def _lln_diag_fused_kernel(qs_ref, ks_ref, q_ref, k_ref, v_ref, o_ref,
+                           s_acc, z_acc, *, blk, scale, causal):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        z_acc[...] = jnp.zeros_like(z_acc)
+
+    fq = jnp.exp(qs_ref[0].astype(jnp.float32))
+    fk = jnp.exp(ks_ref[0].astype(jnp.float32))
+    vv = v_ref[0].astype(jnp.float32)
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    tril = row >= col
+
+    # --- LLN component (causal chunked or full-block bidir handled by ops) --
+    scores = jax.lax.dot_general(fq, fk, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    if causal:
+        scores = scores * tril.astype(jnp.float32)
+    intra = jnp.dot(scores, vv, preferred_element_type=jnp.float32)
+    intra_z = jnp.sum(scores, axis=-1)
+    inter = jnp.dot(fq, s_acc[...], preferred_element_type=jnp.float32)
+    inter_z = jnp.dot(fq, z_acc[...].reshape(-1, 1),
+                      preferred_element_type=jnp.float32)[:, 0]
+    lln_out = (intra + inter) / (intra_z + inter_z + EPS)[:, None]
+    s_acc[...] += jax.lax.dot_general(fk, vv, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    z_acc[...] += jnp.sum(fk, axis=0, keepdims=True)
+
+    # --- block-diagonal softmax component ----------------------------------
+    qq = q_ref[0].astype(jnp.float32) * scale
+    kk = k_ref[0].astype(jnp.float32)
+    ds = jax.lax.dot_general(qq, kk, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    if causal:
+        ds = jnp.where(tril, ds, -1e30)
+    ds = ds - jnp.max(ds, axis=-1, keepdims=True)
+    p = jnp.exp(ds)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    diag_out = jnp.dot(p, vv, preferred_element_type=jnp.float32)
+
+    o_ref[0] = (0.5 * (lln_out + diag_out)).astype(o_ref.dtype)
+
+
+def lln_diag_fused_pallas(qs, ks, q, k, v, *, r: int = 1, blk: int = 256,
+                          causal: bool = True, scale: float | None = None,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Fused §4.2 hybrid.  Diag block size == LLN chunk size == blk.
+
+    Causal only: the bidirectional LLN needs the full-sequence state, which
+    the single-pass fusion cannot provide (use lln_bidir_pallas + block_diag).
+    """
+    if not causal:
+        raise ValueError("fused lln+diag kernel is causal-only")
+    bh, n, d = qs.shape
+    dv = v.shape[-1]
+    nb = n // blk
+    scale = (d ** -0.5) if scale is None else scale
+    return pl.pallas_call(
+        functools.partial(_lln_diag_fused_kernel, blk=blk, scale=scale,
+                          causal=causal),
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, blk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, blk, d), lambda h, j, r=r: (h // r, j, 0)),
+            pl.BlockSpec((1, blk, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, blk, d), lambda h, j, r=r: (h // r, j, 0)),
+            pl.BlockSpec((1, blk, dv), lambda h, j, r=r: (h // r, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dv), v.dtype),
+        scratch_shapes=[pltpu.VMEM((d, dv), jnp.float32),
+                        pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(qs, ks, q, k, v)

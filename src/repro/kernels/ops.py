@@ -1,0 +1,265 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+* layout:  (B, N, H, D) model convention  <->  (B*H, N, D) kernel convention;
+* LLN pre-scaling + stabilization:  qs = alpha*q - c_q, ks = beta*k - c_k
+  (global per batch*head constants — exactly invariant, see core/lln.py);
+* GQA ratio r = H // G threaded to the kernels' BlockSpec index maps
+  (repeated KV is never materialized);
+* interpret-mode dispatch (CPU container -> interpret=True; TPU -> compiled);
+* custom_vjp: kernel forward, chunked-jnp backward (same math, linear
+  complexity, robust autodiff).
+
+alpha/beta are calibration constants (moment matching) — non-differentiable
+by construction; gradients w.r.t. them are zero.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lln as core_lln
+from repro.core.diag import block_diag_attn as core_diag
+from .block_diag import block_diag_pallas
+from .lln_attention import (lln_bidir_pallas, lln_causal_pallas,
+                            lln_diag_fused_pallas)
+from .ssd import ssd_pallas
+
+
+def _interpret(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    return jax.default_backend() == "cpu"
+
+
+def _to_kernel(t: jnp.ndarray) -> jnp.ndarray:
+    """(B, N, H, D) -> (B*H, N, D)."""
+    b, n, h, d = t.shape
+    return t.transpose(0, 2, 1, 3).reshape(b * h, n, d)
+
+
+def _from_kernel(t: jnp.ndarray, b: int) -> jnp.ndarray:
+    bh, n, d = t.shape
+    return t.reshape(b, bh // b, n, d).transpose(0, 2, 1, 3)
+
+
+def _scaled_stabilized(q, k, alpha, beta):
+    """Return (qs, ks) in kernel layout, fp32-safe exponents."""
+    alpha = jax.lax.stop_gradient(jnp.asarray(alpha, jnp.float32))
+    beta = jax.lax.stop_gradient(jnp.asarray(beta, jnp.float32))
+    if alpha.ndim == 0:
+        alpha = jnp.broadcast_to(alpha, (q.shape[2],))
+    if beta.ndim == 0:
+        beta = jnp.broadcast_to(beta, (k.shape[2],))
+    aq = q.astype(jnp.float32) * alpha[None, None, :, None]
+    bk = k.astype(jnp.float32) * beta[None, None, :, None]
+    c_q = jax.lax.stop_gradient(jnp.max(aq, axis=(1, 3), keepdims=True))
+    c_k = jax.lax.stop_gradient(jnp.max(bk, axis=(1, 3), keepdims=True))
+    return _to_kernel(aq - c_q), _to_kernel(bk - c_k)
+
+
+# ---------------------------------------------------------------------------
+# LLN attention.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def lln_attention(q, k, v, alpha, beta, causal: bool = True,
+                  chunk: int = 256, interpret: Optional[bool] = None):
+    """LLN attention via Pallas.  q: (B,N,H,D); k/v: (B,N,G,D[v])."""
+    return _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret)
+
+
+def _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret):
+    b, n, h, _ = q.shape
+    g = k.shape[2]
+    if n % chunk:
+        return _lln_ref(q, k, v, alpha, beta, causal, chunk)
+    qs, ks = _scaled_stabilized(q, k, alpha, beta)
+    vk = _to_kernel(v)
+    fn = lln_causal_pallas if causal else lln_bidir_pallas
+    out = fn(qs, ks, vk, r=h // g, blk=chunk, interpret=_interpret(interpret))
+    return _from_kernel(out, b)
+
+
+def _lln_ref(q, k, v, alpha, beta, causal, chunk):
+    h = q.shape[2]
+    g = k.shape[2]
+    kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+    vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+    beta = jnp.asarray(beta, jnp.float32)
+    if beta.ndim and beta.shape[0] == g and g != h:
+        beta = jnp.repeat(beta, h // g)
+    if causal:
+        return core_lln.lln_causal(q, kf, vf, alpha, beta, chunk=chunk)
+    return core_lln.lln_bidir(q, kf, vf, alpha, beta)
+
+
+def _lln_vjp_fwd(q, k, v, alpha, beta, causal, chunk, interpret):
+    out = _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret)
+    return out, (q, k, v, alpha, beta)
+
+
+def _lln_vjp_bwd(causal, chunk, interpret, res, g_out):
+    q, k, v, alpha, beta = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _lln_ref(q_, k_, v_, alpha, beta, causal, chunk),
+        q, k, v)
+    dq, dk, dv = vjp(g_out)
+    zero_a = jnp.zeros_like(jnp.asarray(alpha, jnp.float32))
+    zero_b = jnp.zeros_like(jnp.asarray(beta, jnp.float32))
+    return dq, dk, dv, zero_a, zero_b
+
+
+lln_attention.defvjp(_lln_vjp_fwd, _lln_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal softmax attention.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def block_diag_attention(q, k, v, block: int = 256, causal: bool = False,
+                         interpret: Optional[bool] = None):
+    """Block-diagonal softmax attention via Pallas. q: (B,N,H,D)."""
+    return _diag_fwd_impl(q, k, v, block, causal, interpret)
+
+
+def _diag_fwd_impl(q, k, v, block, causal, interpret):
+    b, n, h, _ = q.shape
+    g = k.shape[2]
+    if n % block:
+        return _diag_ref(q, k, v, block, causal)
+    out = block_diag_pallas(_to_kernel(q), _to_kernel(k), _to_kernel(v),
+                            r=h // g, blk=block, causal=causal,
+                            interpret=_interpret(interpret))
+    return _from_kernel(out, b)
+
+
+def _diag_ref(q, k, v, block, causal):
+    h = q.shape[2]
+    g = k.shape[2]
+    kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+    vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+    return core_diag(q, kf, vf, block=block, causal=causal)
+
+
+def _diag_vjp_fwd(q, k, v, block, causal, interpret):
+    return _diag_fwd_impl(q, k, v, block, causal, interpret), (q, k, v)
+
+
+def _diag_vjp_bwd(block, causal, interpret, res, g_out):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _diag_ref(q_, k_, v_, block, causal),
+                     q, k, v)
+    return vjp(g_out)
+
+
+block_diag_attention.defvjp(_diag_vjp_fwd, _diag_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused LLN + Diag (causal): single-pass hybrid, shared block loads.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def lln_diag_attention(q, k, v, alpha, beta, causal: bool = True,
+                       block: int = 256, interpret: Optional[bool] = None):
+    """0.5 * (LLN + block-diag softmax); fused kernel when causal."""
+    return _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret)
+
+
+def _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret):
+    b, n, h, _ = q.shape
+    g = k.shape[2]
+    if not causal or n % block:
+        lln = _lln_fwd_impl(q, k, v, alpha, beta, causal, block, interpret)
+        diag = _diag_fwd_impl(q, k, v, block, causal, interpret)
+        return (0.5 * (lln.astype(jnp.float32) + diag.astype(jnp.float32))
+                ).astype(v.dtype)
+    qs, ks = _scaled_stabilized(q, k, alpha, beta)
+    out = lln_diag_fused_pallas(qs, ks, _to_kernel(q), _to_kernel(k),
+                                _to_kernel(v), r=h // g, blk=block,
+                                causal=True, interpret=_interpret(interpret))
+    return _from_kernel(out, b)
+
+
+def _lln_diag_ref(q, k, v, alpha, beta, causal, block):
+    lln = _lln_ref(q, k, v, alpha, beta, causal, block)
+    diag = _diag_ref(q, k, v, block, causal)
+    return (0.5 * (lln.astype(jnp.float32) + diag.astype(jnp.float32))
+            ).astype(v.dtype)
+
+
+def _lln_diag_vjp_fwd(q, k, v, alpha, beta, causal, block, interpret):
+    out = _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret)
+    return out, (q, k, v, alpha, beta)
+
+
+def _lln_diag_vjp_bwd(causal, block, interpret, res, g_out):
+    q, k, v, alpha, beta = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _lln_diag_ref(q_, k_, v_, alpha, beta, causal,
+                                         block), q, k, v)
+    dq, dk, dv = vjp(g_out)
+    zero_a = jnp.zeros_like(jnp.asarray(alpha, jnp.float32))
+    zero_b = jnp.zeros_like(jnp.asarray(beta, jnp.float32))
+    return dq, dk, dv, zero_a, zero_b
+
+
+lln_diag_attention.defvjp(_lln_diag_vjp_fwd, _lln_diag_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD chunked scan.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def ssd_scan(xbar, b_in, c_in, log_a, chunk: int = 256,
+             interpret: Optional[bool] = None):
+    """SSD via Pallas.  xbar: (B,L,H,P); b_in/c_in: (B,L,G,S);
+    log_a: (B,L,H).  Returns y: (B,L,H,P) (no final state — training path;
+    prefill uses the jnp ssd_chunked which also returns the state)."""
+    return _ssd_fwd_impl(xbar, b_in, c_in, log_a, chunk, interpret)
+
+
+def _ssd_fwd_impl(xbar, b_in, c_in, log_a, chunk, interpret):
+    b, l, h, p_dim = xbar.shape
+    g = b_in.shape[2]
+    if l % chunk:
+        return _ssd_ref(xbar, b_in, c_in, log_a, chunk)
+    xk = _to_kernel(xbar)
+    bk = _to_kernel(b_in)
+    ck = _to_kernel(c_in)
+    lk = log_a.transpose(0, 2, 1).reshape(b * h, l)
+    out = ssd_pallas(lk, xk, bk, ck, r=h // g, blk=chunk,
+                     interpret=_interpret(interpret))
+    return _from_kernel(out, b)
+
+
+def _ssd_ref(xbar, b_in, c_in, log_a, chunk):
+    from repro.models.ssm import ssd_chunked
+    h, g = xbar.shape[2], b_in.shape[2]
+    rep = h // g
+    bf = jnp.repeat(b_in, rep, axis=2) if rep > 1 else b_in
+    cf = jnp.repeat(c_in, rep, axis=2) if rep > 1 else c_in
+    y, _ = ssd_chunked(xbar, bf, cf, log_a, chunk=chunk)
+    return y.astype(xbar.dtype)
+
+
+def _ssd_vjp_fwd(xbar, b_in, c_in, log_a, chunk, interpret):
+    return _ssd_fwd_impl(xbar, b_in, c_in, log_a, chunk, interpret), \
+        (xbar, b_in, c_in, log_a)
+
+
+def _ssd_vjp_bwd(chunk, interpret, res, g_out):
+    xbar, b_in, c_in, log_a = res
+    _, vjp = jax.vjp(
+        lambda x, b, c, a: _ssd_ref(x, b, c, a, chunk),
+        xbar, b_in, c_in, log_a)
+    return vjp(g_out.astype(jnp.float32))
+
+
+ssd_scan.defvjp(_ssd_vjp_fwd, _ssd_vjp_bwd)

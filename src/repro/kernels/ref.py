@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Kernel-native layout: q/k: (BH, N, D) (already alpha/beta-scaled and
+stabilized for the LLN kernels), v: (BH, N, DV).  GQA is expressed by
+``r = H // G``: k/v carry (B*G, N, D) and query row ``bh`` reads kv row
+``bh // r``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+NEG_INF = -1e30
+
+
+def _expand_kv(t: jnp.ndarray, r: int) -> jnp.ndarray:
+    return t if r == 1 else jnp.repeat(t, r, axis=0)
+
+
+def lln_bidir_ref(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray,
+                  r: int = 1) -> jnp.ndarray:
+    """Bidirectional LLN: out_i = e^{qs_i} S / (e^{qs_i} . z)."""
+    fq = jnp.exp(qs.astype(jnp.float32))
+    fk = jnp.exp(ks.astype(jnp.float32))
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("gnd,gnv->gdv", fk, vf)
+    z = jnp.sum(fk, axis=1)
+    s = _expand_kv(s, r)
+    z = _expand_kv(z, r)
+    num = jnp.einsum("hnd,hdv->hnv", fq, s)
+    den = jnp.einsum("hnd,hd->hn", fq, z)
+    return (num / (den[..., None] + EPS)).astype(v.dtype)
+
+
+def lln_causal_ref(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray,
+                   r: int = 1) -> jnp.ndarray:
+    """Causal LLN, quadratic-form oracle: P = tril(e^{qs} e^{ks}^T) row-norm."""
+    fq = jnp.exp(qs.astype(jnp.float32))
+    fk = jnp.exp(_expand_kv(ks, r).astype(jnp.float32))
+    vf = _expand_kv(v, r).astype(jnp.float32)
+    n = qs.shape[1]
+    scores = jnp.einsum("hid,hjd->hij", fq, fk)
+    scores = scores * jnp.tril(jnp.ones((n, n), jnp.float32))
+    out = jnp.einsum("hij,hjv->hiv", scores, vf)
+    den = jnp.sum(scores, axis=-1)
+    return (out / (den[..., None] + EPS)).astype(v.dtype)
+
+
+def block_diag_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   block: int, causal: bool, r: int = 1,
+                   scale: float | None = None) -> jnp.ndarray:
+    """Block-diagonal softmax attention oracle (N divisible by block)."""
+    k = _expand_kv(k, r)
+    v = _expand_kv(v, r)
+    bh, n, d = q.shape
+    dv = v.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    nb = n // block
+    qb = q.reshape(bh, nb, block, d).astype(jnp.float32) * scale
+    kb = k.reshape(bh, nb, block, d).astype(jnp.float32)
+    vb = v.reshape(bh, nb, block, dv).astype(jnp.float32)
+    s = jnp.einsum("hgid,hgjd->hgij", qb, kb)
+    if causal:
+        tri = jnp.tril(jnp.ones((block, block), jnp.bool_))
+        s = jnp.where(tri[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgij,hgjv->hgiv", p, vb)
+    return out.reshape(bh, n, dv).astype(v.dtype)
+
+
+def lln_diag_fused_ref(qs: jnp.ndarray, ks: jnp.ndarray, q: jnp.ndarray,
+                       k: jnp.ndarray, v: jnp.ndarray, *, block: int,
+                       causal: bool, r: int = 1,
+                       scale: float | None = None) -> jnp.ndarray:
+    """Oracle for the fused LLN+Diag kernel: 0.5*(LLN + block-diag softmax).
+
+    qs/ks are the stabilized LLN-scaled tensors; q/k the raw ones for the
+    softmax diagonal.
+    """
+    lln = (lln_causal_ref(qs, ks, v, r) if causal
+           else lln_bidir_ref(qs, ks, v, r))
+    diag = block_diag_ref(q, k, v, block=block, causal=causal, r=r,
+                          scale=scale)
+    return (0.5 * (lln.astype(jnp.float32) + diag.astype(jnp.float32))
+            ).astype(v.dtype)

@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+os.environ["REPRO_AOT_ONLY"] = "1"   # compile-only: keep TPU-shaped bf16 dots
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, recording memory/cost analysis and the collective schedule.
+
+MUST be run as its own process (the device-count override binds at jax
+init).  --all spawns one subprocess per cell for isolation.
+
+Examples:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --arch yi-9b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device output bytes of every collective op in the compiled
+    (SPMD-partitioned, per-device-shapes) module."""
+    out = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        for op in _COLLECTIVES:
+            # match '<lhs> = <shape(s)> op-name(' — avoid -start/-done splits
+            m = re.search(rf"=\s+(.+?)\s+{op}(-start)?\(", line)
+            if m:
+                b = _shape_bytes(m.group(1))
+                rec = out.setdefault(op, {"count": 0, "bytes": 0})
+                rec["count"] += 1
+                rec["bytes"] += b
+                break
+    return out
+
+
+def parse_overrides(s: str) -> dict:
+    """'n_layers=2,scan_unroll=1,remat=none' -> typed override dict."""
+    out = {}
+    if not s:
+        return out
+    for item in s.split(","):
+        k, v = item.split("=")
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             attn_impl: str = "auto", overrides: dict | None = None) -> dict:
+    import jax
+    from repro.configs import SHAPES_BY_NAME, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_serve_setup, make_train_setup
+
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = get_config(arch)
+    impl = attn_impl
+    if impl == "auto":
+        # long_500k needs sub-quadratic attention: attention archs run it in
+        # the paper's lln_diag mode; SSM archs natively (DESIGN.md §4).
+        if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+            impl = "lln_diag"
+        else:
+            impl = cfg.attn_impl
+    cfg = cfg.replace(attn_impl=impl, **(overrides or {}))
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "kind": shape.kind, "attn_impl": impl,
+              "overrides": overrides or {},
+              "devices": int(mesh.devices.size)}
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            setup = make_train_setup(cfg, shape, mesh, multi_pod=multi_pod)
+            lowered = setup.step_fn.lower(setup.state_struct, setup.batch)
+        elif shape.kind == "prefill":
+            setup = make_serve_setup(cfg, shape, mesh, multi_pod=multi_pod)
+            lowered = setup.prefill_fn.lower(setup.params_struct, setup.batch)
+        else:  # decode
+            setup = make_serve_setup(cfg, shape, mesh, multi_pod=multi_pod)
+            cache_in = jax.tree_util.tree_map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=sh),
+                setup.cache_struct, setup.cache_shardings)
+            lowered = setup.decode_fn.lower(setup.params_struct, cache_in,
+                                            setup.token_struct,
+                                            setup.pos_struct)
+        result["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        ca = compiled.cost_analysis()
+        result["flops"] = float(ca.get("flops", -1))
+        result["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+    except Exception as e:
+        result["cost_analysis_error"] = str(e)
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                result[attr] = int(getattr(ma, attr))
+    except Exception as e:
+        result["memory_analysis_error"] = str(e)
+    try:
+        result["collectives"] = parse_collectives(compiled.as_text())
+    except Exception as e:
+        result["collectives_error"] = str(e)
+    result["ok"] = True
+    return result
+
+
+def _out_path(out_dir, arch, shape, mesh_tag):
+    os.makedirs(out_dir, exist_ok=True)
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh_tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "softmax", "lln", "lln_diag"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", default="",
+                    help="cfg overrides, e.g. n_layers=2,scan_unroll=True")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output filename (probe runs)")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs.registry import ASSIGNED_ARCHS
+        shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+        meshes = [False, True] if args.both_meshes else [False]
+        failures = []
+        for arch in ASSIGNED_ARCHS:
+            for shape in shapes:
+                for mp in meshes:
+                    tag = "2x16x16" if mp else "16x16"
+                    path = _out_path(args.out, arch, shape, tag)
+                    if args.skip_existing and os.path.exists(path):
+                        print(f"[skip] {path}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--out", args.out,
+                           "--attn-impl", args.attn_impl]
+                    if args.override:
+                        cmd += ["--override", args.override]
+                    if args.tag:
+                        cmd += ["--tag", args.tag]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    print(f"[run ] {arch} {shape} {tag}", flush=True)
+                    rc = subprocess.call(cmd)
+                    if rc != 0:
+                        failures.append((arch, shape, tag))
+        print(f"DONE; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    tag = "2x16x16" if args.multi_pod else "16x16"
+    if args.tag:
+        tag = tag + "__" + args.tag
+    path = _out_path(args.out, args.arch, args.shape, tag)
+    if args.skip_existing and os.path.exists(path):
+        print(f"[skip] {path}")
+        sys.exit(0)
+    try:
+        result = run_cell(args.arch, args.shape, args.multi_pod,
+                          args.attn_impl, parse_overrides(args.override))
+    except Exception as e:
+        result = {"arch": args.arch, "shape": args.shape, "mesh": tag,
+                  "ok": False, "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps({k: v for k, v in result.items()
+                      if k not in ("traceback",)}, indent=2))
+    sys.exit(0 if result.get("ok") else 1)
+
+
+if __name__ == "__main__":
+    main()

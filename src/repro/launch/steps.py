@@ -1,0 +1,247 @@
+"""pjit step builders: train_step / prefill_step / decode_step per arch.
+
+Everything AOT-friendly: the builders return (step_fn, in_struct, shardings)
+so launchers and the dry-run lower against ShapeDtypeStructs without
+allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models import Model, build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation).
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    """Training/prefill batch ShapeDtypeStructs with shardings attached."""
+    b, n = shape.global_batch, shape.seq_len
+    batch_axes = rules["act_batch"]
+    seq_axes = rules["act_seq"]
+
+    def flt(shape_, spec):
+        spec = shd.fit_spec(P(*spec), shape_, mesh)
+        return jax.ShapeDtypeStruct(shape_, jnp.float32,
+                                    sharding=NamedSharding(mesh, spec))
+
+    n_text = n
+    if cfg.family == "vlm":
+        n_text = max(n - cfg.num_prefix_tokens, 8)
+    out = {}
+    for name in ("inputs", "targets"):
+        spec = shd.fit_spec(P(batch_axes, seq_axes), (b, n_text), mesh)
+        out[name] = jax.ShapeDtypeStruct(
+            (b, n_text), jnp.int32, sharding=NamedSharding(mesh, spec))
+    spec = shd.fit_spec(P(batch_axes, seq_axes), (b, n_text), mesh)
+    out["mask"] = jax.ShapeDtypeStruct(
+        (b, n_text), jnp.float32, sharding=NamedSharding(mesh, spec))
+    if cfg.family == "encdec":
+        out["src"] = flt((b, n, cfg.frontend_dim), (batch_axes, seq_axes, None))
+    if cfg.family == "vlm":
+        out["patches"] = flt((b, cfg.num_prefix_tokens, cfg.frontend_dim),
+                             (batch_axes, None, None))
+    return out
+
+
+def cache_shardings(cache_tree, cfg, mesh, rules):
+    """Decode-cache shardings.
+
+    The dominant bytes at decode are the caches, so they MUST use the model
+    axis.  Heads shard over 'model' when divisible; otherwise we shard the
+    *feature* dim (head_dim, or the MLA latent) — attention contractions
+    over that dim become psum partials, which XLA handles (flash-decode
+    along the feature axis).  SSM conv tails and scalars replicate.
+    """
+    msize = shd._axis_size(mesh, "model")
+    kv_div = cfg.n_kv_heads % msize == 0
+    h_div = cfg.n_heads % msize == 0
+    kv_ax = "model" if kv_div else None
+    kv_fd = None if kv_div else "model"
+    h_ax = "model" if h_div else None
+    h_fd = None if h_div else "model"
+    b_ax = rules["act_batch"]
+
+    per_name = [
+        (r"(^|/)(len|pos|alpha|beta)$", ()),
+        # LLN tails carry full q-heads
+        (r"(^|/)(tail_k|tail_v)$", (b_ax, None, h_ax, h_fd)),
+        # MLA latent cache: shard the latent dim
+        (r"(^|/)ckv$", (b_ax, None, "model")),
+        (r"(^|/)kr$", (b_ax, None, None)),
+        (r"(^|/)c_k$", (b_ax, None, h_ax, None)),
+        # softmax KV caches (kv heads) / cross-attn caches
+        (r"(^|/)(ck|cv|k|v)$", (b_ax, None, kv_ax, kv_fd)),
+        # LLN state: heads when divisible, else the feature dim
+        (r"(^|/)s$", (b_ax, h_ax, h_fd, None)),
+        (r"(^|/)z$", (b_ax, h_ax, h_fd)),
+        # SSM state: heads when divisible (zamba 112 ok, mamba 24 not)
+        (r"(^|/)state$", (b_ax, h_ax, None, None)),
+        (r"(^|/)conv$", (b_ax, None, None)),
+    ]
+
+    def leaf(kp, a):
+        path = shd._path_str(kp)
+        axes: tuple = (None,) * a.ndim
+        for pat, ax in per_name:
+            if re.search(pat, path):
+                lead = a.ndim - len(ax)
+                axes = (None,) * lead + tuple(ax)
+                break
+        spec = shd.fit_spec(P(*axes), a.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# Step builders.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainSetup:
+    step_fn: Any
+    state_struct: Any
+    state_shardings: Any
+    batch: dict
+    rules: dict
+
+
+def make_train_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+                     multi_pod: bool, peak_lr: float = 3e-4,
+                     total_steps: int = 10000,
+                     cast_params_once: bool | None = None,
+                     opt_cfg: AdamWConfig = AdamWConfig()) -> TrainSetup:
+    """``cast_params_once``: cast fp32 master params to compute dtype *before*
+    the loss — FSDP weight all-gathers then move bf16 instead of fp32 (2x
+    collective-bytes reduction on every weight gather; gradients arrive in
+    bf16 and are accumulated into the fp32 AdamW moments as usual)."""
+    model = build_model(cfg)
+    rules = shd.make_rules(cfg, multi_pod=multi_pod)
+    if cast_params_once is None:
+        cast_params_once = cfg.cast_params_once
+
+    def init_state(key):
+        params = model.init(key)
+        return {"params": params, "opt": adamw_init(params)}
+
+    state_struct = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    state_shardings = shd.param_shardings(state_struct, mesh)
+    batch = batch_struct(cfg, shape, mesh, rules)
+
+    accum = max(int(cfg.grad_accum), 1)
+
+    def compute_grads(params, batch):
+        if accum == 1:
+            return jax.value_and_grad(model.loss)(params, batch)
+        # Microbatched gradient accumulation (activation peak / accum).
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+            batch)
+
+        def body(carry, mbatch):
+            loss_sum, gacc = carry
+            loss, grads = jax.value_and_grad(model.loss)(params, mbatch)
+            gacc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (loss_sum + loss, gacc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gacc), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), g0), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / accum, gacc)
+        return loss_sum / accum, grads
+
+    def train_step(state, batch):
+        with shd.logical_rules(mesh, rules):
+            params_c = state["params"]
+            if cast_params_once:
+                params_c = jax.tree_util.tree_map(
+                    lambda p: p.astype(cfg.cdtype)
+                    if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+                    params_c)
+            loss, grads = compute_grads(params_c, batch)
+            lr = warmup_cosine(state["opt"]["step"], peak_lr=peak_lr,
+                               warmup_steps=min(500, total_steps // 10),
+                               total_steps=total_steps)
+            params, opt, metrics = adamw_update(grads, state["opt"],
+                                                state["params"], lr, opt_cfg)
+        return ({"params": params, "opt": opt},
+                {"loss": loss, "lr": lr, **metrics})
+
+    step_fn = jax.jit(train_step,
+                      in_shardings=(state_shardings, None),
+                      out_shardings=(state_shardings, None),
+                      donate_argnums=(0,))
+    return TrainSetup(step_fn=step_fn, state_struct=state_struct,
+                      state_shardings=state_shardings, batch=batch,
+                      rules=rules)
+
+
+@dataclasses.dataclass
+class ServeSetup:
+    prefill_fn: Any
+    decode_fn: Any
+    params_struct: Any
+    params_shardings: Any
+    batch: dict
+    cache_struct: Any
+    cache_shardings: Any
+    rules: dict
+    token_struct: Any = None
+    pos_struct: Any = None
+
+
+def make_serve_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+                     multi_pod: bool) -> ServeSetup:
+    model = build_model(cfg)
+    rules = shd.make_rules(cfg, multi_pod=multi_pod, serve=True)
+    b, n = shape.global_batch, shape.seq_len
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_shardings = shd.param_shardings(params_struct, mesh)
+    batch = batch_struct(cfg, shape, mesh, rules)
+
+    def prefill_step(params, batch):
+        with shd.logical_rules(mesh, rules):
+            return model.prefill(params, batch, n)
+
+    cache_struct = jax.eval_shape(
+        lambda p: model.cache_init(p, b, n), params_struct)
+    cache_shard = cache_shardings(cache_struct, cfg, mesh, rules)
+
+    def decode_step(params, caches, token, pos):
+        with shd.logical_rules(mesh, rules):
+            return model.decode(params, caches, token, pos)
+
+    batch_axes = rules["act_batch"]
+    tok_spec = shd.fit_spec(P(batch_axes), (b,), mesh)
+    token_struct = jax.ShapeDtypeStruct((b,), jnp.int32,
+                                        sharding=NamedSharding(mesh, tok_spec))
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    prefill_fn = jax.jit(prefill_step, in_shardings=(params_shardings, None))
+    decode_fn = jax.jit(decode_step,
+                        in_shardings=(params_shardings, cache_shard,
+                                      NamedSharding(mesh, tok_spec), None),
+                        out_shardings=(None, cache_shard),
+                        donate_argnums=(1,))
+    setup = ServeSetup(prefill_fn=prefill_fn, decode_fn=decode_fn,
+                       params_struct=params_struct,
+                       params_shardings=params_shardings, batch=batch,
+                       cache_struct=cache_struct, cache_shardings=cache_shard,
+                       rules=rules)
+    setup.token_struct = token_struct
+    setup.pos_struct = pos_struct
+    return setup

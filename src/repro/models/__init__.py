@@ -1,0 +1,4 @@
+"""Model zoo: composable model definitions for all assigned architectures."""
+from .model_zoo import Model, build_model, synthetic_batch
+
+__all__ = ["Model", "build_model", "synthetic_batch"]

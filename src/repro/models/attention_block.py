@@ -1,0 +1,195 @@
+"""Standard attention sub-block: projections + RoPE + unified attention.
+
+Used by the dense/MoE decoder LMs, the seamless encoder/decoder, the
+PaliGemma decoder and Zamba2's shared attention block.  Supports the three
+attention impls (softmax / lln / lln_diag), GQA/MQA, qk-norm, partial RoPE,
+and both cache kinds for decode (KV cache vs. O(d^2) LLN state).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as ca
+from repro.core import lln as core_lln
+from repro.core.attention import AttnConfig
+from repro.distributed.sharding import constrain
+from .layers import dense, dense_init, rms_head_norm, rope
+
+
+def attn_cfg_of(cfg, causal: bool = True) -> AttnConfig:
+    return AttnConfig(impl=cfg.attn_impl, causal=causal,
+                      diag_block=cfg.diag_block, lln_chunk=cfg.lln_chunk,
+                      softmax_chunk=cfg.softmax_chunk,
+                      use_kernel=cfg.use_kernel,
+                      fixed_ab=cfg.lln_fixed_ab)
+
+
+def attn_init(key, cfg, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {"q_w": dense_init(ks[0], d, h * hd, cfg.pdtype),
+         "k_w": dense_init(ks[1], d, g * hd, cfg.pdtype),
+         "v_w": dense_init(ks[2], d, g * hd, cfg.pdtype),
+         "o_w": dense_init(ks[3], h * hd, cfg.d_model, cfg.pdtype)}
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.ones((hd,), cfg.pdtype)
+        p["k_norm_scale"] = jnp.ones((hd,), cfg.pdtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    b, n, _ = x.shape
+    hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = dense(p["q_w"], x, cfg.cdtype).reshape(b, n, h, hd)
+    k = dense(p["k_w"], x, cfg.cdtype).reshape(b, n, g, hd)
+    v = dense(p["v_w"], x, cfg.cdtype).reshape(b, n, g, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm_scale"], q)
+        k = rms_head_norm(p["k_norm_scale"], k)
+    q = rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    q = constrain(q, "act_batch", "attn_seq", "heads", None)
+    k = constrain(k, "act_batch", None, "kv_heads", None)
+    v = constrain(v, "act_batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg, positions, *, causal: bool = True,
+               kv: Optional[jnp.ndarray] = None,
+               mask: Optional[jnp.ndarray] = None,
+               prefix_len: int = 0) -> jnp.ndarray:
+    """Full-sequence attention.  ``kv``: optional cross-attention memory
+    (B, M, d) — used by the seamless decoder (always softmax for cross)."""
+    b, n, _ = x.shape
+    hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    if kv is None:
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        out = ca.multi_head_attention(q, k, v, attn_cfg_of(cfg, causal),
+                                      mask=mask, prefix_len=prefix_len)
+    else:
+        m = kv.shape[1]
+        q = dense(p["q_w"], x, cfg.cdtype).reshape(b, n, h, hd)
+        k = dense(p["k_w"], kv, cfg.cdtype).reshape(b, m, g, hd)
+        v = dense(p["v_w"], kv, cfg.cdtype).reshape(b, m, g, hd)
+        q = constrain(q, "act_batch", "attn_seq", "heads", None)
+        k = constrain(k, "act_batch", None, "kv_heads", None)
+        v = constrain(v, "act_batch", None, "kv_heads", None)
+        out = ca.flash_softmax(q, k, v, causal=False,
+                               chunk=min(cfg.softmax_chunk, m), mask=mask)
+    out = out.reshape(b, n, h * hd)
+    out = constrain(out, "act_batch", "attn_seq", None)
+    return dense(p["o_w"], out, cfg.cdtype)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with impl-appropriate cache.
+# ---------------------------------------------------------------------------
+
+def attn_cache_init(cfg, batch: int, max_len: int):
+    hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    if cfg.attn_impl == "softmax":
+        return {"k": jnp.zeros((batch, max_len, g, hd), cfg.cdtype),
+                "v": jnp.zeros((batch, max_len, g, hd), cfg.cdtype),
+                "len": jnp.zeros((), jnp.int32)}
+    return {"s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "z": jnp.zeros((batch, h, hd), jnp.float32),
+            "c_k": jnp.zeros((batch, 1, h, 1), jnp.float32),
+            "tail_k": jnp.zeros((batch, cfg.diag_block, h, hd), cfg.cdtype),
+            "tail_v": jnp.zeros((batch, cfg.diag_block, h, hd), cfg.cdtype),
+            "pos": jnp.zeros((), jnp.int32),
+            "alpha": jnp.ones((h,), jnp.float32),
+            "beta": jnp.ones((h,), jnp.float32)}   # expanded to H heads
+
+
+def attn_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
+                 max_len: int = 0):
+    """Forward over the prompt; returns (out, cache).  The KV cache is
+    allocated at ``max_len`` (>= n) so decode can append in place."""
+    b, n, _ = x.shape
+    max_len = max(max_len, n)
+    hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    acfg = attn_cfg_of(cfg, True)
+    if cfg.attn_impl == "softmax":
+        out = ca.multi_head_attention(q, k, v, acfg, prefix_len=prefix_len)
+        pad = ((0, 0), (0, max_len - n), (0, 0), (0, 0))
+        cache = {"k": jnp.pad(k.astype(cfg.cdtype), pad),
+                 "v": jnp.pad(v.astype(cfg.cdtype), pad),
+                 "len": jnp.asarray(n, jnp.int32)}
+    else:
+        alpha, beta = ca.batch_alpha_beta(q, k, acfg)
+        beta_h = jnp.repeat(beta, h // g) if g != h else beta
+        kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+        vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+        lln_out, st = core_lln.prefill(q, kf, vf, alpha, beta_h,
+                                       chunk=cfg.lln_chunk)
+        blk = cfg.diag_block
+        nb = -(-n // blk)
+        if cfg.attn_impl == "lln_diag":
+            from repro.core.diag import block_diag_attn
+            diag_out = block_diag_attn(q, kf, vf, block=blk, causal=True)
+            out = (0.5 * (lln_out.astype(jnp.float32)
+                          + diag_out.astype(jnp.float32))).astype(v.dtype)
+        else:
+            out = lln_out
+        # Tail buffer: contents of the (partially filled) last block.
+        last = (nb - 1) * blk
+        pad = nb * blk - n
+        tail_k = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
+        tail_v = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
+        cache = {"s": st.s, "z": st.z, "c_k": st.c_k,
+                 "tail_k": tail_k.astype(cfg.cdtype),
+                 "tail_v": tail_v.astype(cfg.cdtype),
+                 "pos": jnp.asarray(n, jnp.int32),
+                 "alpha": alpha.astype(jnp.float32),
+                 "beta": beta_h.astype(jnp.float32)}
+    out = out.reshape(b, n, h * hd)
+    return dense(p["o_w"], out, cfg.cdtype), cache
+
+
+def attn_decode(p, x, cache, cfg, position):
+    """One-token decode.  x: (B, 1, d); position: scalar absolute index."""
+    b, n, _ = x.shape
+    hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = dense(p["q_w"], x, cfg.cdtype).reshape(b, n, h, hd)
+    k = dense(p["k_w"], x, cfg.cdtype).reshape(b, n, g, hd)
+    v = dense(p["v_w"], x, cfg.cdtype).reshape(b, n, g, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm_scale"], q)
+        k = rms_head_norm(p["k_norm_scale"], k)
+    pos = jnp.full((1,), position, jnp.int32) if jnp.ndim(position) == 0 \
+        else position
+    q = rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
+    k = rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
+
+    if cfg.attn_impl == "softmax":
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache["len"], axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache["len"], axis=1)
+        kc = constrain(kc, "act_batch", "act_seq_cache", "kv_heads", None)
+        vc = constrain(vc, "act_batch", "act_seq_cache", "kv_heads", None)
+        new_len = cache["len"] + 1
+        valid = jnp.broadcast_to(
+            jnp.arange(kc.shape[1])[None] < new_len, (b, kc.shape[1]))
+        out = ca.flash_softmax(q, kc, vc, causal=False,
+                               chunk=min(cfg.softmax_chunk, kc.shape[1]),
+                               mask=valid)
+        new_cache = {"k": kc, "v": vc, "len": new_len}
+    else:
+        kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+        vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+        st = ca.LLNDecodeState(
+            lln=core_lln.LLNState(s=cache["s"], z=cache["z"], c_k=cache["c_k"]),
+            tail_k=cache["tail_k"], tail_v=cache["tail_v"], pos=cache["pos"])
+        out, st = ca.decode_lln(st, q, kf, vf, cache["alpha"], cache["beta"],
+                                impl=cfg.attn_impl)
+        new_cache = {"s": st.lln.s, "z": st.lln.z, "c_k": st.lln.c_k,
+                     "tail_k": st.tail_k, "tail_v": st.tail_v, "pos": st.pos,
+                     "alpha": cache["alpha"], "beta": cache["beta"]}
+    out = out.reshape(b, n, h * hd)
+    return dense(p["o_w"], out, cfg.cdtype), new_cache

@@ -1,0 +1,258 @@
+"""SSM language models: pure Mamba2 (mamba2-130m) and Zamba2-style hybrid.
+
+Zamba2 (arXiv:2411.15242): a Mamba2 backbone with a single *shared*
+transformer block (attention + MLP, one set of weights) applied every
+``shared_attn_period`` layers; its input is the concatenation of the
+residual stream with the initial embeddings, linearly projected back to
+d_model.  ``shared_attn_period = 0`` disables the shared block (pure
+Mamba2 LM).  The paper's LLN technique applies to the shared attention
+block only (the SSM blocks are attention-free).
+
+Simplifications vs. the released checkpoints (recorded in DESIGN.md):
+no per-application LoRA deltas on the shared block; a single shared block
+rather than two alternating ones.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention_block import (attn_apply, attn_cache_init, attn_decode,
+                              attn_init, attn_prefill)
+from .layers import (apply_mlp, apply_norm, dense, dense_init, embed_init,
+                     embed_lookup, logits_from_hidden, mlp_init, norm_init,
+                     trunc_normal)
+from .ssm import ssm_apply, ssm_cache_init, ssm_decode, ssm_init
+from .transformer import _remat
+
+
+def _groups(cfg):
+    per = cfg.shared_attn_period
+    if per <= 0:
+        return 0, 0, cfg.n_layers
+    g = cfg.n_layers // per
+    return g, per, cfg.n_layers - g * per
+
+
+def hybrid_init(key, cfg):
+    ke, kl, ks, kh = jax.random.split(key, 4)
+    p = {"embed": embed_init(ke, cfg.padded_vocab, cfg.d_model, cfg.pdtype),
+         "final_norm": norm_init(cfg.d_model, "rmsnorm", cfg.pdtype)}
+    keys = jax.random.split(kl, cfg.n_layers)
+    p["layers"] = jax.vmap(lambda k: {
+        "ln": norm_init(cfg.d_model, "rmsnorm", cfg.pdtype),
+        "ssm": ssm_init(k, cfg)})(keys)
+    g, per, tail = _groups(cfg)
+    if g:
+        k1, k2, k3, k4 = jax.random.split(ks, 4)
+        p["shared"] = {
+            "in_proj": dense_init(k1, 2 * cfg.d_model, cfg.d_model,
+                                  cfg.pdtype),
+            "ln1": norm_init(cfg.d_model, "rmsnorm", cfg.pdtype),
+            "attn": attn_init(k2, cfg),
+            "ln2": norm_init(cfg.d_model, "rmsnorm", cfg.pdtype),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act, cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = trunc_normal(kh, (cfg.d_model, cfg.padded_vocab),
+                                    cfg.d_model ** -0.5, cfg.pdtype)
+    return p
+
+
+def _split_layers(p, cfg):
+    g, per, tail = _groups(cfg)
+    layers = p["layers"]
+    if g == 0:
+        return None, layers, g, per
+    grouped = jax.tree_util.tree_map(
+        lambda a: a[:g * per].reshape((g, per) + a.shape[1:]), layers)
+    tail_p = jax.tree_util.tree_map(lambda a: a[g * per:], layers)
+    return grouped, tail_p, g, per
+
+
+def _mamba_block(lp, x, cfg):
+    return x + ssm_apply(lp["ssm"], apply_norm(lp["ln"], x, "rmsnorm"),
+                         cfg).astype(x.dtype)
+
+
+def _shared_block(sp, x, x0, cfg, positions):
+    h = dense(sp["in_proj"], jnp.concatenate([x, x0], -1), cfg.cdtype)
+    a = attn_apply(sp["attn"], apply_norm(sp["ln1"], h, "rmsnorm"), cfg,
+                   positions, causal=True)
+    h = h + a.astype(h.dtype)
+    m = apply_mlp(sp["mlp"], apply_norm(sp["ln2"], h, "rmsnorm"), cfg.act,
+                  cfg.cdtype)
+    return x + (h + m.astype(h.dtype)).astype(x.dtype)
+
+
+def hybrid_hidden(p, tokens, cfg):
+    x = embed_lookup(p["embed"], tokens, cfg.cdtype, cfg.embed_scale)
+    x0 = x
+    positions = jnp.arange(tokens.shape[1])
+    grouped, tail_p, g, per = _split_layers(p, cfg)
+
+    mamba_scan = _remat(lambda x, lp: (_mamba_block(lp, x, cfg), None), cfg)
+
+    if g:
+        # remat granularity: per mamba layer (mamba_scan) and per shared-
+        # block application — NOT around the whole group, which would nest
+        # checkpoints and recompute the recompute (see EXPERIMENTS.md §Perf).
+        shared_fn = _remat(
+            lambda x, _: (_shared_block(p["shared"], x, x0, cfg, positions),
+                          None), cfg)
+
+        def group_body(x, glp):
+            x, _ = jax.lax.scan(mamba_scan, x, glp,
+                                unroll=bool(cfg.scan_unroll))
+            x, _ = shared_fn(x, None)
+            return x, None
+        x, _ = jax.lax.scan(group_body, x, grouped,
+                            unroll=bool(cfg.scan_unroll))
+    x, _ = jax.lax.scan(mamba_scan, x, tail_p,
+                        unroll=bool(cfg.scan_unroll))
+    x = apply_norm(p["final_norm"], x, "rmsnorm")
+    return x, jnp.zeros((), jnp.float32)
+
+
+def hybrid_logits(p, tokens, cfg):
+    h, aux = hybrid_hidden(p, tokens, cfg)
+    head = p["lm_head"] if "lm_head" in p else p["embed"]["table"].T
+    return logits_from_hidden(head, h, cfg.cdtype, cfg.logit_softcap), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+
+def hybrid_cache_init(p, cfg, batch: int, max_len: int):
+    g, per, tail = _groups(cfg)
+    one = ssm_cache_init(cfg, batch)
+    caches = {"layers": jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)}
+    if g:
+        sa = attn_cache_init(cfg, batch, max_len)
+        caches["shared"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (g,) + a.shape), sa)
+    return caches
+
+
+def hybrid_prefill(p, tokens, cfg, max_len: int):
+    """Sequential (non-scan) prefill over layers — prefill happens once, and
+    the per-layer cache shapes differ between mamba and shared-attn layers."""
+    x = embed_lookup(p["embed"], tokens, cfg.cdtype, cfg.embed_scale)
+    x0 = x
+    n = tokens.shape[1]
+    positions = jnp.arange(n)
+    grouped, tail_p, g, per = _split_layers(p, cfg)
+
+    def mamba_prefill(lp, x):
+        out, cache = ssm_apply(lp["ssm"], apply_norm(lp["ln"], x, "rmsnorm"),
+                               cfg, return_state=True)
+        return x + out.astype(x.dtype), cache
+
+    def scan_mamba(x, lps):
+        def body(x, lp):
+            x, cache = mamba_prefill(lp, x)
+            return x, cache
+        return jax.lax.scan(body, x, lps, unroll=bool(cfg.scan_unroll))
+
+    caches = {}
+    if g:
+        def group_body(x, glp):
+            x, mc = scan_mamba(x, glp)
+            # shared block prefill
+            hcat = dense(p["shared"]["in_proj"],
+                         jnp.concatenate([x, x0], -1), cfg.cdtype)
+            a, sc = attn_prefill(p["shared"]["attn"],
+                                 apply_norm(p["shared"]["ln1"], hcat,
+                                            "rmsnorm"), cfg, positions,
+                                 max_len=max_len)
+            hcat = hcat + a.astype(hcat.dtype)
+            m = apply_mlp(p["shared"]["mlp"],
+                          apply_norm(p["shared"]["ln2"], hcat, "rmsnorm"),
+                          cfg.act, cfg.cdtype)
+            x = x + (hcat + m.astype(hcat.dtype)).astype(x.dtype)
+            return x, (mc, sc)
+        x, (mc, sc) = jax.lax.scan(group_body, x, grouped,
+                                   unroll=bool(cfg.scan_unroll))
+        # mc: (g, per, ...) -> flatten to (g*per, ...)
+        mc = jax.tree_util.tree_map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), mc)
+        x, tail_c = scan_mamba(x, tail_p)
+        caches["layers"] = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], 0), mc, tail_c)
+        caches["shared"] = sc
+    else:
+        x, caches["layers"] = scan_mamba(x, tail_p)
+    x = apply_norm(p["final_norm"], x, "rmsnorm")
+    head = p["lm_head"] if "lm_head" in p else p["embed"]["table"].T
+    logits = logits_from_hidden(head, x[:, -1:], cfg.cdtype, cfg.logit_softcap)
+    return logits, caches
+
+
+def hybrid_decode(p, caches, token, cfg, position):
+    x = embed_lookup(p["embed"], token[:, None], cfg.cdtype, cfg.embed_scale)
+    x0 = x
+    grouped, tail_p, g, per = _groups_params(p, cfg)
+    new_caches = {}
+
+    def mamba_step(x, lp, cache):
+        out, cache = ssm_decode(lp["ssm"],
+                                apply_norm(lp["ln"], x, "rmsnorm"), cache, cfg)
+        return x + out.astype(x.dtype), cache
+
+    if g:
+        mcaches = caches["layers"]
+        mc_group = jax.tree_util.tree_map(
+            lambda a: a[:g * per].reshape((g, per) + a.shape[1:]), mcaches)
+        mc_tail = jax.tree_util.tree_map(lambda a: a[g * per:], mcaches)
+
+        def group_body(x, xs):
+            glp, gmc, gsc = xs
+
+            def body(x, ys):
+                lp, c = ys
+                x, c = mamba_step(x, lp, c)
+                return x, c
+            x, gmc = jax.lax.scan(body, x, (glp, gmc))
+            hcat = dense(p["shared"]["in_proj"],
+                         jnp.concatenate([x, x0], -1), cfg.cdtype)
+            a, gsc = attn_decode(p["shared"]["attn"],
+                                 apply_norm(p["shared"]["ln1"], hcat,
+                                            "rmsnorm"), gsc, cfg, position)
+            hcat = hcat + a.astype(hcat.dtype)
+            m = apply_mlp(p["shared"]["mlp"],
+                          apply_norm(p["shared"]["ln2"], hcat, "rmsnorm"),
+                          cfg.act, cfg.cdtype)
+            x = x + (hcat + m.astype(hcat.dtype)).astype(x.dtype)
+            return x, (gmc, gsc)
+        x, (gmc, gsc) = jax.lax.scan(group_body, x, (grouped, mc_group,
+                                                     caches["shared"]),
+                                     unroll=bool(cfg.scan_unroll))
+        gmc = jax.tree_util.tree_map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), gmc)
+
+        def tail_body(x, ys):
+            lp, c = ys
+            return mamba_step(x, lp, c)
+        x, tc = jax.lax.scan(tail_body, x, (tail_p, mc_tail),
+                             unroll=bool(cfg.scan_unroll))
+        new_caches["layers"] = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], 0), gmc, tc)
+        new_caches["shared"] = gsc
+    else:
+        def body(x, ys):
+            lp, c = ys
+            return mamba_step(x, lp, c)
+        x, new_caches["layers"] = jax.lax.scan(body, x,
+                                               (tail_p, caches["layers"]),
+                                               unroll=bool(cfg.scan_unroll))
+    x = apply_norm(p["final_norm"], x, "rmsnorm")
+    head = p["lm_head"] if "lm_head" in p else p["embed"]["table"].T
+    logits = logits_from_hidden(head, x, cfg.cdtype, cfg.logit_softcap)
+    return logits[:, 0], new_caches
+
+
+def _groups_params(p, cfg):
+    return _split_layers(p, cfg)

@@ -1,0 +1,181 @@
+"""Shared model building blocks (pure-functional, pytree params).
+
+Conventions:
+* params are nested dicts of jnp arrays, stored in ``cfg.param_dtype`` and
+  cast to ``cfg.compute_dtype`` at use;
+* per-layer parameter subtrees are *stacked* along a leading layer axis so
+  the forward pass is a single ``lax.scan`` (small HLO, fast compiles, remat
+  per layer);
+* initializers follow standard transformer practice (truncated-normal
+  fan-in scaling).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def trunc_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, std: Optional[float] = None):
+    std = (1.0 / math.sqrt(d_in)) if std is None else std
+    return trunc_normal(key, (d_in, d_out), std, dtype)
+
+
+def dense(w, x, dtype):
+    return jnp.einsum("...d,df->...f", x.astype(dtype), w.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Normalization.
+# ---------------------------------------------------------------------------
+
+def norm_init(d, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+        return (xf * inv * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """qk-norm: RMS-normalize the last (head_dim) axis (qwen3-style)."""
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (xf * inv * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full / partial / half-"2d").
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0,
+         rotary_pct: float = 1.0) -> jnp.ndarray:
+    """x: (B, N, H, D); positions: (N,) or (B, N).  Rotates the first
+    ``rotary_pct`` fraction of D (pairwise interleaved halves)."""
+    b, n, h, d = x.shape
+    rd = int(d * rotary_pct)
+    rd -= rd % 2
+    if rd == 0:
+        return x
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    half = rd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x_rot[..., :half].astype(jnp.float32), x_rot[..., half:].astype(jnp.float32)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], -1)
+
+
+# ---------------------------------------------------------------------------
+# Gated / plain MLP.
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, act, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act.endswith("_glu"):
+        return {"wi_gate": dense_init(k1, d_model, d_ff, dtype),
+                "wi_up": dense_init(k2, d_model, d_ff, dtype),
+                "wo": dense_init(k3, d_ff, d_model, dtype)}
+    return {"wi": dense_init(k1, d_model, d_ff, dtype),
+            "wo": dense_init(k3, d_ff, d_model, dtype)}
+
+
+def apply_mlp(p, x, act, dtype):
+    if act.endswith("_glu"):
+        g = dense(p["wi_gate"], x, dtype)
+        u = dense(p["wi_up"], x, dtype)
+        g = jax.nn.silu(g) if act.startswith("silu") else jax.nn.gelu(g)
+        return dense(p["wo"], g * u, dtype)
+    h = dense(p["wi"], x, dtype)
+    h = jax.nn.gelu(h)
+    return dense(p["wo"], h, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy (never materializes (B, N, V) logits).
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d_model, dtype):
+    # Fan-in scale keeps tied-embedding logits O(1); embed_scale models
+    # (gemma) recover O(1) embeddings via the sqrt(d) lookup multiplier.
+    return {"table": trunc_normal(key, (vocab, d_model),
+                                  d_model ** -0.5, dtype)}
+
+
+def embed_lookup(p, tokens, dtype, scale: bool = False):
+    x = jnp.take(p["table"], tokens, axis=0).astype(dtype)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(p["table"].shape[1]), dtype)
+    return x
+
+
+def logits_from_hidden(lm_head, h, dtype, softcap: float = 0.0):
+    logits = jnp.einsum("...d,dv->...v", h.astype(dtype),
+                        lm_head.astype(dtype)).astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def chunked_xent(h: jnp.ndarray, lm_head: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray, *, vocab: int, chunk: int = 1024,
+                 dtype=jnp.bfloat16, softcap: float = 0.0) -> jnp.ndarray:
+    """Mean cross-entropy over valid positions, computed in sequence chunks.
+
+    h: (B, N, D); lm_head: (D, Vpad); labels/mask: (B, N).  Only the chunk's
+    (B, C, Vpad) logits are ever live; the scan is remat'd so backward
+    recomputes them.  Pad-vocab columns are excluded by masking logits.
+    """
+    b, n, d = h.shape
+    vpad = lm_head.shape[1]
+    c = min(chunk, n)
+    if n % c:
+        pad = c - n % c
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = h.shape[1] // c
+    hc = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, c).transpose(1, 0, 2)
+    vocab_ok = (jnp.arange(vpad) < vocab)[None, None, :]
+
+    from repro.distributed.sharding import constrain
+
+    def body(carry, xs):
+        loss_sum, cnt = carry
+        hh, ll, mm = xs
+        logits = logits_from_hidden(lm_head, hh, dtype, softcap)
+        logits = constrain(logits, "act_batch", None, "vocab")
+        logits = jnp.where(vocab_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mm
+        return (loss_sum + jnp.sum(nll), cnt + jnp.sum(mm)), None
+
+    body = jax.checkpoint(body)
+    (loss_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc.astype(jnp.float32)))
+    return loss_sum / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,224 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries/keys/values are compressed through low-rank latents:
+  c_q  = RMSNorm(x W_dq)            (q_lora)
+  q    = c_q W_uq                   -> per-head [nope | rope] parts
+  c_kv = RMSNorm(x W_dkv)           (kv_lora = 512)
+  k_nope, v = c_kv W_uk, c_kv W_uv  (decompressed per head)
+  k_rope = RoPE(x W_kr)             (single shared rope key per position)
+
+Decode caches only (c_kv, k_rope) — 576 floats/token — and uses the
+*absorbed* formulation (W_uk folded into q, W_uv applied after the latent
+context) so no per-step decompression of the whole cache is needed.
+
+LLN applicability: the paper's technique applies to the assembled per-head
+q/k (dim nope+rope); LLN decode then needs no token cache at all (O(d^2)
+state) — the absorbed trick and the LLN state are two different routes to
+the same memory goal, recorded separately in the roofline.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as ca
+from repro.core import lln as core_lln
+from repro.distributed.sharding import constrain
+from .attention_block import attn_cfg_of
+from .layers import dense, dense_init, rope
+
+
+def _dims(cfg):
+    return (cfg.q_lora, cfg.kv_lora, cfg.nope_head_dim, cfg.rope_head_dim,
+            cfg.v_head_dim, cfg.n_heads)
+
+
+def mla_init(key, cfg):
+    ql, kvl, nd, rd, vd, h = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {"w_dkv": dense_init(ks[0], d, kvl, cfg.pdtype),
+         "kv_norm_scale": jnp.ones((kvl,), cfg.pdtype),
+         "w_uk": dense_init(ks[1], kvl, h * nd, cfg.pdtype),
+         "w_uv": dense_init(ks[2], kvl, h * vd, cfg.pdtype),
+         "w_kr": dense_init(ks[3], d, rd, cfg.pdtype),
+         "o_w": dense_init(ks[4], h * vd, d, cfg.pdtype)}
+    if ql:
+        p["w_dq"] = dense_init(ks[5], d, ql, cfg.pdtype)
+        p["q_norm_scale"] = jnp.ones((ql,), cfg.pdtype)
+        p["w_uq"] = dense_init(ks[6], ql, h * (nd + rd), cfg.pdtype)
+    else:
+        p["w_q"] = dense_init(ks[7], d, h * (nd + rd), cfg.pdtype)
+    return p
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (xf * inv * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _q_proj(p, x, cfg, positions):
+    ql, kvl, nd, rd, vd, h = _dims(cfg)
+    b, n, _ = x.shape
+    if ql:
+        cq = _rms(dense(p["w_dq"], x, cfg.cdtype), p["q_norm_scale"])
+        q = dense(p["w_uq"], cq, cfg.cdtype).reshape(b, n, h, nd + rd)
+    else:
+        q = dense(p["w_q"], x, cfg.cdtype).reshape(b, n, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _kv_latent(p, x, cfg, positions):
+    ckv = _rms(dense(p["w_dkv"], x, cfg.cdtype), p["kv_norm_scale"])
+    kr = dense(p["w_kr"], x, cfg.cdtype)[:, :, None, :]      # (B,N,1,rd)
+    kr = rope(kr, positions, cfg.rope_theta)
+    return ckv, kr
+
+
+def _decompress(p, ckv, cfg):
+    ql, kvl, nd, rd, vd, h = _dims(cfg)
+    b, n, _ = ckv.shape
+    k_nope = dense(p["w_uk"], ckv, cfg.cdtype).reshape(b, n, h, nd)
+    v = dense(p["w_uv"], ckv, cfg.cdtype).reshape(b, n, h, vd)
+    return k_nope, v
+
+
+def _assemble(q_nope, q_rope, k_nope, kr):
+    h = q_nope.shape[2]
+    k_rope = jnp.broadcast_to(kr, kr.shape[:2] + (h, kr.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope], -1)
+    return q, k
+
+
+def mla_apply(p, x, cfg, positions, *, causal: bool = True):
+    """Full-sequence MLA (decompressed form), any attention impl."""
+    b, n, _ = x.shape
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    ckv, kr = _kv_latent(p, x, cfg, positions)
+    k_nope, v = _decompress(p, ckv, cfg)
+    q, k = _assemble(q_nope, q_rope, k_nope, kr)
+    q = constrain(q, "act_batch", "attn_seq", "heads", None)
+    k = constrain(k, "act_batch", "attn_seq", "heads", None)
+    v = constrain(v, "act_batch", "attn_seq", "heads", None)
+    out = ca.multi_head_attention(q, k, v, attn_cfg_of(cfg, causal))
+    out = out.reshape(b, n, -1)
+    return dense(p["o_w"], out, cfg.cdtype)
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+
+def mla_cache_init(cfg, batch: int, max_len: int):
+    ql, kvl, nd, rd, vd, h = _dims(cfg)
+    if cfg.attn_impl == "softmax":
+        return {"ckv": jnp.zeros((batch, max_len, kvl), cfg.cdtype),
+                "kr": jnp.zeros((batch, max_len, rd), cfg.cdtype),
+                "len": jnp.zeros((), jnp.int32)}
+    d = nd + rd
+    return {"s": jnp.zeros((batch, h, d, vd), jnp.float32),
+            "z": jnp.zeros((batch, h, d), jnp.float32),
+            "c_k": jnp.zeros((batch, 1, h, 1), jnp.float32),
+            "tail_k": jnp.zeros((batch, cfg.diag_block, h, d), cfg.cdtype),
+            "tail_v": jnp.zeros((batch, cfg.diag_block, h, vd), cfg.cdtype),
+            "pos": jnp.zeros((), jnp.int32),
+            "alpha": jnp.ones((h,), jnp.float32),
+            "beta": jnp.ones((h,), jnp.float32)}
+
+
+def mla_prefill(p, x, cfg, positions, *, max_len: int = 0):
+    ql, kvl, nd, rd, vd, h = _dims(cfg)
+    b, n, _ = x.shape
+    q_nope, q_rope = _q_proj(p, x, cfg, positions)
+    ckv, kr = _kv_latent(p, x, cfg, positions)
+    k_nope, v = _decompress(p, ckv, cfg)
+    q, k = _assemble(q_nope, q_rope, k_nope, kr)
+    acfg = attn_cfg_of(cfg, True)
+    if cfg.attn_impl == "softmax":
+        out = ca.multi_head_attention(q, k, v, acfg)
+        ml = max(max_len, n)
+        pad = ((0, 0), (0, ml - n), (0, 0))
+        cache = {"ckv": jnp.pad(ckv.astype(cfg.cdtype), pad),
+                 "kr": jnp.pad(kr[:, :, 0].astype(cfg.cdtype), pad),
+                 "len": jnp.asarray(n, jnp.int32)}
+    else:
+        alpha, beta = ca.batch_alpha_beta(q, k, acfg)
+        lln_out, st = core_lln.prefill(q, k, v, alpha, beta,
+                                       chunk=cfg.lln_chunk)
+        if cfg.attn_impl == "lln_diag":
+            from repro.core.diag import block_diag_attn
+            diag_out = block_diag_attn(q, k, v, block=cfg.diag_block,
+                                       causal=True)
+            out = (0.5 * (lln_out.astype(jnp.float32)
+                          + diag_out.astype(jnp.float32))).astype(v.dtype)
+        else:
+            out = lln_out
+        blk = cfg.diag_block
+        nb = -(-n // blk)
+        last = (nb - 1) * blk
+        pad = nb * blk - n
+        tail_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
+        tail_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
+        cache = {"s": st.s, "z": st.z, "c_k": st.c_k,
+                 "tail_k": tail_k.astype(cfg.cdtype),
+                 "tail_v": tail_v.astype(cfg.cdtype),
+                 "pos": jnp.asarray(n, jnp.int32),
+                 "alpha": alpha.astype(jnp.float32),
+                 "beta": beta.astype(jnp.float32)}
+    out = out.reshape(b, n, -1)
+    return dense(p["o_w"], out, cfg.cdtype), cache
+
+
+def mla_decode(p, x, cache, cfg, position):
+    """One-token MLA decode.  Softmax path uses the absorbed formulation."""
+    ql, kvl, nd, rd, vd, h = _dims(cfg)
+    b, n, _ = x.shape
+    pos = jnp.full((1,), position, jnp.int32)
+    q_nope, q_rope = _q_proj(p, x, cfg, pos)
+    ckv_new, kr_new = _kv_latent(p, x, cfg, pos)
+
+    if cfg.attn_impl == "softmax":
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cache["len"], 1)
+        krc = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr_new[:, :, 0].astype(cache["kr"].dtype),
+            cache["len"], 1)
+        ckv = constrain(ckv, "act_batch", "act_seq_cache", None)
+        new_len = cache["len"] + 1
+        # Absorbed: q' = q_nope @ W_uk (per head) lives in latent space.
+        w_uk = p["w_uk"].reshape(kvl, h, nd)
+        q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        s = jnp.einsum("bqhk,bsk->bhqs", q_lat,
+                       ckv.astype(jnp.float32))
+        s = s + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                           krc.astype(jnp.float32))
+        s = s * ((nd + rd) ** -0.5)
+        valid = jnp.arange(ckv.shape[1])[None, None, None, :] < new_len
+        s = jnp.where(valid, s, -1e30)
+        attn = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhqs,bsk->bqhk", attn, ckv.astype(jnp.float32))
+        w_uv = p["w_uv"].reshape(kvl, h, vd)
+        out = jnp.einsum("bqhk,khv->bqhv", ctx, w_uv.astype(jnp.float32))
+        out = out.astype(cfg.cdtype)
+        new_cache = {"ckv": ckv, "kr": krc, "len": new_len}
+    else:
+        k_nope, v = _decompress(p, ckv_new, cfg)
+        q, k = _assemble(q_nope, q_rope, k_nope, kr_new)
+        st = ca.LLNDecodeState(
+            lln=core_lln.LLNState(s=cache["s"], z=cache["z"],
+                                  c_k=cache["c_k"]),
+            tail_k=cache["tail_k"], tail_v=cache["tail_v"], pos=cache["pos"])
+        out, st = ca.decode_lln(st, q, k, v, cache["alpha"], cache["beta"],
+                                impl=cfg.attn_impl)
+        new_cache = {"s": st.lln.s, "z": st.lln.z, "c_k": st.lln.c_k,
+                     "tail_k": st.tail_k, "tail_v": st.tail_v, "pos": st.pos,
+                     "alpha": cache["alpha"], "beta": cache["beta"]}
+    out = out.reshape(b, n, -1)
+    return dense(p["o_w"], out, cfg.cdtype), new_cache

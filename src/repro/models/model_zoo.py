@@ -1,0 +1,168 @@
+"""build_model(cfg) -> Model: a uniform functional interface per family.
+
+Batch conventions (all int32 tokens in [0, vocab)):
+  lm / moe / ssm / hybrid : {"inputs" (B,N), "targets" (B,N), "mask" (B,N)}
+  encdec                  : + {"src" (B,M,frontend_dim) float}
+  vlm                     : + {"patches" (B,P,frontend_dim) float}
+
+``loss``  : params, batch -> scalar (chunked xent + router aux).
+``prefill``: params, batch -> (last logits (B, Vpad), caches).
+``decode`` : params, caches, token (B,), position -> (logits, caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import encdec as ed
+from . import hybrid as hy
+from . import transformer as tr
+from . import vlm as vl
+from .layers import chunked_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    hidden: Callable
+    prefill: Callable
+    decode: Callable
+    cache_init: Callable
+    param_count: Callable
+
+
+def _xent_loss(cfg, h, head, batch):
+    loss = chunked_xent(h, head, batch["targets"], batch["mask"],
+                        vocab=cfg.vocab, dtype=cfg.cdtype,
+                        softcap=cfg.logit_softcap)
+    return loss
+
+
+def _count(params) -> int:
+    return int(sum(p.size for p in jax.tree_util.tree_leaves(params)))
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "mla_moe"):
+        def loss(params, batch):
+            h, aux = tr.lm_hidden(params, batch["inputs"], cfg)
+            return (_xent_loss(cfg, h, tr.lm_head_of(params), batch)
+                    + cfg.router_aux_coef * aux)
+
+        def hidden(params, batch):
+            return tr.lm_hidden(params, batch["inputs"], cfg)
+
+        def prefill(params, batch, max_len):
+            return tr.lm_prefill(params, batch["inputs"], cfg, max_len)
+
+        return Model(cfg=cfg, init=lambda key: tr.lm_init(key, cfg),
+                     loss=loss, hidden=hidden, prefill=prefill,
+                     decode=lambda p, c, t, pos: tr.lm_decode(p, c, t, cfg, pos),
+                     cache_init=lambda p, b, n: tr.lm_cache_init(p, cfg, b, n),
+                     param_count=_count)
+
+    if fam in ("ssm", "hybrid"):
+        def loss(params, batch):
+            h, aux = hy.hybrid_hidden(params, batch["inputs"], cfg)
+            head = params.get("lm_head", params["embed"]["table"].T)
+            return _xent_loss(cfg, h, head, batch)
+
+        def hidden(params, batch):
+            return hy.hybrid_hidden(params, batch["inputs"], cfg)
+
+        def prefill(params, batch, max_len):
+            return hy.hybrid_prefill(params, batch["inputs"], cfg, max_len)
+
+        return Model(cfg=cfg, init=lambda key: hy.hybrid_init(key, cfg),
+                     loss=loss, hidden=hidden, prefill=prefill,
+                     decode=lambda p, c, t, pos: hy.hybrid_decode(p, c, t, cfg, pos),
+                     cache_init=lambda p, b, n: hy.hybrid_cache_init(p, cfg, b, n),
+                     param_count=_count)
+
+    if fam == "encdec":
+        def loss(params, batch):
+            h, aux = ed.encdec_hidden(params, batch["src"], batch["inputs"],
+                                      cfg)
+            return _xent_loss(cfg, h, params["lm_head"], batch)
+
+        def hidden(params, batch):
+            return ed.encdec_hidden(params, batch["src"], batch["inputs"], cfg)
+
+        def prefill(params, batch, max_len):
+            return ed.encdec_prefill(params, batch["src"], batch["inputs"],
+                                     cfg, max_len)
+
+        def cache_init(p, b, n):
+            return ed.encdec_cache_init(p, cfg, b, n, enc_len=n)
+
+        return Model(cfg=cfg, init=lambda key: ed.encdec_init(key, cfg),
+                     loss=loss, hidden=hidden, prefill=prefill,
+                     decode=lambda p, c, t, pos: ed.encdec_decode(p, c, t, cfg, pos),
+                     cache_init=cache_init, param_count=_count)
+
+    if fam == "encoder":
+        from . import encoder as enc
+
+        def loss(params, batch):
+            h, aux = enc.encoder_hidden(params, batch["inputs"], cfg)
+            return _xent_loss(cfg, h, params["lm_head"], batch)
+
+        def hidden(params, batch):
+            return enc.encoder_hidden(params, batch["inputs"], cfg)
+
+        def no_serve(*a, **k):
+            raise NotImplementedError("encoder-only models have no decode step")
+
+        return Model(cfg=cfg, init=lambda key: enc.encoder_init(key, cfg),
+                     loss=loss, hidden=hidden, prefill=no_serve,
+                     decode=no_serve, cache_init=no_serve, param_count=_count)
+
+    if fam == "vlm":
+        def loss(params, batch):
+            h, aux = vl.vlm_hidden(params, batch["patches"], batch["inputs"],
+                                   cfg)
+            return _xent_loss(cfg, h, tr.lm_head_of(params), batch)
+
+        def hidden(params, batch):
+            return vl.vlm_hidden(params, batch["patches"], batch["inputs"],
+                                 cfg)
+
+        def prefill(params, batch, max_len):
+            return vl.vlm_prefill(params, batch["patches"], batch["inputs"],
+                                  cfg, max_len)
+
+        return Model(cfg=cfg, init=lambda key: vl.vlm_init(key, cfg),
+                     loss=loss, hidden=hidden, prefill=prefill,
+                     decode=lambda p, c, t, pos: vl.vlm_decode(p, c, t, cfg, pos),
+                     cache_init=lambda p, b, n: vl.vlm_cache_init(p, cfg, b, n),
+                     param_count=_count)
+
+    raise ValueError(f"unknown family: {fam}")
+
+
+def synthetic_batch(cfg: ArchConfig, batch: int, seq: int, key=None,
+                    text_seq: Optional[int] = None) -> dict[str, Any]:
+    """Deterministic synthetic batch with the family's input signature."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    k1, k2, k3 = jax.random.split(key, 3)
+    n = text_seq if text_seq is not None else seq
+    if cfg.family == "vlm":
+        n = max(seq - cfg.num_prefix_tokens, 8)
+    toks = jax.random.randint(k1, (batch, n + 1), 0, cfg.vocab, jnp.int32)
+    out = {"inputs": toks[:, :-1], "targets": toks[:, 1:],
+           "mask": jnp.ones((batch, n), jnp.float32)}
+    if cfg.family == "encdec":
+        out["src"] = jax.random.normal(k2, (batch, seq, cfg.frontend_dim),
+                                       jnp.float32)
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k3, (batch, cfg.num_prefix_tokens, cfg.frontend_dim), jnp.float32)
+    return out

@@ -1,0 +1,42 @@
+"""PaliGemma-style VLM (SigLIP patch stub + gemma decoder).
+
+The vision frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (B, num_prefix_tokens, frontend_dim); a linear
+projector maps them into the decoder's embedding space.  The decoder is the
+gemma-family transformer (MQA kv=1, GeGLU, embed scaling) with a prefix-LM
+mask: patch positions attend bidirectionally, text is causal.  In LLN mode
+the prefix bidirectionality is approximated causally (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, logits_from_hidden
+from .transformer import (lm_cache_init, lm_decode, lm_hidden, lm_init,
+                          lm_prefill)
+
+
+def vlm_init(key, cfg):
+    kp, kl = jax.random.split(key)
+    p = lm_init(kl, cfg)
+    p["patch_proj"] = dense_init(kp, cfg.frontend_dim, cfg.d_model,
+                                 cfg.pdtype)
+    return p
+
+
+def vlm_hidden(p, patches, tokens, cfg):
+    """patches: (B, P, frontend_dim); tokens: (B, N).
+    Returns hidden for the *text* positions only (prefix stripped)."""
+    prefix = dense(p["patch_proj"], patches, cfg.cdtype)
+    h, aux = lm_hidden(p, tokens, cfg, prefix_embed=prefix)
+    return h[:, patches.shape[1]:], aux
+
+
+def vlm_prefill(p, patches, tokens, cfg, max_len: int):
+    prefix = dense(p["patch_proj"], patches, cfg.cdtype)
+    return lm_prefill(p, tokens, cfg, max_len, prefix_embed=prefix)
+
+
+vlm_decode = lm_decode
+vlm_cache_init = lm_cache_init

@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW, LR schedules, gradient compression."""
+from .adamw import (AdamWConfig, adamw_init, adamw_update,
+                    clip_by_global_norm, global_norm)
+from .compression import (bf16_allreduce_cast, ef_compress, ef_decompress,
+                          ef_init)
+from .schedules import warmup_cosine, warmup_linear

@@ -1,0 +1,55 @@
+"""Gradient compression for cross-pod (DCN) reduction.
+
+Two mechanisms, both numerically validated in tests/test_optim.py:
+
+* ``bf16_allreduce_cast`` — cast gradients to bf16 before the cross-pod
+  all-reduce (2x collective bytes on the slowest link class); the reduce
+  itself accumulates in fp32 on TPU.
+* int8 error-feedback compression (1-bit-Adam-style residual carrying):
+  q_t = Q(g_t + e_t);  e_{t+1} = (g_t + e_t) - DQ(q_t).
+  The residual state makes the quantization error telescope instead of
+  accumulate, preserving convergence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_allreduce_cast(grads):
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads, residual):
+    """Returns (quantized tree of (int8, scale) pairs, new residual tree)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(residual)
+    qs, new_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        x = g.astype(jnp.float32) + e
+        q, s = _quantize_int8(x)
+        qs.append((q, s))
+        new_e.append(x - _dequantize_int8(q, s))
+    return treedef.unflatten(qs), treedef.unflatten(new_e)
+
+
+def ef_decompress(qs):
+    return jax.tree_util.tree_map(
+        lambda p: _dequantize_int8(*p),
+        qs, is_leaf=lambda p: isinstance(p, tuple) and len(p) == 2)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run single-device (the 512-device override belongs ONLY to the
+# dry-run, which always runs in its own subprocess).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,196 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), incl. hypothesis
+shape/dtype sweeps and gradient checks through the custom_vjp wrappers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (block_diag_attention, lln_attention,
+                           lln_diag_attention)
+from repro.kernels import ref as kref
+from repro.kernels.block_diag import block_diag_pallas
+from repro.kernels.lln_attention import (lln_bidir_pallas, lln_causal_pallas,
+                                         lln_diag_fused_pallas)
+
+
+def _inputs(key, bh, bg, n, d, dv, dtype=jnp.float32, shift=-0.5):
+    kq, kk, kv = jax.random.split(key, 3)
+    qs = (jax.random.normal(kq, (bh, n, d)) + shift).astype(dtype)
+    ks = (jax.random.normal(kk, (bg, n, d)) + shift).astype(dtype)
+    v = jax.random.normal(kv, (bg, n, dv)).astype(dtype)
+    return qs, ks, v
+
+
+@settings(max_examples=12, deadline=None)
+@given(r=st.sampled_from([1, 2, 4]),
+       nblk=st.integers(1, 4),
+       blk=st.sampled_from([8, 16]),
+       d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**16))
+def test_lln_causal_kernel_sweep(r, nblk, blk, d, seed):
+    bg, n = 2, nblk * blk
+    qs, ks, v = _inputs(jax.random.PRNGKey(seed), bg * r, bg, n, d, d)
+    out = lln_causal_pallas(qs, ks, v, r=r, blk=blk, interpret=True)
+    ref = kref.lln_causal_ref(qs, ks, v, r=r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(r=st.sampled_from([1, 2]),
+       nblk=st.integers(1, 4),
+       blk=st.sampled_from([8, 16]),
+       dv=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**16))
+def test_lln_bidir_kernel_sweep(r, nblk, blk, dv, seed):
+    bg, n, d = 2, nblk * blk, 16
+    qs, ks, v = _inputs(jax.random.PRNGKey(seed), bg * r, bg, n, d, dv)
+    out = lln_bidir_pallas(qs, ks, v, r=r, blk=blk, interpret=True)
+    ref = kref.lln_bidir_ref(qs, ks, v, r=r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(r=st.sampled_from([1, 4]),
+       causal=st.booleans(),
+       blk=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**16))
+def test_block_diag_kernel_sweep(r, causal, blk, seed):
+    bg, n, d = 2, 3 * blk, 16
+    q, k, v = _inputs(jax.random.PRNGKey(seed), bg * r, bg, n, d, d, shift=0)
+    out = block_diag_pallas(q, k, v, r=r, blk=blk, causal=causal,
+                            interpret=True)
+    ref = kref.block_diag_ref(q, k, v, block=blk, causal=causal, r=r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_fused_lln_diag_kernel():
+    key = jax.random.PRNGKey(0)
+    qs, ks, v = _inputs(key, 4, 2, 48, 16, 16)
+    q, k, _ = _inputs(jax.random.PRNGKey(1), 4, 2, 48, 16, 16, shift=0)
+    out = lln_diag_fused_pallas(qs, ks, q, k, v, r=2, blk=16, causal=True,
+                                interpret=True)
+    ref = kref.lln_diag_fused_ref(qs, ks, q, k, v, block=16, causal=True, r=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_fused_kernel_rejects_bidir():
+    with pytest.raises(ValueError):
+        lln_diag_fused_pallas(jnp.zeros((1, 16, 8)), jnp.zeros((1, 16, 8)),
+                              jnp.zeros((1, 16, 8)), jnp.zeros((1, 16, 8)),
+                              jnp.zeros((1, 16, 8)), causal=False)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernels_dtype(dtype):
+    qs, ks, v = _inputs(jax.random.PRNGKey(2), 4, 2, 32, 16, 16, dtype=dtype)
+    out = lln_causal_pallas(qs, ks, v, r=2, blk=16, interpret=True)
+    ref = kref.lln_causal_ref(qs, ks, v, r=2)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-4)
+
+
+class TestPublicOps:
+    def _model_inputs(self, key, b=2, n=32, h=4, g=2, d=16):
+        kq, kk, kv = jax.random.split(key, 3)
+        return (jax.random.normal(kq, (b, n, h, d)),
+                jax.random.normal(kk, (b, n, g, d)),
+                jax.random.normal(kv, (b, n, g, d)))
+
+    def test_lln_attention_grads_match_ref(self):
+        q, k, v = self._model_inputs(jax.random.PRNGKey(0))
+        alpha = jnp.full((4,), 1.5)
+        beta = jnp.full((2,), 1.2)
+        from repro.core import lln_causal
+
+        def loss_kernel(q, k, v):
+            return jnp.sum(lln_attention(q, k, v, alpha, beta, True, 16) ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(lln_causal(q, jnp.repeat(k, 2, 2),
+                                      jnp.repeat(v, 2, 2), alpha,
+                                      jnp.repeat(beta, 2), chunk=16) ** 2)
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-3)
+
+    def test_block_diag_attention_grad_finite(self):
+        q, k, v = self._model_inputs(jax.random.PRNGKey(1))
+        g = jax.grad(lambda q: jnp.sum(
+            block_diag_attention(q, k, v, 16, True) ** 2))(q)
+        assert np.all(np.isfinite(np.asarray(g)))
+
+    def test_lln_diag_attention_matches_unfused(self):
+        q, k, v = self._model_inputs(jax.random.PRNGKey(2))
+        alpha = jnp.full((4,), 1.5)
+        beta = jnp.full((2,), 1.2)
+        fused = lln_diag_attention(q, k, v, alpha, beta, True, 16)
+        lln = lln_attention(q, k, v, alpha, beta, True, 16)
+        diag = block_diag_attention(q, k, v, 16, True)
+        np.testing.assert_allclose(np.asarray(fused),
+                                   np.asarray(0.5 * (lln + diag)), atol=1e-4)
+
+    def test_unaligned_seq_falls_back(self):
+        q, k, v = self._model_inputs(jax.random.PRNGKey(3), n=30)
+        out = lln_attention(q, k, v, 1.0, 1.0, True, 16)
+        assert out.shape == q.shape
+        assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+class TestSSDKernel:
+    def _inputs(self, key, b=2, l=48, h=4, g=2, p=8, s=4):
+        ks = jax.random.split(key, 4)
+        xbar = jax.random.normal(ks[0], (b, l, h, p))
+        b_in = jax.random.normal(ks[1], (b, l, g, s))
+        c_in = jax.random.normal(ks[2], (b, l, g, s))
+        log_a = -jax.nn.softplus(jax.random.normal(ks[3], (b, l, h)))
+        return xbar, b_in, c_in, log_a
+
+    @settings(max_examples=8, deadline=None)
+    @given(g=st.sampled_from([1, 2, 4]), nblk=st.integers(1, 3),
+           seed=st.integers(0, 2**16))
+    def test_ssd_kernel_sweep(self, g, nblk, seed):
+        from repro.kernels import ssd_scan
+        from repro.models.ssm import ssd_chunked
+        xbar, b_in, c_in, log_a = self._inputs(
+            jax.random.PRNGKey(seed), l=nblk * 16, g=g)
+        y = ssd_scan(xbar, b_in, c_in, log_a, 16)
+        rep = 4 // g
+        bf = jnp.repeat(b_in, rep, 2)
+        cf = jnp.repeat(c_in, rep, 2)
+        y_ref, _ = ssd_chunked(xbar, bf, cf, log_a, chunk=16)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=3e-4)
+
+    def test_ssd_kernel_grads(self):
+        from repro.kernels import ssd_scan
+        from repro.models.ssm import ssd_chunked
+        xbar, b_in, c_in, log_a = self._inputs(jax.random.PRNGKey(0))
+        bf = jnp.repeat(b_in, 2, 2)
+        cf = jnp.repeat(c_in, 2, 2)
+        gk = jax.grad(lambda x, a: jnp.sum(
+            ssd_scan(x, b_in, c_in, a, 16) ** 2), argnums=(0, 1))(
+                xbar, log_a)
+        gr = jax.grad(lambda x, a: jnp.sum(
+            ssd_chunked(x, bf, cf, a, chunk=16)[0] ** 2), argnums=(0, 1))(
+                xbar, log_a)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=3e-3)
+
+    def test_mamba_block_with_kernel_matches_jnp(self):
+        from repro.configs import get_config
+        from repro.models.ssm import ssm_apply, ssm_init
+        cfg = get_config("mamba2-130m", smoke=True).replace(
+            compute_dtype="float32", ssm_chunk=16)
+        p = ssm_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+        y_jnp = ssm_apply(p, x, cfg)
+        y_k = ssm_apply(p, x, cfg.replace(use_kernel=True))
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_jnp),
+                                   atol=1e-4)

@@ -1,0 +1,96 @@
+"""Optimizer substrate: AdamW convergence, clipping, schedules, gradient
+compression (error feedback preserves convergence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         bf16_allreduce_cast, clip_by_global_norm,
+                         ef_compress, ef_decompress, ef_init, global_norm,
+                         warmup_cosine, warmup_linear)
+
+
+def _quadratic_problem(key, dim=16):
+    a = jax.random.normal(key, (dim, dim))
+    target = jax.random.normal(jax.random.fold_in(key, 1), (dim,))
+
+    def loss(p):
+        return 0.5 * jnp.sum((a @ (p["x"] - target)) ** 2)
+    return loss, {"x": jnp.zeros((dim,))}, target
+
+
+def test_adamw_converges_on_quadratic():
+    loss, params, target = _quadratic_problem(jax.random.PRNGKey(0))
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0)
+    for _ in range(400):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, 0.05, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_weight_decay_shrinks_params():
+    params = {"x": jnp.ones((4,))}
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.5)
+    zero_g = {"x": jnp.zeros((4,))}
+    params2, _, _ = adamw_update(zero_g, state, params, 0.1, cfg)
+    assert float(jnp.max(params2["x"])) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == 10.0
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    # below threshold -> untouched
+    same, _ = clip_by_global_norm(g, 100.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 3.0)
+
+
+def test_schedules():
+    assert float(warmup_cosine(0, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) == 0.0
+    assert float(warmup_cosine(10, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) == 1.0
+    end = float(warmup_cosine(100, peak_lr=1.0, warmup_steps=10,
+                              total_steps=100))
+    assert abs(end - 0.1) < 1e-6
+    assert float(warmup_linear(100, peak_lr=1.0, warmup_steps=10,
+                               total_steps=100)) == 0.0
+
+
+def test_ef_compression_roundtrip_small_error():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+    res = ef_init(g)
+    q, res2 = ef_compress(g, res)
+    deq = ef_decompress(q)
+    err = float(jnp.max(jnp.abs(deq["w"] - g["w"])))
+    assert err < float(jnp.max(jnp.abs(g["w"]))) / 100
+    # residual equals the quantization error exactly
+    np.testing.assert_allclose(np.asarray(res2["w"]),
+                               np.asarray(g["w"] - deq["w"]), atol=1e-6)
+
+
+def test_ef_compression_preserves_convergence():
+    """SGD with int8 error-feedback compressed grads still converges —
+    the distributed-optimization trick validated numerically."""
+    loss, params, target = _quadratic_problem(jax.random.PRNGKey(1), dim=8)
+    res = ef_init(params)
+    p_plain = params
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        q, res = ef_compress(g, res)
+        g_hat = ef_decompress(q)
+        params = jax.tree_util.tree_map(lambda p, gg: p - 0.01 * gg,
+                                        params, g_hat)
+        g2 = jax.grad(loss)(p_plain)
+        p_plain = jax.tree_util.tree_map(lambda p, gg: p - 0.01 * gg,
+                                         p_plain, g2)
+    assert float(loss(params)) < 1.5 * max(float(loss(p_plain)), 1e-3)
+
+
+def test_bf16_cast():
+    g = {"w": jnp.ones((4,), jnp.float32)}
+    out = bf16_allreduce_cast(g)
+    assert out["w"].dtype == jnp.bfloat16
