@@ -153,6 +153,61 @@ def lln_causal(
 
 
 # ---------------------------------------------------------------------------
+# Analytic gradients — the quadratic-form oracle for the Pallas backward
+# kernels (kernels/lln_backward.py implements the same decomposition in
+# chunked/linear form; tests compare both against jax.vjp of lln_causal).
+# ---------------------------------------------------------------------------
+
+def lln_grads(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    g: jnp.ndarray,
+    *,
+    causal: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Analytic (dq, dk, dv) of LLN attention w.r.t. the cotangent ``g``.
+
+    Derivation (quotient rule through out = num/den, den = Phi(q).z + EPS):
+    with u_i = g_i/den_i and w_i = (g_i . out_i)/den_i,
+
+        dPhi(q)_i = sum_j M_ij (u_i . v_j - w_i) Phi(k)_j
+        dPhi(k)_j = sum_i M_ij (u_i . v_j - w_i) Phi(q)_i
+        dv_j      = sum_i M_ij (Phi(q)_i . Phi(k)_j) u_i
+
+    (M the causal mask), then dq = alpha * Phi(q) * dPhi(q) elementwise
+    (exp feature map; the stop-gradient stabilization constants drop out),
+    and likewise for k.  O(N^2) memory — a test oracle, not a training path.
+    All heads are full (repeat KV before calling for GQA).
+    """
+    fq = feature_map_q(q.astype(jnp.float32), alpha)
+    fk = feature_map_k(k.astype(jnp.float32), beta)
+    vf = v.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    scores = jnp.einsum("bihd,bjhd->bhij", fq, fk)
+    if causal:
+        n = q.shape[1]
+        scores = scores * jnp.tril(jnp.ones((n, n), jnp.float32))
+    den = jnp.sum(scores, axis=-1) + EPS                      # (B, H, N)
+    out = jnp.einsum("bhij,bjhv->bihv", scores, vf) \
+        / den.transpose(0, 2, 1)[..., None]
+    u = gf / den.transpose(0, 2, 1)[..., None]                # (B, N, H, Dv)
+    w = jnp.sum(gf * out, axis=-1) / den.transpose(0, 2, 1)   # (B, N, H)
+    gmat = jnp.einsum("bihv,bjhv->bhij", u, vf) \
+        - w.transpose(0, 2, 1)[..., None]
+    if causal:
+        gmat = gmat * jnp.tril(jnp.ones((q.shape[1],) * 2, jnp.float32))
+    alpha_b = _bcast(jnp.asarray(alpha, jnp.float32), fq)
+    beta_b = _bcast(jnp.asarray(beta, jnp.float32), fk)
+    dq = alpha_b * fq * jnp.einsum("bhij,bjhd->bihd", gmat, fk)
+    dk = beta_b * fk * jnp.einsum("bhij,bihd->bjhd", gmat, fq)
+    dv = jnp.einsum("bhij,bihv->bjhv", scores, u)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Decode: O(1)-per-token state ("KV state" replaces the KV cache).
 # ---------------------------------------------------------------------------
 

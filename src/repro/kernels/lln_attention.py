@@ -13,6 +13,20 @@ TPU adaptation (vs. the paper's PyTorch einsum implementation):
 Inputs are pre-scaled and pre-stabilized by ops.py:  qs = alpha*q - c_q,
 ks = beta*k - c_k  with per-(batch,head) global constants that cancel exactly
 in the normalized form (see core/lln.py docstring).
+
+Training residuals
+------------------
+Every forward entry point accepts ``return_res=True`` to additionally emit
+the per-row normalizer ``den_i = Phi(q_i) . (z_prefix + sum_block Phi(k))``
+(fp32, shape (BH, N)) — and, for the bidirectional variant, the reduced
+``(S, z)`` summary state.  ops.py saves these (together with the already
+pre-scaled ``qs``/``ks``) as custom_vjp residuals so the backward kernels in
+``lln_backward.py`` never recompute the stabilization constants or the
+forward normalizers: the quotient rule through ``out = num / den`` is applied
+analytically from the saved ``den`` and the forward output.  The fused
+LLN+diag kernel saves only the LLN ``den`` — its backward reconstructs the
+LLN component as ``2*out - diag_out`` from an in-kernel softmax recompute
+that it needs anyway for the softmax gradient.
 """
 from __future__ import annotations
 
@@ -30,7 +44,9 @@ EPS = 1e-6
 # Causal LLN: chunked scan with VMEM-resident state.
 # ---------------------------------------------------------------------------
 
-def _lln_causal_kernel(qs_ref, ks_ref, v_ref, o_ref, s_acc, z_acc, *, blk):
+def _lln_causal_kernel(qs_ref, ks_ref, v_ref, o_ref, *rest, blk, with_res):
+    den_ref = rest[0] if with_res else None
+    s_acc, z_acc = rest[-2:]
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -57,6 +73,8 @@ def _lln_causal_kernel(qs_ref, ks_ref, v_ref, o_ref, s_acc, z_acc, *, blk):
 
     den = intra_z + inter_z + EPS
     o_ref[0] = ((intra + inter) / den[:, None]).astype(o_ref.dtype)
+    if with_res:
+        den_ref[0] = den
 
     s_acc[...] += jax.lax.dot_general(fk, vv, (((0,), (0,)), ((), ())),
                                       preferred_element_type=jnp.float32)
@@ -64,27 +82,37 @@ def _lln_causal_kernel(qs_ref, ks_ref, v_ref, o_ref, s_acc, z_acc, *, blk):
 
 
 def lln_causal_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
-                      r: int = 1, blk: int = 256,
-                      interpret: bool = False) -> jnp.ndarray:
-    """qs: (BH, N, D) pre-scaled; ks/v: (BG, N, D[v]); N % blk == 0."""
+                      r: int = 1, blk: int = 256, interpret: bool = False,
+                      return_res: bool = False):
+    """qs: (BH, N, D) pre-scaled; ks/v: (BG, N, D[v]); N % blk == 0.
+
+    With ``return_res`` also emits the fp32 normalizer ``den`` (BH, N) used
+    by the custom backward (see module docstring).
+    """
     bh, n, d = qs.shape
     dv = v.shape[-1]
     nb = n // blk
     grid = (bh, nb)
-    return pl.pallas_call(
-        functools.partial(_lln_causal_kernel, blk=blk),
+    out_specs = [pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0))]
+    out_shape = [jax.ShapeDtypeStruct((bh, n, dv), v.dtype)]
+    if return_res:
+        out_specs.append(pl.BlockSpec((1, blk), lambda h, j: (h, j)))
+        out_shape.append(jax.ShapeDtypeStruct((bh, n), jnp.float32))
+    res = pl.pallas_call(
+        functools.partial(_lln_causal_kernel, blk=blk, with_res=return_res),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, blk, d), lambda h, j: (h, j, 0)),
             pl.BlockSpec((1, blk, d), lambda h, j, r=r: (h // r, j, 0)),
             pl.BlockSpec((1, blk, dv), lambda h, j, r=r: (h // r, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, n, dv), v.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((d, dv), jnp.float32),
                         pltpu.VMEM((1, d), jnp.float32)],
         interpret=interpret,
     )(qs, ks, v)
+    return tuple(res) if return_res else res[0]
 
 
 # ---------------------------------------------------------------------------
@@ -106,18 +134,25 @@ def _lln_reduce_kernel(ks_ref, v_ref, s_ref, z_ref):
     z_ref[0] += jnp.sum(fk, axis=0, keepdims=True)
 
 
-def _lln_apply_kernel(qs_ref, s_ref, z_ref, o_ref):
+def _lln_apply_kernel(qs_ref, s_ref, z_ref, o_ref, *rest, with_res):
     fq = jnp.exp(qs_ref[0].astype(jnp.float32))
     num = jnp.dot(fq, s_ref[0], preferred_element_type=jnp.float32)
     den = jnp.dot(fq, z_ref[0].reshape(-1, 1),
-                  preferred_element_type=jnp.float32)[:, 0]
-    o_ref[0] = (num / (den[:, None] + EPS)).astype(o_ref.dtype)
+                  preferred_element_type=jnp.float32)[:, 0] + EPS
+    o_ref[0] = (num / den[:, None]).astype(o_ref.dtype)
+    if with_res:
+        rest[0][0] = den
 
 
 def lln_bidir_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
-                     r: int = 1, blk: int = 256,
-                     interpret: bool = False) -> jnp.ndarray:
-    """qs: (BH, N, D); ks/v: (BG, N, D[v]); N % blk == 0."""
+                     r: int = 1, blk: int = 256, interpret: bool = False,
+                     return_res: bool = False):
+    """qs: (BH, N, D); ks/v: (BG, N, D[v]); N % blk == 0.
+
+    With ``return_res`` returns ``(out, s, z, den)``: the reduced summary
+    state (BG, D, DV)/(BG, 1, D) and the fp32 normalizer (BH, N), reused by
+    the backward pass.
+    """
     bh, n, d = qs.shape
     bg = ks.shape[0]
     dv = v.shape[-1]
@@ -137,18 +172,26 @@ def lln_bidir_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
                    jax.ShapeDtypeStruct((bg, 1, d), jnp.float32)],
         interpret=interpret,
     )(ks, v)
-    return pl.pallas_call(
-        _lln_apply_kernel,
+    out_specs = [pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0))]
+    out_shape = [jax.ShapeDtypeStruct((bh, n, dv), v.dtype)]
+    if return_res:
+        out_specs.append(pl.BlockSpec((1, blk), lambda h, j: (h, j)))
+        out_shape.append(jax.ShapeDtypeStruct((bh, n), jnp.float32))
+    res = pl.pallas_call(
+        functools.partial(_lln_apply_kernel, with_res=return_res),
         grid=(bh, nb),
         in_specs=[
             pl.BlockSpec((1, blk, d), lambda h, j: (h, j, 0)),
             pl.BlockSpec((1, d, dv), lambda h, j, r=r: (h // r, 0, 0)),
             pl.BlockSpec((1, 1, d), lambda h, j, r=r: (h // r, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, n, dv), v.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(qs, s, z)
+    if return_res:
+        return res[0], s, z, res[1]
+    return res[0]
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +201,9 @@ def lln_bidir_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
 # ---------------------------------------------------------------------------
 
 def _lln_diag_fused_kernel(qs_ref, ks_ref, q_ref, k_ref, v_ref, o_ref,
-                           s_acc, z_acc, *, blk, scale, causal):
+                           *rest, blk, scale, causal, with_res):
+    den_ref = rest[0] if with_res else None
+    s_acc, z_acc = rest[-2:]
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -184,7 +229,10 @@ def _lln_diag_fused_kernel(qs_ref, ks_ref, q_ref, k_ref, v_ref, o_ref,
     inter = jnp.dot(fq, s_acc[...], preferred_element_type=jnp.float32)
     inter_z = jnp.dot(fq, z_acc[...].reshape(-1, 1),
                       preferred_element_type=jnp.float32)[:, 0]
-    lln_out = (intra + inter) / (intra_z + inter_z + EPS)[:, None]
+    den = intra_z + inter_z + EPS
+    lln_out = (intra + inter) / den[:, None]
+    if with_res:
+        den_ref[0] = den
     s_acc[...] += jax.lax.dot_general(fk, vv, (((0,), (0,)), ((), ())),
                                       preferred_element_type=jnp.float32)
     z_acc[...] += jnp.sum(fk, axis=0, keepdims=True)
@@ -206,11 +254,14 @@ def _lln_diag_fused_kernel(qs_ref, ks_ref, q_ref, k_ref, v_ref, o_ref,
 
 def lln_diag_fused_pallas(qs, ks, q, k, v, *, r: int = 1, blk: int = 256,
                           causal: bool = True, scale: float | None = None,
-                          interpret: bool = False) -> jnp.ndarray:
+                          interpret: bool = False, return_res: bool = False):
     """Fused §4.2 hybrid.  Diag block size == LLN chunk size == blk.
 
     Causal only: the bidirectional LLN needs the full-sequence state, which
     the single-pass fusion cannot provide (use lln_bidir_pallas + block_diag).
+    With ``return_res`` also emits the LLN normalizer ``den`` (BH, N, fp32);
+    the diag softmax needs no residual — its backward recomputes the block
+    probabilities from the shared q/k loads.
     """
     if not causal:
         raise ValueError("fused lln+diag kernel is causal-only")
@@ -218,9 +269,14 @@ def lln_diag_fused_pallas(qs, ks, q, k, v, *, r: int = 1, blk: int = 256,
     dv = v.shape[-1]
     nb = n // blk
     scale = (d ** -0.5) if scale is None else scale
-    return pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0))]
+    out_shape = [jax.ShapeDtypeStruct((bh, n, dv), v.dtype)]
+    if return_res:
+        out_specs.append(pl.BlockSpec((1, blk), lambda h, j: (h, j)))
+        out_shape.append(jax.ShapeDtypeStruct((bh, n), jnp.float32))
+    res = pl.pallas_call(
         functools.partial(_lln_diag_fused_kernel, blk=blk, scale=scale,
-                          causal=causal),
+                          causal=causal, with_res=return_res),
         grid=(bh, nb),
         in_specs=[
             pl.BlockSpec((1, blk, d), lambda h, j: (h, j, 0)),
@@ -229,9 +285,10 @@ def lln_diag_fused_pallas(qs, ks, q, k, v, *, r: int = 1, blk: int = 256,
             pl.BlockSpec((1, blk, d), lambda h, j, r=r: (h // r, j, 0)),
             pl.BlockSpec((1, blk, dv), lambda h, j, r=r: (h // r, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, blk, dv), lambda h, j: (h, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, n, dv), v.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((d, dv), jnp.float32),
                         pltpu.VMEM((1, d), jnp.float32)],
         interpret=interpret,
     )(qs, ks, q, k, v)
+    return tuple(res) if return_res else res[0]

@@ -7,8 +7,18 @@ Responsibilities:
 * GQA ratio r = H // G threaded to the kernels' BlockSpec index maps
   (repeated KV is never materialized);
 * interpret-mode dispatch (CPU container -> interpret=True; TPU -> compiled);
-* custom_vjp: kernel forward, chunked-jnp backward (same math, linear
-  complexity, robust autodiff).
+* custom_vjp: Pallas forward AND a fused analytic backward (lln_backward.py
+  / block_diag.py).  The forward saves the pre-scaled (qs, ks), the kernel-
+  layout v, the output and the per-row normalizer ``den`` as residuals, so
+  the backward never recomputes the stabilization constants or the feature
+  maps' normalizers; GQA dK/dV is segment-summed over the ``h // r`` index
+  map without materializing repeated KV.  On compiled backends the backward
+  runs the Pallas kernels; under interpret mode it runs their lax.scan
+  twins (same math/residuals — see lln_backward.py docstring).  The legacy
+  jax.vjp-through-the-reference backward remains as (a) the fallback for
+  ragged sequence lengths (n % chunk != 0, same static dispatch as the
+  forward) and (b) an explicit ``pallas_bwd=False`` escape used by
+  ``benchmarks/bench_train_step.py`` to measure the speedup.
 
 alpha/beta are calibration constants (moment matching) — non-differentiable
 by construction; gradients w.r.t. them are zero.
@@ -23,9 +33,13 @@ import jax.numpy as jnp
 
 from repro.core import lln as core_lln
 from repro.core.diag import block_diag_attn as core_diag
-from .block_diag import block_diag_pallas
+from .block_diag import block_diag_bwd_pallas, block_diag_pallas
 from .lln_attention import (lln_bidir_pallas, lln_causal_pallas,
                             lln_diag_fused_pallas)
+from .lln_backward import (lln_bidir_bwd_pallas, lln_bidir_bwd_scan,
+                           lln_causal_bwd_pallas, lln_causal_bwd_scan,
+                           lln_diag_fused_bwd_pallas,
+                           lln_diag_fused_bwd_scan, block_diag_bwd_scan)
 from .ssd import ssd_pallas
 
 
@@ -33,6 +47,17 @@ def _interpret(flag: Optional[bool]) -> bool:
     if flag is not None:
         return flag
     return jax.default_backend() == "cpu"
+
+
+# Interpret-mode Pallas pays a full block copy per grid step, so the fused
+# backward dispatches to the lax.scan twins there (same math, same
+# residuals); compiled backends run the Pallas kernels.  Tests flip this to
+# exercise the kernel path end-to-end on CPU.
+FORCE_KERNEL_BWD = False
+
+
+def _kernel_bwd(interpret: Optional[bool]) -> bool:
+    return FORCE_KERNEL_BWD or not _interpret(interpret)
 
 
 def _to_kernel(t: jnp.ndarray) -> jnp.ndarray:
@@ -46,29 +71,50 @@ def _from_kernel(t: jnp.ndarray, b: int) -> jnp.ndarray:
     return t.reshape(b, bh // b, n, d).transpose(0, 2, 1, 3)
 
 
+def _bcast_heads(p, heads: int) -> jnp.ndarray:
+    p = jax.lax.stop_gradient(jnp.asarray(p, jnp.float32))
+    if p.ndim == 0:
+        p = jnp.broadcast_to(p, (heads,))
+    return p
+
+
 def _scaled_stabilized(q, k, alpha, beta):
-    """Return (qs, ks) in kernel layout, fp32-safe exponents."""
-    alpha = jax.lax.stop_gradient(jnp.asarray(alpha, jnp.float32))
-    beta = jax.lax.stop_gradient(jnp.asarray(beta, jnp.float32))
-    if alpha.ndim == 0:
-        alpha = jnp.broadcast_to(alpha, (q.shape[2],))
-    if beta.ndim == 0:
-        beta = jnp.broadcast_to(beta, (k.shape[2],))
+    """Return (qs, ks) in kernel layout plus the broadcast (alpha, beta);
+    fp32-safe exponents."""
+    alpha = _bcast_heads(alpha, q.shape[2])
+    beta = _bcast_heads(beta, k.shape[2])
     aq = q.astype(jnp.float32) * alpha[None, None, :, None]
     bk = k.astype(jnp.float32) * beta[None, None, :, None]
     c_q = jax.lax.stop_gradient(jnp.max(aq, axis=(1, 3), keepdims=True))
     c_k = jax.lax.stop_gradient(jnp.max(bk, axis=(1, 3), keepdims=True))
-    return _to_kernel(aq - c_q), _to_kernel(bk - c_k)
+    return _to_kernel(aq - c_q), _to_kernel(bk - c_k), alpha, beta
+
+
+def _dtype_tag(t: jnp.ndarray) -> jnp.ndarray:
+    """Zero-size carrier so the backward can recover a primal dtype from
+    residuals (residual leaves must be arrays, not dtypes)."""
+    return jnp.zeros((0,), t.dtype)
+
+
+def _zero_ab(alpha, beta):
+    zero_a = jnp.zeros_like(jnp.asarray(alpha, jnp.float32))
+    zero_b = jnp.zeros_like(jnp.asarray(beta, jnp.float32))
+    return zero_a, zero_b
 
 
 # ---------------------------------------------------------------------------
 # LLN attention.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
 def lln_attention(q, k, v, alpha, beta, causal: bool = True,
-                  chunk: int = 256, interpret: Optional[bool] = None):
-    """LLN attention via Pallas.  q: (B,N,H,D); k/v: (B,N,G,D[v])."""
+                  chunk: int = 256, interpret: Optional[bool] = None,
+                  pallas_bwd: bool = True):
+    """LLN attention via Pallas.  q: (B,N,H,D); k/v: (B,N,G,D[v]).
+
+    ``pallas_bwd=False`` forces the chunked-jnp reference backward (the
+    pre-fused behaviour) — kept for benchmarking and debugging.
+    """
     return _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret)
 
 
@@ -77,7 +123,7 @@ def _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret):
     g = k.shape[2]
     if n % chunk:
         return _lln_ref(q, k, v, alpha, beta, causal, chunk)
-    qs, ks = _scaled_stabilized(q, k, alpha, beta)
+    qs, ks, _, _ = _scaled_stabilized(q, k, alpha, beta)
     vk = _to_kernel(v)
     fn = lln_causal_pallas if causal else lln_bidir_pallas
     out = fn(qs, ks, vk, r=h // g, blk=chunk, interpret=_interpret(interpret))
@@ -93,24 +139,73 @@ def _lln_ref(q, k, v, alpha, beta, causal, chunk):
     if beta.ndim and beta.shape[0] == g and g != h:
         beta = jnp.repeat(beta, h // g)
     if causal:
-        return core_lln.lln_causal(q, kf, vf, alpha, beta, chunk=chunk)
-    return core_lln.lln_bidir(q, kf, vf, alpha, beta)
+        out = core_lln.lln_causal(q, kf, vf, alpha, beta, chunk=chunk)
+    else:
+        out = core_lln.lln_bidir(q, kf, vf, alpha, beta)
+    # The Pallas path emits v.dtype; pin the fallback to the same so jit'd
+    # callers don't recompile (or silently upcast) with the sequence length.
+    return out.astype(v.dtype)
 
 
-def _lln_vjp_fwd(q, k, v, alpha, beta, causal, chunk, interpret):
-    out = _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret)
-    return out, (q, k, v, alpha, beta)
+def _lln_vjp_fwd(q, k, v, alpha, beta, causal, chunk, interpret, pallas_bwd):
+    n, h = q.shape[1], q.shape[2]
+    g = k.shape[2]
+    if n % chunk or not pallas_bwd:
+        out = _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret)
+        return out, {"ref": (q, k, v, alpha, beta)}
+    b = q.shape[0]
+    qs, ks, alpha_b, beta_b = _scaled_stabilized(q, k, alpha, beta)
+    vk = _to_kernel(v)
+    ip = _interpret(interpret)
+    if causal:
+        out_k, den = lln_causal_pallas(qs, ks, vk, r=h // g, blk=chunk,
+                                       interpret=ip, return_res=True)
+        s = z = None
+    else:
+        out_k, s, z, den = lln_bidir_pallas(qs, ks, vk, r=h // g, blk=chunk,
+                                            interpret=ip, return_res=True)
+    res = {"pallas": (qs, ks, vk, out_k, den, s, z, alpha_b, beta_b,
+                      _dtype_tag(q), _dtype_tag(k), _dtype_tag(v),
+                      jnp.asarray(alpha, jnp.float32),
+                      jnp.asarray(beta, jnp.float32))}
+    return _from_kernel(out_k, b), res
 
 
-def _lln_vjp_bwd(causal, chunk, interpret, res, g_out):
-    q, k, v, alpha, beta = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _lln_ref(q_, k_, v_, alpha, beta, causal, chunk),
-        q, k, v)
-    dq, dk, dv = vjp(g_out)
-    zero_a = jnp.zeros_like(jnp.asarray(alpha, jnp.float32))
-    zero_b = jnp.zeros_like(jnp.asarray(beta, jnp.float32))
-    return dq, dk, dv, zero_a, zero_b
+def _lln_vjp_bwd(causal, chunk, interpret, pallas_bwd, res, g_out):
+    if "ref" in res:
+        q, k, v, alpha, beta = res["ref"]
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: _lln_ref(q_, k_, v_, alpha, beta, causal,
+                                        chunk), q, k, v)
+        dq, dk, dv = vjp(g_out)
+        return (dq, dk, dv) + _zero_ab(alpha, beta)
+    (qs, ks, vk, out_k, den, s, z, alpha_b, beta_b,
+     tq, tk, tv, alpha0, beta0) = res["pallas"]
+    b = g_out.shape[0]
+    r = (qs.shape[0] // b) // (ks.shape[0] // b)
+    gk = _to_kernel(g_out)
+    ip = _interpret(interpret)
+    if causal:
+        if _kernel_bwd(interpret):
+            dqs, dks, dvk = lln_causal_bwd_pallas(qs, ks, vk, gk, out_k,
+                                                  den, r=r, blk=chunk,
+                                                  interpret=ip)
+        else:
+            dqs, dks, dvk = lln_causal_bwd_scan(qs, ks, vk, gk, out_k, den,
+                                                r=r, blk=chunk)
+    else:
+        if _kernel_bwd(interpret):
+            dqs, dks, dvk = lln_bidir_bwd_pallas(qs, ks, vk, gk, out_k, den,
+                                                 s, z, r=r, blk=chunk,
+                                                 interpret=ip)
+        else:
+            dqs, dks, dvk = lln_bidir_bwd_scan(qs, ks, vk, gk, out_k, den,
+                                               s, z, r=r, blk=chunk)
+    # Chain rule through qs = alpha*q - stop_grad(c_q) (and same for k).
+    dq = (_from_kernel(dqs, b) * alpha_b[None, None, :, None]).astype(tq.dtype)
+    dk = (_from_kernel(dks, b) * beta_b[None, None, :, None]).astype(tk.dtype)
+    dv = _from_kernel(dvk, b).astype(tv.dtype)
+    return dq, dk, dv, jnp.zeros_like(alpha0), jnp.zeros_like(beta0)
 
 
 lln_attention.defvjp(_lln_vjp_fwd, _lln_vjp_bwd)
@@ -120,9 +215,10 @@ lln_attention.defvjp(_lln_vjp_fwd, _lln_vjp_bwd)
 # Block-diagonal softmax attention.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def block_diag_attention(q, k, v, block: int = 256, causal: bool = False,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         pallas_bwd: bool = True):
     """Block-diagonal softmax attention via Pallas. q: (B,N,H,D)."""
     return _diag_fwd_impl(q, k, v, block, causal, interpret)
 
@@ -143,18 +239,42 @@ def _diag_ref(q, k, v, block, causal):
     g = k.shape[2]
     kf = k if g == h else jnp.repeat(k, h // g, axis=2)
     vf = v if g == h else jnp.repeat(v, h // g, axis=2)
-    return core_diag(q, kf, vf, block=block, causal=causal)
+    return core_diag(q, kf, vf, block=block, causal=causal).astype(v.dtype)
 
 
-def _diag_vjp_fwd(q, k, v, block, causal, interpret):
-    return _diag_fwd_impl(q, k, v, block, causal, interpret), (q, k, v)
+def _diag_vjp_fwd(q, k, v, block, causal, interpret, pallas_bwd):
+    n = q.shape[1]
+    if n % block or not pallas_bwd:
+        return (_diag_fwd_impl(q, k, v, block, causal, interpret),
+                {"ref": (q, k, v)})
+    qk, kk, vk = _to_kernel(q), _to_kernel(k), _to_kernel(v)
+    out = block_diag_pallas(qk, kk, vk, r=q.shape[2] // k.shape[2],
+                            blk=block, causal=causal,
+                            interpret=_interpret(interpret))
+    res = {"pallas": (qk, kk, vk, _dtype_tag(q), _dtype_tag(k),
+                      _dtype_tag(v))}
+    return _from_kernel(out, q.shape[0]), res
 
 
-def _diag_vjp_bwd(block, causal, interpret, res, g_out):
-    q, k, v = res
-    _, vjp = jax.vjp(lambda q_, k_, v_: _diag_ref(q_, k_, v_, block, causal),
-                     q, k, v)
-    return vjp(g_out)
+def _diag_vjp_bwd(block, causal, interpret, pallas_bwd, res, g_out):
+    if "ref" in res:
+        q, k, v = res["ref"]
+        _, vjp = jax.vjp(lambda q_, k_, v_: _diag_ref(q_, k_, v_, block,
+                                                      causal), q, k, v)
+        return vjp(g_out)
+    qk, kk, vk, tq, tk, tv = res["pallas"]
+    b = g_out.shape[0]
+    r = (qk.shape[0] // b) // (kk.shape[0] // b)
+    if _kernel_bwd(interpret):
+        dq, dk, dv = block_diag_bwd_pallas(qk, kk, vk, _to_kernel(g_out),
+                                           r=r, blk=block, causal=causal,
+                                           interpret=_interpret(interpret))
+    else:
+        dq, dk, dv = block_diag_bwd_scan(qk, kk, vk, _to_kernel(g_out),
+                                         r=r, blk=block, causal=causal)
+    return (_from_kernel(dq, b).astype(tq.dtype),
+            _from_kernel(dk, b).astype(tk.dtype),
+            _from_kernel(dv, b).astype(tv.dtype))
 
 
 block_diag_attention.defvjp(_diag_vjp_fwd, _diag_vjp_bwd)
@@ -164,9 +284,10 @@ block_diag_attention.defvjp(_diag_vjp_fwd, _diag_vjp_bwd)
 # Fused LLN + Diag (causal): single-pass hybrid, shared block loads.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
 def lln_diag_attention(q, k, v, alpha, beta, causal: bool = True,
-                       block: int = 256, interpret: Optional[bool] = None):
+                       block: int = 256, interpret: Optional[bool] = None,
+                       pallas_bwd: bool = True):
     """0.5 * (LLN + block-diag softmax); fused kernel when causal."""
     return _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret)
 
@@ -174,16 +295,23 @@ def lln_diag_attention(q, k, v, alpha, beta, causal: bool = True,
 def _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret):
     b, n, h, _ = q.shape
     g = k.shape[2]
-    if not causal or n % block:
-        lln = _lln_fwd_impl(q, k, v, alpha, beta, causal, block, interpret)
-        diag = _diag_fwd_impl(q, k, v, block, causal, interpret)
-        return (0.5 * (lln.astype(jnp.float32) + diag.astype(jnp.float32))
-                ).astype(v.dtype)
-    qs, ks = _scaled_stabilized(q, k, alpha, beta)
-    out = lln_diag_fused_pallas(qs, ks, _to_kernel(q), _to_kernel(k),
-                                _to_kernel(v), r=h // g, blk=block,
-                                causal=True, interpret=_interpret(interpret))
-    return _from_kernel(out, b)
+    if n % block:
+        return _lln_diag_ref(q, k, v, alpha, beta, causal, block)
+    # Kernel-layout conversion hoisted: q/k/v are transposed exactly once
+    # per call, and the LLN pre-scaling runs once for both components.
+    qs, ks, _, _ = _scaled_stabilized(q, k, alpha, beta)
+    vk = _to_kernel(v)
+    ip = _interpret(interpret)
+    if causal:
+        out = lln_diag_fused_pallas(qs, ks, _to_kernel(q), _to_kernel(k),
+                                    vk, r=h // g, blk=block, causal=True,
+                                    interpret=ip)
+        return _from_kernel(out, b)
+    lln = lln_bidir_pallas(qs, ks, vk, r=h // g, blk=block, interpret=ip)
+    diag = block_diag_pallas(_to_kernel(q), _to_kernel(k), vk, r=h // g,
+                             blk=block, causal=False, interpret=ip)
+    out = 0.5 * (lln.astype(jnp.float32) + diag.astype(jnp.float32))
+    return _from_kernel(out, b).astype(v.dtype)
 
 
 def _lln_diag_ref(q, k, v, alpha, beta, causal, block):
@@ -193,20 +321,82 @@ def _lln_diag_ref(q, k, v, alpha, beta, causal, block):
             ).astype(v.dtype)
 
 
-def _lln_diag_vjp_fwd(q, k, v, alpha, beta, causal, block, interpret):
-    out = _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret)
-    return out, (q, k, v, alpha, beta)
+def _lln_diag_vjp_fwd(q, k, v, alpha, beta, causal, block, interpret,
+                      pallas_bwd):
+    b, n, h, _ = q.shape
+    g = k.shape[2]
+    if n % block or not pallas_bwd:
+        out = _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block,
+                                 interpret)
+        return out, {"ref": (q, k, v, alpha, beta)}
+    qs, ks, alpha_b, beta_b = _scaled_stabilized(q, k, alpha, beta)
+    qk, kk, vk = _to_kernel(q), _to_kernel(k), _to_kernel(v)
+    ip = _interpret(interpret)
+    tags = (_dtype_tag(q), _dtype_tag(k), _dtype_tag(v),
+            jnp.asarray(alpha, jnp.float32), jnp.asarray(beta, jnp.float32))
+    if causal:
+        out_k, den = lln_diag_fused_pallas(qs, ks, qk, kk, vk, r=h // g,
+                                           blk=block, causal=True,
+                                           interpret=ip, return_res=True)
+        res = {"pallas_fused": (qs, ks, qk, kk, vk, out_k, den,
+                                alpha_b, beta_b) + tags}
+        return _from_kernel(out_k, b), res
+    lln_k, s, z, den = lln_bidir_pallas(qs, ks, vk, r=h // g, blk=block,
+                                        interpret=ip, return_res=True)
+    diag_k = block_diag_pallas(qk, kk, vk, r=h // g, blk=block, causal=False,
+                               interpret=ip)
+    out = 0.5 * (lln_k.astype(jnp.float32) + diag_k.astype(jnp.float32))
+    res = {"pallas_bidir": (qs, ks, qk, kk, vk, lln_k, den, s, z,
+                            alpha_b, beta_b) + tags}
+    return _from_kernel(out, b).astype(v.dtype), res
 
 
-def _lln_diag_vjp_bwd(causal, block, interpret, res, g_out):
-    q, k, v, alpha, beta = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _lln_diag_ref(q_, k_, v_, alpha, beta, causal,
-                                         block), q, k, v)
-    dq, dk, dv = vjp(g_out)
-    zero_a = jnp.zeros_like(jnp.asarray(alpha, jnp.float32))
-    zero_b = jnp.zeros_like(jnp.asarray(beta, jnp.float32))
-    return dq, dk, dv, zero_a, zero_b
+def _lln_diag_vjp_bwd(causal, block, interpret, pallas_bwd, res, g_out):
+    if "ref" in res:
+        q, k, v, alpha, beta = res["ref"]
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: _lln_diag_ref(q_, k_, v_, alpha, beta, causal,
+                                             block), q, k, v)
+        dq, dk, dv = vjp(g_out)
+        return (dq, dk, dv) + _zero_ab(alpha, beta)
+    b = g_out.shape[0]
+    gk = _to_kernel(g_out)
+    ip = _interpret(interpret)
+    if causal:
+        (qs, ks, qk, kk, vk, out_k, den, alpha_b, beta_b,
+         tq, tk, tv, alpha0, beta0) = res["pallas_fused"]
+        r = (qs.shape[0] // b) // (ks.shape[0] // b)
+        if _kernel_bwd(interpret):
+            dqs, dqd, dks, dkd, dvk = lln_diag_fused_bwd_pallas(
+                qs, ks, qk, kk, vk, gk, out_k, den, r=r, blk=block,
+                interpret=ip)
+        else:
+            dqs, dqd, dks, dkd, dvk = lln_diag_fused_bwd_scan(
+                qs, ks, qk, kk, vk, gk, out_k, den, r=r, blk=block)
+    else:
+        (qs, ks, qk, kk, vk, lln_k, den, s, z, alpha_b, beta_b,
+         tq, tk, tv, alpha0, beta0) = res["pallas_bidir"]
+        r = (qs.shape[0] // b) // (ks.shape[0] // b)
+        gh = 0.5 * gk.astype(jnp.float32)
+        if _kernel_bwd(interpret):
+            dqs, dks, dvl = lln_bidir_bwd_pallas(qs, ks, vk, gh, lln_k, den,
+                                                 s, z, r=r, blk=block,
+                                                 interpret=ip)
+            dqd, dkd, dvd = block_diag_bwd_pallas(qk, kk, vk, gh, r=r,
+                                                  blk=block, causal=False,
+                                                  interpret=ip)
+        else:
+            dqs, dks, dvl = lln_bidir_bwd_scan(qs, ks, vk, gh, lln_k, den,
+                                               s, z, r=r, blk=block)
+            dqd, dkd, dvd = block_diag_bwd_scan(qk, kk, vk, gh, r=r,
+                                                blk=block, causal=False)
+        dvk = dvl + dvd
+    dq = (_from_kernel(dqs, b) * alpha_b[None, None, :, None]
+          + _from_kernel(dqd, b)).astype(tq.dtype)
+    dk = (_from_kernel(dks, b) * beta_b[None, None, :, None]
+          + _from_kernel(dkd, b)).astype(tk.dtype)
+    dv = _from_kernel(dvk, b).astype(tv.dtype)
+    return dq, dk, dv, jnp.zeros_like(alpha0), jnp.zeros_like(beta0)
 
 
 lln_diag_attention.defvjp(_lln_diag_vjp_fwd, _lln_diag_vjp_bwd)

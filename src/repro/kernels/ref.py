@@ -69,6 +69,89 @@ def block_diag_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(bh, n, dv).astype(v.dtype)
 
 
+def _segsum_kv(t: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Sum a per-query-head gradient over the r heads sharing each KV row."""
+    if r == 1:
+        return t
+    bh = t.shape[0]
+    return t.reshape(bh // r, r, *t.shape[1:]).sum(axis=1)
+
+
+def lln_fwd_res_ref(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool, r: int = 1):
+    """Forward oracle that also returns the fp32 (out, den) residual pair."""
+    fq = jnp.exp(qs.astype(jnp.float32))
+    fk = jnp.exp(_expand_kv(ks, r).astype(jnp.float32))
+    vf = _expand_kv(v, r).astype(jnp.float32)
+    scores = jnp.einsum("hid,hjd->hij", fq, fk)
+    if causal:
+        scores = scores * jnp.tril(jnp.ones(scores.shape[1:], jnp.float32))
+    den = jnp.sum(scores, axis=-1) + EPS
+    out = jnp.einsum("hij,hjv->hiv", scores, vf) / den[..., None]
+    return out, den
+
+
+def lln_bwd_ref(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray,
+                g: jnp.ndarray, o: jnp.ndarray, den: jnp.ndarray,
+                causal: bool, r: int = 1):
+    """Analytic LLN backward oracle (quadratic form), kernel layout.
+
+    Mirrors the normalizer-aware decomposition used by the Pallas backward:
+    u = g/den, w = (g.o)/den, G_ij = (u_i.v_j - w_i) * mask, then
+    dqs = fq * (G @ fk), dks = fk * (G^T @ fq), dv = scores^T @ u, with
+    dks/dv segment-summed over the r repeated query heads.
+    """
+    fq = jnp.exp(qs.astype(jnp.float32))
+    fk = jnp.exp(_expand_kv(ks, r).astype(jnp.float32))
+    vf = _expand_kv(v, r).astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    of = o.astype(jnp.float32)
+    u = gf / den[..., None]
+    w = jnp.sum(gf * of, axis=-1) / den
+    mask = jnp.tril(jnp.ones((qs.shape[1], qs.shape[1]), jnp.float32)) \
+        if causal else jnp.ones((qs.shape[1], qs.shape[1]), jnp.float32)
+    scores = jnp.einsum("hid,hjd->hij", fq, fk) * mask
+    gmat = (jnp.einsum("hiv,hjv->hij", u, vf) - w[..., None]) * mask
+    dqs = fq * jnp.einsum("hij,hjd->hid", gmat, fk)
+    dks = fk * jnp.einsum("hij,hid->hjd", gmat, fq)
+    dv = jnp.einsum("hij,hiv->hjv", scores, u)
+    return dqs, _segsum_kv(dks, r), _segsum_kv(dv, r)
+
+
+def block_diag_bwd_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       g: jnp.ndarray, *, block: int, causal: bool,
+                       r: int = 1, scale: float | None = None):
+    """Block-diagonal softmax backward oracle via jax.vjp (kernel layout)."""
+    kf = _expand_kv(k, r)
+    vf = _expand_kv(v, r)
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: block_diag_ref(
+            q_.astype(jnp.float32), k_.astype(jnp.float32),
+            v_.astype(jnp.float32), block=block, causal=causal, r=1,
+            scale=scale), q, kf, vf)
+    dq, dk, dv = vjp(g.astype(jnp.float32))
+    return dq, _segsum_kv(dk, r), _segsum_kv(dv, r)
+
+
+def lln_diag_fused_bwd_ref(qs, ks, q, k, v, g, o, den, *, block: int,
+                           r: int = 1, scale: float | None = None):
+    """Backward oracle for the fused causal LLN + diag kernel.
+
+    The LLN cotangent w needs the LLN component of the averaged output,
+    reconstructed exactly like the kernel does: 2*o - diag_out.
+    """
+    diag_out = block_diag_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), block=block,
+                              causal=True, r=r, scale=scale)
+    lln_out = 2.0 * o.astype(jnp.float32) - diag_out
+    gh = 0.5 * g.astype(jnp.float32)
+    dqs, dks, dv_lln = lln_bwd_ref(qs, ks, v, gh, lln_out, den,
+                                   causal=True, r=r)
+    dqd, dkd, dv_diag = block_diag_bwd_ref(q, k, v, gh, block=block,
+                                           causal=True, r=r, scale=scale)
+    return dqs, dqd, dks, dkd, dv_lln + dv_diag
+
+
 def lln_diag_fused_ref(qs: jnp.ndarray, ks: jnp.ndarray, q: jnp.ndarray,
                        k: jnp.ndarray, v: jnp.ndarray, *, block: int,
                        causal: bool, r: int = 1,

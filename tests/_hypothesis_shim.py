@@ -1,0 +1,75 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The container image does not ship hypothesis and nothing may be pip
+installed, so the property tests fall back to this shim: each strategy
+draws from a seeded `random.Random`, and ``@given`` re-runs the test body
+``max_examples`` times with fresh draws.  Shrinking, the example database
+and `@example` are not emulated — the sweep is a plain randomized grid,
+reproducible across runs because the seed is fixed.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+class strategies:
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    floats = staticmethod(floats)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # ``@settings`` is applied above ``@given`` in this repo, so the
+            # example count lands on the wrapper after decoration.
+            n = getattr(wrapper, "_shim_max_examples", 10)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {name: s.draw(rng) for name, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the drawn parameters from pytest's fixture resolution (the
+        # real hypothesis wrapper does the same): only e.g. ``self`` stays.
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # container has no
+    from _hypothesis_shim import given, settings       # hypothesis; use the
+    from _hypothesis_shim import strategies as st      # deterministic shim
 
 from repro.core import AttnConfig, flash_softmax, multi_head_attention, \
     naive_softmax

@@ -1,0 +1,20 @@
+"""Smoke test: the train-step benchmark runs end-to-end (interpret mode)."""
+import json
+
+from benchmarks.bench_train_step import IMPLS, run
+
+
+def test_bench_train_step_smoke(tmp_path):
+    out = tmp_path / "BENCH_train_step.json"
+    report = run(str(out), smoke=True, repeats=1, verbose=False)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk["modes"].keys() == {"jnp_fallback", "pallas_vjp"}
+    assert len(on_disk["results"]) == len(report["results"]) == 1
+    row = on_disk["results"][0]
+    for impl in IMPLS:
+        entry = row[impl]
+        assert entry["fwd_us"] > 0
+        assert entry["fwd_bwd_us"]["jnp_fallback"] > 0
+        assert entry["fwd_bwd_us"]["pallas_vjp"] > 0
+        assert entry["bwd_speedup"] > 0

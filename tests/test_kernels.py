@@ -4,14 +4,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # container has no
+    from _hypothesis_shim import given, settings       # hypothesis; use the
+    from _hypothesis_shim import strategies as st      # deterministic shim
 
 from repro.kernels import (block_diag_attention, lln_attention,
                            lln_diag_attention)
 from repro.kernels import ref as kref
-from repro.kernels.block_diag import block_diag_pallas
+from repro.kernels.block_diag import block_diag_bwd_pallas, block_diag_pallas
 from repro.kernels.lln_attention import (lln_bidir_pallas, lln_causal_pallas,
                                          lln_diag_fused_pallas)
+from repro.kernels.lln_backward import (lln_bidir_bwd_pallas,
+                                        lln_bidir_bwd_scan,
+                                        lln_causal_bwd_pallas,
+                                        lln_causal_bwd_scan,
+                                        lln_diag_fused_bwd_pallas,
+                                        lln_diag_fused_bwd_scan,
+                                        block_diag_bwd_scan)
 
 
 def _inputs(key, bh, bg, n, d, dv, dtype=jnp.float32, shift=-0.5):
@@ -140,6 +151,273 @@ class TestPublicOps:
         out = lln_attention(q, k, v, 1.0, 1.0, True, 16)
         assert out.shape == q.shape
         assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+class TestPallasBackwardKernels:
+    """Interpret-mode parity of the backward kernels vs the ref.py oracles
+    (kernel layout, small blocks — fast unit coverage of the kernel math)."""
+
+    def _inputs(self, seed, r, bg=2, nblk=3, blk=16, d=8, dv=8):
+        n = nblk * blk
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        qs = jax.random.normal(ks[0], (bg * r, n, d)) - 0.5
+        kk = jax.random.normal(ks[1], (bg, n, d)) - 0.5
+        v = jax.random.normal(ks[2], (bg, n, dv))
+        g = jax.random.normal(ks[3], (bg * r, n, dv))
+        return qs, kk, v, g, blk
+
+    @pytest.mark.parametrize("r", [1, 2, 4])
+    def test_causal_bwd_kernel(self, r):
+        qs, ks, v, g, blk = self._inputs(0, r)
+        o, den = lln_causal_pallas(qs, ks, v, r=r, blk=blk, interpret=True,
+                                   return_res=True)
+        outs = lln_causal_bwd_pallas(qs, ks, v, g, o, den, r=r, blk=blk,
+                                     interpret=True)
+        refs = kref.lln_bwd_ref(qs, ks, v, g, o, den, causal=True, r=r)
+        for a, b_ in zip(outs, refs):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-4)
+
+    @pytest.mark.parametrize("r", [1, 2])
+    def test_bidir_bwd_kernel(self, r):
+        qs, ks, v, g, blk = self._inputs(1, r)
+        o, s, z, den = lln_bidir_pallas(qs, ks, v, r=r, blk=blk,
+                                        interpret=True, return_res=True)
+        outs = lln_bidir_bwd_pallas(qs, ks, v, g, o, den, s, z, r=r, blk=blk,
+                                    interpret=True)
+        refs = kref.lln_bwd_ref(qs, ks, v, g, o, den, causal=False, r=r)
+        for a, b_ in zip(outs, refs):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-4)
+
+    @pytest.mark.parametrize("r", [1, 2])
+    def test_fused_bwd_kernel(self, r):
+        qs, ks, v, g, blk = self._inputs(2, r)
+        q, k, _, _, _ = self._inputs(3, r)
+        o, den = lln_diag_fused_pallas(qs, ks, q, k, v, r=r, blk=blk,
+                                       causal=True, interpret=True,
+                                       return_res=True)
+        outs = lln_diag_fused_bwd_pallas(qs, ks, q, k, v, g, o, den, r=r,
+                                         blk=blk, interpret=True)
+        refs = kref.lln_diag_fused_bwd_ref(qs, ks, q, k, v, g, o, den,
+                                           block=blk, r=r)
+        for a, b_ in zip(outs, refs):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-4)
+
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_block_diag_bwd_kernel(self, causal):
+        q, k, v, g, blk = self._inputs(4, 2)
+        outs = block_diag_bwd_pallas(q, k, v, g, r=2, blk=blk, causal=causal,
+                                     interpret=True)
+        refs = kref.block_diag_bwd_ref(q, k, v, g, block=blk, causal=causal,
+                                       r=2)
+        for a, b_ in zip(outs, refs):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-4)
+
+    @pytest.mark.parametrize("r", [1, 2])
+    def test_scan_twins_match_kernels(self, r):
+        """The lax.scan twins (interpret-mode dispatch) produce the same
+        gradients as the Pallas kernels for all four entry points."""
+        qs, ks, v, g, blk = self._inputs(5, r)
+        q, k, _, _, _ = self._inputs(6, r)
+        o, den = lln_causal_pallas(qs, ks, v, r=r, blk=blk, interpret=True,
+                                   return_res=True)
+        for a, b_ in zip(
+                lln_causal_bwd_scan(qs, ks, v, g, o, den, r=r, blk=blk),
+                lln_causal_bwd_pallas(qs, ks, v, g, o, den, r=r, blk=blk,
+                                      interpret=True)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-5)
+        o, s, z, den = lln_bidir_pallas(qs, ks, v, r=r, blk=blk,
+                                        interpret=True, return_res=True)
+        for a, b_ in zip(
+                lln_bidir_bwd_scan(qs, ks, v, g, o, den, s, z, r=r, blk=blk),
+                lln_bidir_bwd_pallas(qs, ks, v, g, o, den, s, z, r=r,
+                                     blk=blk, interpret=True)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-5)
+        o, den = lln_diag_fused_pallas(qs, ks, q, k, v, r=r, blk=blk,
+                                       causal=True, interpret=True,
+                                       return_res=True)
+        for a, b_ in zip(
+                lln_diag_fused_bwd_scan(qs, ks, q, k, v, g, o, den, r=r,
+                                        blk=blk),
+                lln_diag_fused_bwd_pallas(qs, ks, q, k, v, g, o, den, r=r,
+                                          blk=blk, interpret=True)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-5)
+        for a, b_ in zip(
+                block_diag_bwd_scan(q, k, v, g, r=r, blk=blk, causal=True),
+                block_diag_bwd_pallas(q, k, v, g, r=r, blk=blk, causal=True,
+                                      interpret=True)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-5)
+
+
+class TestPallasVJPGradParity:
+    """End-to-end gradients through the custom_vjp wrappers vs jax.vjp of
+    the core/lln.py reference: causal/bidir/fused x GQA r in {1, 4} x
+    N in {256, 512}, interpret mode, per-dtype tolerances."""
+
+    CHUNK = 128
+
+    def _model_inputs(self, seed, n, r, dtype=jnp.float32, b=1, g=1, d=16):
+        h = g * r
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        return (jax.random.normal(ks[0], (b, n, h, d)).astype(dtype),
+                jax.random.normal(ks[1], (b, n, g, d)).astype(dtype),
+                jax.random.normal(ks[2], (b, n, g, d)).astype(dtype))
+
+    def _ref_loss(self, mode, q, k, v, alpha, beta):
+        from repro.core import lln_bidir, lln_causal
+        from repro.core.diag import block_diag_attn
+        h, g = q.shape[2], k.shape[2]
+        kf = jnp.repeat(k, h // g, 2) if g != h else k
+        vf = jnp.repeat(v, h // g, 2) if g != h else v
+        beta_h = jnp.repeat(beta, h // g) if g != h else beta
+        causal = mode in ("causal", "fused")
+        if causal:
+            out = lln_causal(q, kf, vf, alpha, beta_h, chunk=self.CHUNK)
+        else:
+            out = lln_bidir(q, kf, vf, alpha, beta_h)
+        if mode in ("fused", "fused_bidir"):
+            diag = block_diag_attn(q, kf, vf, block=self.CHUNK,
+                                   causal=causal)
+            out = 0.5 * (out.astype(jnp.float32) + diag.astype(jnp.float32))
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    def _kernel_loss(self, mode, q, k, v, alpha, beta):
+        if mode in ("fused", "fused_bidir"):
+            out = lln_diag_attention(q, k, v, alpha, beta, mode == "fused",
+                                     self.CHUNK)
+        else:
+            out = lln_attention(q, k, v, alpha, beta, mode == "causal",
+                                self.CHUNK)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    @pytest.mark.parametrize("r", [1, 4])
+    def test_noncausal_hybrid_grads_match_core_vjp(self, r):
+        """The non-causal lln_diag backward branch (bidir LLN bwd + diag
+        bwd on the halved cotangent, dv summed) in both dispatch variants."""
+        from repro.kernels import ops as kops
+        q, k, v = self._model_inputs(17, 256, r)
+        alpha = jnp.full((q.shape[2],), 1.4)
+        beta = jnp.full((k.shape[2],), 1.1)
+        gr = jax.grad(lambda *a: self._ref_loss("fused_bidir", *a, alpha,
+                                                beta),
+                      argnums=(0, 1, 2))(q, k, v)
+        for force in (False, True):
+            kops.FORCE_KERNEL_BWD = force
+            try:
+                gk = jax.grad(lambda *a: self._kernel_loss(
+                    "fused_bidir", *a, alpha, beta),
+                    argnums=(0, 1, 2))(q, k, v)
+            finally:
+                kops.FORCE_KERNEL_BWD = False
+            for a, b_, nm in zip(gk, gr, "qkv"):
+                scale = max(1.0, float(jnp.max(jnp.abs(b_))))
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b_), atol=2e-3 * scale,
+                    err_msg=f"d{nm} force_kernel={force}")
+
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_block_diag_grads_match_ref_vjp(self, causal):
+        """End-to-end dq/dk/dv value parity of block_diag_attention's
+        Pallas backward wiring vs jax.vjp of the reference path."""
+        q, k, v = self._model_inputs(19, 256, 2)
+        gk = jax.grad(lambda q_, k_, v_: jnp.sum(block_diag_attention(
+            q_, k_, v_, self.CHUNK, causal) ** 2),
+            argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(lambda q_, k_, v_: jnp.sum(block_diag_attention(
+            q_, k_, v_, self.CHUNK, causal, None, False) ** 2),
+            argnums=(0, 1, 2))(q, k, v)
+        for a, b_, nm in zip(gk, gr, "qkv"):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-3, err_msg=f"d{nm}")
+
+    @pytest.mark.parametrize("n", [256, 512])
+    @pytest.mark.parametrize("r", [1, 4])
+    @pytest.mark.parametrize("mode", ["causal", "bidir", "fused"])
+    def test_grads_match_core_vjp_fp32(self, mode, r, n):
+        q, k, v = self._model_inputs(7, n, r)
+        alpha = jnp.full((q.shape[2],), 1.4)
+        beta = jnp.full((k.shape[2],), 1.1)
+        gk = jax.grad(lambda *a: self._kernel_loss(mode, *a, alpha, beta),
+                      argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(lambda *a: self._ref_loss(mode, *a, alpha, beta),
+                      argnums=(0, 1, 2))(q, k, v)
+        for a, b_, nm in zip(gk, gr, "qkv"):
+            scale = max(1.0, float(jnp.max(jnp.abs(b_))))
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-3 * scale, err_msg=f"d{nm}")
+
+    @pytest.mark.parametrize("mode", ["causal", "bidir", "fused"])
+    def test_grads_match_core_vjp_bf16(self, mode):
+        q, k, v = self._model_inputs(9, 256, 4, dtype=jnp.bfloat16)
+        alpha = jnp.full((q.shape[2],), 1.4)
+        beta = jnp.full((k.shape[2],), 1.1)
+        gk = jax.grad(lambda *a: self._kernel_loss(mode, *a, alpha, beta),
+                      argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(lambda *a: self._ref_loss(mode, *a, alpha, beta),
+                      argnums=(0, 1, 2))(q, k, v)
+        for a, b_, nm in zip(gk, gr, "qkv"):
+            assert a.dtype == jnp.bfloat16
+            af = np.asarray(a, np.float32)
+            bf = np.asarray(b_, np.float32)
+            scale = max(1.0, float(np.abs(bf).max()))
+            np.testing.assert_allclose(af, bf, atol=8e-2 * scale,
+                                       err_msg=f"d{nm}")
+
+    @pytest.mark.parametrize("mode", ["causal", "bidir", "fused"])
+    def test_kernel_bwd_path_matches_core_vjp(self, mode, monkeypatch):
+        """Force the Pallas kernel backward (instead of the scan twins the
+        CPU container dispatches to) through the full custom_vjp chain."""
+        from repro.kernels import ops as kops
+        monkeypatch.setattr(kops, "FORCE_KERNEL_BWD", True)
+        q, k, v = self._model_inputs(15, 256, 4)
+        alpha = jnp.full((q.shape[2],), 1.4)
+        beta = jnp.full((k.shape[2],), 1.1)
+        gk = jax.grad(lambda *a: self._kernel_loss(mode, *a, alpha, beta),
+                      argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(lambda *a: self._ref_loss(mode, *a, alpha, beta),
+                      argnums=(0, 1, 2))(q, k, v)
+        for a, b_, nm in zip(gk, gr, "qkv"):
+            scale = max(1.0, float(jnp.max(jnp.abs(b_))))
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-3 * scale, err_msg=f"d{nm}")
+
+    def test_grads_match_analytic_oracle(self):
+        from repro.core.lln import lln_grads
+        q, k, v = self._model_inputs(11, 256, 1, g=2)
+        alpha = jnp.full((2,), 1.4)
+        beta = jnp.full((2,), 1.1)
+        out, vjp = jax.vjp(
+            lambda q_, k_, v_: lln_attention(q_, k_, v_, alpha, beta, True,
+                                             self.CHUNK), q, k, v)
+        g = jnp.ones_like(out)
+        dq, dk, dv = vjp(g)
+        aq, ak, av = lln_grads(q, k, v, alpha, beta, g, causal=True)
+        for a, b_ in ((dq, aq), (dk, ak), (dv, av)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=2e-3)
+
+    def test_ragged_fallback_keeps_v_dtype(self):
+        # Regression: the n % chunk fallback used to return fp32 while the
+        # Pallas path returned v.dtype, recompiling jit'd callers per length.
+        q, k, v = self._model_inputs(13, 48, 2, dtype=jnp.bfloat16)
+        alpha, beta = 1.0, 1.0
+        for n in (48, 30):   # aligned (pallas) and ragged (jnp fallback)
+            out = lln_attention(q[:, :n], k[:, :n], v[:, :n], alpha, beta,
+                                True, 16)
+            assert out.dtype == jnp.bfloat16, n
+            fused = lln_diag_attention(q[:, :n], k[:, :n], v[:, :n], alpha,
+                                       beta, True, 16)
+            assert fused.dtype == jnp.bfloat16, n
+            diag = block_diag_attention(q[:, :n], k[:, :n], v[:, :n], 16,
+                                        True)
+            assert diag.dtype == jnp.bfloat16, n
 
 
 class TestSSDKernel:
