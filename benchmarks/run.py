@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
   bench_concentration  Fig. 2 (entropy + spectral gap vs temperature)
   bench_convergence    Fig. 8a / Table 1 proxy (+ Fig. 9 alpha tracking)
   bench_scaling        Table 2 (+ LRA Table 4 timing class)
+  bench_serve          serving path: kernel prefill + scanned decode
+                       (also writes BENCH_serve.json at the repo root)
 
 Roofline terms (EXPERIMENTS.md §Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
@@ -18,11 +20,16 @@ import time
 
 def main() -> None:
     from . import (bench_concentration, bench_convergence,
-                   bench_distribution, bench_scaling)
+                   bench_distribution, bench_scaling, bench_serve)
+
+    class _ServeAdapter:
+        run = staticmethod(bench_serve.run_rows)
+
     modules = [("distribution", bench_distribution),
                ("concentration", bench_concentration),
                ("convergence", bench_convergence),
-               ("scaling", bench_scaling)]
+               ("scaling", bench_scaling),
+               ("serve", _ServeAdapter)]
     all_rows = []
     for name, mod in modules:
         print(f"== {name} ==", file=sys.stderr, flush=True)

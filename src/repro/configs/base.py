@@ -29,6 +29,9 @@ class ArchConfig:
     diag_block: int = 256
     lln_chunk: int = 256
     use_kernel: bool = False         # Pallas kernels (TPU); jnp path on CPU
+    use_serve_kernel: bool = True    # kernelized serving path (state-emitting
+                                     # prefill, G-head tails); False = seed
+                                     # two-pass path, kept for benchmarking
     qk_norm: bool = False
     lln_fixed_ab: float = 0.0        # fixed alpha=beta (paper §A.8.4); 0=dynamic
     rope_theta: float = 10000.0

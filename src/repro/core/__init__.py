@@ -1,17 +1,17 @@
 """Core library: the paper's contribution as composable JAX modules."""
 from .attention import (AttnConfig, KVCache, LLNDecodeState, decode_lln,
-                        decode_softmax, flash_softmax, multi_head_attention,
-                        naive_softmax)
+                        decode_lln_chunk, decode_softmax, flash_softmax,
+                        multi_head_attention, naive_softmax)
 from .diag import block_diag_attn
-from .lln import LLNState, lln_bidir, lln_causal
+from .lln import LLNState, lln_bidir, lln_causal, lln_causal_scan
 from .moment_matching import (DEFAULT_A, DEFAULT_B, constants_for_dim,
                               fit_lln_constants, solve_alpha_beta)
 
 __all__ = [
     "AttnConfig", "KVCache", "LLNDecodeState", "LLNState",
     "multi_head_attention", "flash_softmax", "naive_softmax",
-    "decode_lln", "decode_softmax", "block_diag_attn",
-    "lln_bidir", "lln_causal",
+    "decode_lln", "decode_lln_chunk", "decode_softmax", "block_diag_attn",
+    "lln_bidir", "lln_causal", "lln_causal_scan",
     "DEFAULT_A", "DEFAULT_B", "constants_for_dim", "fit_lln_constants",
     "solve_alpha_beta",
 ]

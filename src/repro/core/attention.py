@@ -100,12 +100,16 @@ def flash_softmax(
     mask: Optional[jnp.ndarray] = None,
     scale: Optional[float] = None,
     prefix_len: int = 0,
+    q_start: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """q: (B,Nq,H,D); k/v: (B,Nk,G,D[v]).  mask: (B, Nk) key validity.
 
     Online-softmax accumulation over key chunks; O(Nq * chunk) live scores.
     Assumes query i attends keys j <= i + (Nk - Nq) when causal (i.e. the
     queries are the *last* Nq positions — the decode/prefill convention).
+    ``q_start`` overrides that convention with explicit absolute query
+    positions ``q_start + i`` — the multi-token decode case, where queries
+    sit mid-buffer in a max_len-sized cache (may be a traced scalar).
     ``prefix_len``: prefix-LM — keys < prefix_len are visible to every query
     (PaliGemma-style bidirectional image prefix).
     """
@@ -154,9 +158,11 @@ def flash_softmax(
     mc = mask.reshape(b, nkc, chunk).transpose(1, 0, 2)
     key_pos_all = jnp.arange(nkc * chunk).reshape(nkc, chunk)
 
+    q_off = (nk - nq) if q_start is None else q_start
+
     def q_block(carry, xs):
         qq, qbase = xs                           # (B,Cq,H,D), scalar
-        q_pos = qbase + jnp.arange(qchunk) + (nk - nq)
+        q_pos = qbase + jnp.arange(qchunk) + q_off
 
         def kv_step(inner, ys):
             m, l, acc = inner                    # (B,H,Cq), ..., (...,Dv)
@@ -306,28 +312,35 @@ class LLNDecodeState:
     """LLN decode state + rolling tail buffer for the diagonal component.
 
     The diag component of §4.2 only ever needs the current block's history,
-    so decode keeps a (B, diag_block, H, D) tail instead of the full cache —
-    this is what makes long_500k decode O(d^2 + block) per token.
+    so decode keeps a (B, diag_block, G, D) tail instead of the full cache —
+    this is what makes long_500k decode O(d^2 + block) per token.  Under GQA
+    the tail carries the G kv heads (cache bytes / r); it is repeated to the
+    H query heads only inside the tiny tail-softmax.  H-head tails (the seed
+    layout, still produced by MLA and the ``use_serve_kernel=False`` path)
+    are accepted too — the head count is read off the buffer shape.
     """
     lln: LLNState
-    tail_k: jnp.ndarray     # (B, BLK, H, D)
-    tail_v: jnp.ndarray     # (B, BLK, H, Dv)
+    tail_k: jnp.ndarray     # (B, BLK, G, D)
+    tail_v: jnp.ndarray     # (B, BLK, G, Dv)
     pos: jnp.ndarray        # scalar int32: absolute next position
 
     @staticmethod
     def init(batch: int, heads: int, d: int, dv: int, block: int,
-             dtype=jnp.bfloat16) -> "LLNDecodeState":
+             dtype=jnp.bfloat16,
+             kv_heads: Optional[int] = None) -> "LLNDecodeState":
+        g = kv_heads or heads
         return LLNDecodeState(
             lln=LLNState.init(batch, heads, d, dv),
-            tail_k=jnp.zeros((batch, block, heads, d), dtype),
-            tail_v=jnp.zeros((batch, block, heads, dv), dtype),
+            tail_k=jnp.zeros((batch, block, g, d), dtype),
+            tail_v=jnp.zeros((batch, block, g, dv), dtype),
             pos=jnp.zeros((), jnp.int32))
 
 
 def decode_softmax(cache: KVCache, q: jnp.ndarray, k_new: jnp.ndarray,
                    v_new: jnp.ndarray, *, scale: Optional[float] = None
                    ) -> tuple[jnp.ndarray, KVCache]:
-    """One-token softmax decode against a KV cache. q/k/v_new: (B,1,H|G,D)."""
+    """Softmax decode of T >= 1 tokens against a KV cache.
+    q/k/v_new: (B,T,H|G,D); within-chunk causality via explicit positions."""
     kc = jax.lax.dynamic_update_slice_in_dim(
         cache.k, k_new.astype(cache.k.dtype), cache.length, axis=1)
     vc = jax.lax.dynamic_update_slice_in_dim(
@@ -336,32 +349,90 @@ def decode_softmax(cache: KVCache, q: jnp.ndarray, k_new: jnp.ndarray,
     valid = jnp.arange(kc.shape[1])[None, :] < new_len
     valid = jnp.broadcast_to(valid, (q.shape[0], kc.shape[1]))
     out = flash_softmax(q, kc, vc, causal=True, chunk=min(1024, kc.shape[1]),
-                        mask=valid, scale=scale)
+                        mask=valid, scale=scale, q_start=cache.length)
     return out, KVCache(k=kc, v=vc, length=new_len)
+
+
+def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
+                     k_new: jnp.ndarray, v_new: jnp.ndarray,
+                     alpha: jnp.ndarray, beta: jnp.ndarray,
+                     *, impl: str = "lln_diag",
+                     use_kernel: bool = True
+                     ) -> tuple[jnp.ndarray, LLNDecodeState]:
+    """LLN(+Diag) decode of T >= 1 tokens.  q: (B,T,H,D); k/v_new: (B,T,G,D[v]).
+
+    The LLN state advance is vectorized over the chunk (one rescale, one
+    intra-chunk causal quadratic — kernels/ops.py:lln_decode_chunk when
+    ``use_kernel``).  The diag component runs one masked softmax over
+    [tail block ∪ chunk keys] with per-token block-diagonal visibility
+    derived from absolute positions, so a chunk may straddle a diag-block
+    boundary and still match T sequential single-token steps exactly.
+    """
+    b, t, h, d = q.shape
+    if use_kernel:
+        from repro.kernels import ops as kops
+        lln_out, lln_state = kops.lln_decode_chunk(state.lln, q, k_new,
+                                                   v_new, alpha, beta)
+    else:
+        lln_out, lln_state = lln_mod.decode_chunk(
+            state.lln, q, _repeat_kv(k_new, h), _repeat_kv(v_new, h),
+            alpha, beta)
+
+    # --- rolling tail update, vectorized: for each slot i the last chunk
+    # token writing it is j_i = j0 + block*((t-1-j0)//block), j0 = (i-pos)%blk.
+    block = state.tail_k.shape[1]
+    gt = state.tail_k.shape[2]          # tail head count (G, or H for seed)
+    k_t = _repeat_kv(k_new, gt) if k_new.shape[2] != gt else k_new
+    v_t = _repeat_kv(v_new, gt) if v_new.shape[2] != gt else v_new
+    pos = state.pos
+    idx = jnp.arange(block)
+    j0 = jnp.mod(idx - pos, block)
+    j_last = jnp.clip(j0 + block * ((t - 1 - j0) // block), 0, t - 1)
+    wrote = (j0 < t)[None, :, None, None]
+    tail_k = jnp.where(wrote, jnp.take(k_t, j_last, axis=1
+                                       ).astype(state.tail_k.dtype),
+                       state.tail_k)
+    tail_v = jnp.where(wrote, jnp.take(v_t, j_last, axis=1
+                                       ).astype(state.tail_v.dtype),
+                       state.tail_v)
+    new_state = LLNDecodeState(lln=lln_state, tail_k=tail_k, tail_v=tail_v,
+                               pos=pos + t)
+    if impl == "lln":
+        return lln_out, new_state
+
+    # --- diagonal component: one softmax over [tail ∪ chunk] keys.
+    # Absolute position of tail slot i (entries from the previous block get
+    # positions < the current block start and are masked; never-written
+    # slots get negative positions).
+    cur_base = (pos // block) * block
+    tail_pos = jnp.where(idx < pos - cur_base, cur_base + idx,
+                         cur_base + idx - block)
+    q_pos = pos + jnp.arange(t)
+    q_base = (q_pos // block) * block                   # block start per query
+    m_tail = (tail_pos[None, :] >= q_base[:, None]) \
+        & (tail_pos[None, :] >= 0)                      # (T, BLK)
+    m_chunk = (jnp.arange(t)[None, :] <= jnp.arange(t)[:, None]) \
+        & (q_base[None, :] == q_base[:, None])          # (T, T): j<=i, same blk
+    allowed = jnp.concatenate([m_tail, m_chunk], axis=1)
+
+    keys = jnp.concatenate(
+        [state.tail_k, k_t.astype(state.tail_k.dtype)], axis=1)
+    vals = jnp.concatenate(
+        [state.tail_v, v_t.astype(state.tail_v.dtype)], axis=1)
+    # GQA repeat only here, on the (BLK+T)-key tail-softmax operands.
+    kf = _repeat_kv(keys, h).astype(jnp.float32)
+    vf = _repeat_kv(vals, h).astype(jnp.float32)
+    s = jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32), kf) * (d ** -0.5)
+    s = jnp.where(allowed[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    diag_out = jnp.einsum("bhij,bjhv->bihv", p, vf)
+    out = 0.5 * (lln_out.astype(jnp.float32) + diag_out)
+    return out.astype(v_new.dtype), new_state
 
 
 def decode_lln(state: LLNDecodeState, q: jnp.ndarray, k_new: jnp.ndarray,
                v_new: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray,
                *, impl: str = "lln_diag") -> tuple[jnp.ndarray, LLNDecodeState]:
-    """One-token LLN(+Diag) decode.  q/k/v_new: (B, 1, H, D[v])."""
-    h = q.shape[2]
-    k_new = _repeat_kv(k_new, h)
-    v_new = _repeat_kv(v_new, h)
-    lln_out, lln_state = lln_mod.decode_step(state.lln, q, k_new, v_new,
-                                             alpha, beta)
-    block = state.tail_k.shape[1]
-    slot = jnp.mod(state.pos, block)
-    tail_k = jax.lax.dynamic_update_slice_in_dim(
-        state.tail_k, k_new.astype(state.tail_k.dtype), slot, axis=1)
-    tail_v = jax.lax.dynamic_update_slice_in_dim(
-        state.tail_v, v_new.astype(state.tail_v.dtype), slot, axis=1)
-    new_state = LLNDecodeState(lln=lln_state, tail_k=tail_k, tail_v=tail_v,
-                               pos=state.pos + 1)
-    if impl == "lln":
-        return lln_out, new_state
-    # Diagonal component: softmax over the current block's prefix (<= slot).
-    valid = jnp.arange(block)[None, :] <= slot
-    valid = jnp.broadcast_to(valid, (q.shape[0], block))
-    diag_out = naive_softmax(q, tail_k, tail_v, causal=False, mask=valid)
-    out = 0.5 * (lln_out.astype(jnp.float32) + diag_out.astype(jnp.float32))
-    return out.astype(v_new.dtype), new_state
+    """One-token LLN(+Diag) decode (T=1 :func:`decode_lln_chunk`)."""
+    return decode_lln_chunk(state, q, k_new, v_new, alpha, beta, impl=impl,
+                            use_kernel=False)

@@ -104,20 +104,41 @@ def lln_causal(
     """Causal LLN via chunked scan: intra-chunk masked quadratic + inter-chunk
     state pass.  O(N * (chunk*d + d^2)) compute, O(d^2) carried state.
     """
+    return lln_causal_scan(q, k, v, alpha, beta, chunk=chunk)[0]
+
+
+def lln_causal_scan(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    *,
+    chunk: int = 128,
+) -> tuple[jnp.ndarray, "LLNState"]:
+    """Causal LLN returning (out, final LLNState) — the state is the scan's
+    final ``(s, z)`` carry, which the pass computes anyway; :func:`prefill`
+    hands it to decode for free.  Ragged lengths pad the *feature-mapped*
+    keys with zeros so padded positions never leak into the carry.
+    """
     b, n, h, d = q.shape
     dv = v.shape[-1]
-    if n % chunk:
-        pad = chunk - n % chunk
-        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    nc = q.shape[1] // chunk
 
     from repro.distributed.sharding import constrain
 
-    fq = feature_map_q(q, alpha).astype(q.dtype)
-    fk = feature_map_k(k, beta).astype(k.dtype)
+    aq = q * _bcast(alpha, q)
+    bk = k * _bcast(beta, k)
+    c_k = _stab_const(bk, (1, 3))
+    fq = jnp.exp(aq - _stab_const(aq, (1, 3))).astype(q.dtype)
+    fk = jnp.exp(bk - c_k).astype(k.dtype)
     vf = v
+    if n % chunk:
+        pad = chunk - n % chunk
+        fq = jnp.pad(fq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        fk = jnp.pad(fk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = fq.shape[1] // chunk
+
     # (nc, B, C, H, D); constrained so the partitioner keeps batch on the
     # data axis and heads on the model axis (see flash_softmax).
     fq = fq.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
@@ -147,9 +168,10 @@ def lln_causal(
     z0 = jnp.zeros((b, h, d), jnp.float32)
     # remat: recompute intra-chunk scores in the backward instead of
     # stashing (C x C) blocks per step.
-    _, out = jax.lax.scan(jax.checkpoint(step), (s0, z0), (fq, fk, vf))
+    (s, z), out = jax.lax.scan(jax.checkpoint(step), (s0, z0), (fq, fk, vf))
     out = out.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, dv)
-    return out[:, :n].astype(v.dtype)
+    state = LLNState(s=s, z=z, c_k=c_k.astype(jnp.float32))
+    return out[:, :n].astype(v.dtype), state
 
 
 # ---------------------------------------------------------------------------
@@ -242,14 +264,13 @@ def prefill(
     *,
     chunk: int = 128,
 ) -> tuple[jnp.ndarray, LLNState]:
-    """Causal forward over a prompt, returning outputs and the decode state."""
-    out = lln_causal(q, k, v, alpha, beta, chunk=chunk)
-    bk = k * _bcast(beta, k)
-    c_k = _stab_const(bk, (1, 3))
-    fk = jnp.exp(bk - c_k).astype(jnp.float32)
-    s = jnp.einsum("bnhd,bnhv->bhdv", fk, v.astype(jnp.float32))
-    z = jnp.sum(fk, axis=1)
-    return out, LLNState(s=s, z=z, c_k=c_k.astype(jnp.float32))
+    """Causal forward over a prompt, returning outputs and the decode state.
+
+    The state is the causal scan's final carry — no second full-key pass
+    (the old implementation re-accumulated ``(s, z)`` with an extra einsum
+    over every key after the scan already computed them).
+    """
+    return lln_causal_scan(q, k, v, alpha, beta, chunk=chunk)
 
 
 def decode_step(
@@ -281,3 +302,43 @@ def decode_step(
     den = jnp.einsum("bhd,bhd->bh", fq, z)
     out = (num / (den[..., None] + EPS)).astype(v.dtype)[:, None]  # (B,1,H,Dv)
     return out, LLNState(s=s, z=z, c_k=c_new)
+
+
+def decode_chunk(
+    state: LLNState,
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+) -> tuple[jnp.ndarray, LLNState]:
+    """Advance the state over T new tokens at once.  q/k/v: (B, T, H, D[v]).
+
+    :func:`decode_step` math vectorized over the chunk: one max-rescale of
+    the carried state against the chunk's keys, an intra-chunk causal
+    quadratic for the new-token interactions, and a per-row normalizer —
+    mathematically identical to T sequential :func:`decode_step` calls
+    (the normalized form is exactly invariant to the reference constant).
+    """
+    b, t, h, d = q.shape
+    dv = v.shape[-1]
+    bk = k * _bcast(beta, k)
+    c_new = jnp.maximum(state.c_k, jax.lax.stop_gradient(
+        jnp.max(bk, axis=(1, 3), keepdims=True)))       # (B,1,H,1)
+    r = jnp.exp(state.c_k - c_new)[:, 0, :, 0]          # (B,H) <= 1
+    fk = jnp.exp(bk - c_new).astype(jnp.float32)        # (B,T,H,D)
+    vf = v.astype(jnp.float32)
+    aq = q * _bcast(alpha, q)
+    fq = jnp.exp(aq - _stab_const(aq, (1, 3))).astype(jnp.float32)
+    s0 = state.s * r[..., None, None]
+    z0 = state.z * r[..., None]
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.einsum("bihd,bjhd->bhij", fq, fk) * causal[None, None]
+    intra = jnp.einsum("bhij,bjhv->bihv", scores, vf)
+    intra_z = jnp.sum(scores, axis=-1).transpose(0, 2, 1)        # (B,T,H)
+    inter = jnp.einsum("bihd,bhdv->bihv", fq, s0)
+    inter_z = jnp.einsum("bihd,bhd->bih", fq, z0)
+    out = (intra + inter) / (intra_z + inter_z + EPS)[..., None]
+    s = s0 + jnp.einsum("bjhd,bjhv->bhdv", fk, vf)
+    z = z0 + jnp.sum(fk, axis=1)
+    return out.astype(v.dtype), LLNState(s=s, z=z, c_k=c_new)

@@ -3,8 +3,9 @@
 Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers
 with custom_vjp and interpret-mode dispatch for the CPU container.
 """
-from .ops import (block_diag_attention, lln_attention,
-                  lln_diag_attention, ssd_scan)
+from .ops import (block_diag_attention, lln_attention, lln_decode_chunk,
+                  lln_diag_attention, lln_prefill, ssd_scan)
 
 __all__ = ["lln_attention", "block_diag_attention",
-           "lln_diag_attention", "ssd_scan"]
+           "lln_diag_attention", "lln_prefill", "lln_decode_chunk",
+           "ssd_scan"]

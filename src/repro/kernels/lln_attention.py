@@ -44,8 +44,13 @@ EPS = 1e-6
 # Causal LLN: chunked scan with VMEM-resident state.
 # ---------------------------------------------------------------------------
 
-def _lln_causal_kernel(qs_ref, ks_ref, v_ref, o_ref, *rest, blk, with_res):
+def _lln_causal_kernel(qs_ref, ks_ref, v_ref, o_ref, *rest, blk, with_res,
+                       with_state):
+    # rest = (*extra outputs, s_acc, z_acc): den if with_res, then the final
+    # (s, z) state outputs if with_state.
     den_ref = rest[0] if with_res else None
+    s_out = rest[int(with_res)] if with_state else None
+    z_out = rest[int(with_res) + 1] if with_state else None
     s_acc, z_acc = rest[-2:]
     j = pl.program_id(1)
 
@@ -79,15 +84,23 @@ def _lln_causal_kernel(qs_ref, ks_ref, v_ref, o_ref, *rest, blk, with_res):
     s_acc[...] += jax.lax.dot_general(fk, vv, (((0,), (0,)), ((), ())),
                                       preferred_element_type=jnp.float32)
     z_acc[...] += jnp.sum(fk, axis=0, keepdims=True)
+    if with_state:
+        # The (h, 0, 0)-mapped output blocks are revisited every j; the
+        # value committed after the last grid step is the final carry.
+        s_out[0] = s_acc[...]
+        z_out[0] = z_acc[...]
 
 
 def lln_causal_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
                       r: int = 1, blk: int = 256, interpret: bool = False,
-                      return_res: bool = False):
+                      return_res: bool = False, return_state: bool = False):
     """qs: (BH, N, D) pre-scaled; ks/v: (BG, N, D[v]); N % blk == 0.
 
     With ``return_res`` also emits the fp32 normalizer ``den`` (BH, N) used
-    by the custom backward (see module docstring).
+    by the custom backward (see module docstring).  With ``return_state``
+    also emits the final running state ``s`` (BH, D, DV) and ``z`` (BH, 1, D)
+    — the O(d^2) decode state, produced by the same pass that computes the
+    prefill outputs (serving path; see ops.lln_prefill).
     """
     bh, n, d = qs.shape
     dv = v.shape[-1]
@@ -98,8 +111,14 @@ def lln_causal_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
     if return_res:
         out_specs.append(pl.BlockSpec((1, blk), lambda h, j: (h, j)))
         out_shape.append(jax.ShapeDtypeStruct((bh, n), jnp.float32))
+    if return_state:
+        out_specs.append(pl.BlockSpec((1, d, dv), lambda h, j: (h, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((bh, d, dv), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((bh, 1, d), jnp.float32))
     res = pl.pallas_call(
-        functools.partial(_lln_causal_kernel, blk=blk, with_res=return_res),
+        functools.partial(_lln_causal_kernel, blk=blk, with_res=return_res,
+                          with_state=return_state),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, blk, d), lambda h, j: (h, j, 0)),
@@ -112,7 +131,7 @@ def lln_causal_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray, *,
                         pltpu.VMEM((1, d), jnp.float32)],
         interpret=interpret,
     )(qs, ks, v)
-    return tuple(res) if return_res else res[0]
+    return tuple(res) if (return_res or return_state) else res[0]
 
 
 # ---------------------------------------------------------------------------
@@ -292,3 +311,69 @@ def lln_diag_fused_pallas(qs, ks, q, k, v, *, r: int = 1, blk: int = 256,
         interpret=interpret,
     )(qs, ks, q, k, v)
     return tuple(res) if return_res else res[0]
+
+
+# ---------------------------------------------------------------------------
+# Chunked multi-token decode: advance the (S, z) state over T new tokens in
+# one grid step per (batch, head) — the serving-path building block for
+# speculative/multi-token decode (ops.lln_decode_chunk).
+# ---------------------------------------------------------------------------
+
+def _lln_decode_kernel(qs_ref, ks_ref, v_ref, s0_ref, z0_ref,
+                       o_ref, s1_ref, z1_ref, *, t):
+    fq = jnp.exp(qs_ref[0].astype(jnp.float32))          # (t, d)
+    fk = jnp.exp(ks_ref[0].astype(jnp.float32))          # (t, d)
+    vv = v_ref[0].astype(jnp.float32)                    # (t, dv)
+    s0 = s0_ref[0]                                       # (d, dv) fp32
+    z0 = z0_ref[0]                                       # (1, d) fp32
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    causal = (row >= col).astype(jnp.float32)
+
+    scores = jax.lax.dot_general(fq, fk, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * causal
+    intra = jnp.dot(scores, vv, preferred_element_type=jnp.float32)
+    intra_z = jnp.sum(scores, axis=-1)
+    inter = jnp.dot(fq, s0, preferred_element_type=jnp.float32)
+    inter_z = jnp.dot(fq, z0.reshape(-1, 1),
+                      preferred_element_type=jnp.float32)[:, 0]
+    den = intra_z + inter_z + EPS
+    o_ref[0] = ((intra + inter) / den[:, None]).astype(o_ref.dtype)
+    s1_ref[0] = s0 + jax.lax.dot_general(fk, vv, (((0,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+    z1_ref[0] = z0 + jnp.sum(fk, axis=0, keepdims=True)
+
+
+def lln_decode_pallas(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray,
+                      s0: jnp.ndarray, z0: jnp.ndarray, *, r: int = 1,
+                      interpret: bool = False):
+    """qs: (BH, T, D) pre-scaled; ks/v: (BG, T, D[v]); s0: (BH, D, DV) and
+    z0: (BH, 1, D) pre-rescaled to the chunk's reference constant (fp32).
+
+    Returns (out (BH, T, DV), s1, z1).  T should be padded by the caller to
+    a sublane multiple with ks rows at NEG_INF (=> Phi(k) = 0, no state
+    contribution) and qs/v rows at 0 (output rows sliced off).
+    """
+    bh, t, d = qs.shape
+    dv = v.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_lln_decode_kernel, t=t),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, t, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda h, r=r: (h // r, 0, 0)),
+            pl.BlockSpec((1, t, dv), lambda h, r=r: (h // r, 0, 0)),
+            pl.BlockSpec((1, d, dv), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda h: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, dv), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, d, dv), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda h: (h, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bh, t, dv), v.dtype),
+                   jax.ShapeDtypeStruct((bh, d, dv), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, 1, d), jnp.float32)],
+        interpret=interpret,
+    )(qs, ks, v, s0, z0)

@@ -35,7 +35,7 @@ from repro.core import lln as core_lln
 from repro.core.diag import block_diag_attn as core_diag
 from .block_diag import block_diag_bwd_pallas, block_diag_pallas
 from .lln_attention import (lln_bidir_pallas, lln_causal_pallas,
-                            lln_diag_fused_pallas)
+                            lln_decode_pallas, lln_diag_fused_pallas)
 from .lln_backward import (lln_bidir_bwd_pallas, lln_bidir_bwd_scan,
                            lln_causal_bwd_pallas, lln_causal_bwd_scan,
                            lln_diag_fused_bwd_pallas,
@@ -78,16 +78,18 @@ def _bcast_heads(p, heads: int) -> jnp.ndarray:
     return p
 
 
-def _scaled_stabilized(q, k, alpha, beta):
+def _scaled_stabilized(q, k, alpha, beta, with_const: bool = False):
     """Return (qs, ks) in kernel layout plus the broadcast (alpha, beta);
-    fp32-safe exponents."""
+    fp32-safe exponents.  ``with_const`` appends the key stabilization
+    constant ``c_k`` (B, 1, G, 1) — the decode state's reference constant."""
     alpha = _bcast_heads(alpha, q.shape[2])
     beta = _bcast_heads(beta, k.shape[2])
     aq = q.astype(jnp.float32) * alpha[None, None, :, None]
     bk = k.astype(jnp.float32) * beta[None, None, :, None]
     c_q = jax.lax.stop_gradient(jnp.max(aq, axis=(1, 3), keepdims=True))
     c_k = jax.lax.stop_gradient(jnp.max(bk, axis=(1, 3), keepdims=True))
-    return _to_kernel(aq - c_q), _to_kernel(bk - c_k), alpha, beta
+    out = (_to_kernel(aq - c_q), _to_kernel(bk - c_k), alpha, beta)
+    return out + (c_k,) if with_const else out
 
 
 def _dtype_tag(t: jnp.ndarray) -> jnp.ndarray:
@@ -209,6 +211,185 @@ def _lln_vjp_bwd(causal, chunk, interpret, pallas_bwd, res, g_out):
 
 
 lln_attention.defvjp(_lln_vjp_fwd, _lln_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points: state-emitting prefill + chunked multi-token decode.
+# Inference-only (no custom_vjp); same three-way dispatch as the training
+# forward: Pallas on compiled backends, chunked lax.scan twin under
+# interpret mode (CPU container), jnp reference for ragged lengths.
+# ---------------------------------------------------------------------------
+
+def lln_prefill(q, k, v, alpha, beta, chunk: int = 256,
+                interpret: Optional[bool] = None):
+    """Causal LLN prefill emitting outputs AND the decode state in one pass.
+
+    q: (B,N,H,D); k/v: (B,N,G,D[v]) — GQA via the kernels' ``h // r`` index
+    maps, repeated KV never materialized.  Returns ``(out, s, z, c_k)``:
+    out (B,N,H,Dv); s (B,H,D,Dv) fp32; z (B,H,D) fp32; c_k (B,1,H,1) fp32 —
+    exactly the ``core.lln.LLNState`` layout the decode cache stores (state
+    per query head: GQA groups share values, matching the H-head cache).
+    """
+    b, n, h, _ = q.shape
+    g = k.shape[2]
+    if n % chunk:
+        return _lln_prefill_ref(q, k, v, alpha, beta, chunk)
+    qs, ks, _, _, c_k = _scaled_stabilized(q, k, alpha, beta, with_const=True)
+    vk = _to_kernel(v)
+    if _interpret(interpret):
+        out_k, s, z = _lln_prefill_scan(qs, ks, vk, r=h // g, blk=chunk)
+    else:
+        out_k, s, z = lln_causal_pallas(qs, ks, vk, r=h // g, blk=chunk,
+                                        interpret=False, return_state=True)
+    s = s.reshape(b, h, *s.shape[1:])                  # (B, H, D, Dv)
+    z = z.reshape(b, h, z.shape[-1])                   # (B, H, D)
+    c_kh = jnp.repeat(c_k, h // g, axis=2) if g != h else c_k
+    return _from_kernel(out_k, b), s, z, c_kh
+
+
+def _lln_prefill_ref(q, k, v, alpha, beta, chunk):
+    """Ragged-length fallback: the jnp causal scan (whose final carry is the
+    state — see core/lln.py:prefill) over repeated KV."""
+    h, g = q.shape[2], k.shape[2]
+    kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+    vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+    beta = jnp.asarray(beta, jnp.float32)
+    if beta.ndim and beta.shape[0] == g and g != h:
+        beta = jnp.repeat(beta, h // g)
+    out, st = core_lln.prefill(q, kf, vf, alpha, beta, chunk=chunk)
+    return out.astype(v.dtype), st.s, st.z, st.c_k
+
+
+def _lln_prefill_scan(qs, ks, vk, *, r: int, blk: int):
+    """Chunked lax.scan twin of the state-emitting causal kernel (kernel
+    layout, GQA via a (BG, R) head split — no repeated KV)."""
+    bh, n, d = qs.shape
+    bg, dv = ks.shape[0], vk.shape[-1]
+    nc = n // blk
+    fq = jnp.exp(qs.astype(jnp.float32)).reshape(bg, r, nc, blk, d) \
+        .transpose(2, 0, 1, 3, 4)                      # (nc, BG, R, blk, D)
+    fk = jnp.exp(ks.astype(jnp.float32)).reshape(bg, nc, blk, d) \
+        .transpose(1, 0, 2, 3)                         # (nc, BG, blk, D)
+    vf = vk.astype(jnp.float32).reshape(bg, nc, blk, dv).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((blk, blk), jnp.float32))
+
+    def step(carry, xs):
+        s, z = carry                                   # (BG,D,Dv), (BG,D)
+        cq, ck, cv = xs
+        scores = jnp.einsum("grid,gjd->grij", cq, ck) * causal
+        intra = jnp.einsum("grij,gjv->griv", scores, cv)
+        intra_z = jnp.sum(scores, axis=-1)
+        inter = jnp.einsum("grid,gdv->griv", cq, s)
+        inter_z = jnp.einsum("grid,gd->gri", cq, z)
+        out = (intra + inter) / (intra_z + inter_z + 1e-6)[..., None]
+        s = s + jnp.einsum("gjd,gjv->gdv", ck, cv)
+        z = z + jnp.sum(ck, axis=1)
+        return (s, z), out
+
+    s0 = jnp.zeros((bg, d, dv), jnp.float32)
+    z0 = jnp.zeros((bg, d), jnp.float32)
+    (s, z), out = jax.lax.scan(step, (s0, z0), (fq, fk, vf))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(bh, n, dv).astype(vk.dtype)
+    s = jnp.repeat(s, r, axis=0) if r != 1 else s      # group state -> H rows
+    z = jnp.repeat(z, r, axis=0) if r != 1 else z
+    return out, s, z[:, None, :]
+
+
+def block_diag_fwd(q, k, v, block: int = 256, causal: bool = True,
+                   interpret: Optional[bool] = None):
+    """Inference-only block-diagonal softmax with the serving dispatch:
+    Pallas kernel on compiled backends, a GQA-aware grouped-einsum twin
+    under interpret mode (no repeated KV either way), jnp reference for
+    ragged lengths.  Training keeps the ``block_diag_attention`` custom_vjp
+    entry; this is the prefill path of the §4.2 hybrid."""
+    b, n, h, _ = q.shape
+    g = k.shape[2]
+    if n % block:
+        return _diag_ref(q, k, v, block, causal)
+    if _interpret(interpret):
+        return _block_diag_twin(q, k, v, block, causal)
+    out = block_diag_pallas(_to_kernel(q), _to_kernel(k), _to_kernel(v),
+                            r=h // g, blk=block, causal=causal,
+                            interpret=False)
+    return _from_kernel(out, b)
+
+
+def _block_diag_twin(q, k, v, block, causal):
+    """Grouped-einsum block-diag softmax: heads split (G, R) so the R query
+    heads sharing a kv head contract against it directly."""
+    b, n, h, d = q.shape
+    g, dv = k.shape[2], v.shape[-1]
+    r = h // g
+    nb = n // block
+    scale = d ** -0.5
+    qb = q.reshape(b, nb, block, g, r, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, nb, block, g, d).astype(jnp.float32)
+    vb = v.reshape(b, nb, block, g, dv).astype(jnp.float32)
+    s = jnp.einsum("bnigrd,bnjgd->bngrij", qb, kb)
+    if causal:
+        tri = jnp.tril(jnp.ones((block, block), jnp.bool_))
+        s = jnp.where(tri[None, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngrij,bnjgv->bnigrv", p, vb)
+    return out.reshape(b, n, h, dv).astype(v.dtype)
+
+
+def lln_decode_chunk(state, q, k, v, alpha, beta,
+                     interpret: Optional[bool] = None):
+    """Advance an ``LLNState`` over T new tokens in one dispatch.
+
+    q: (B,T,H,D); k/v: (B,T,G,D[v]).  Single max-rescale of the carried
+    state against the chunk's keys, then one kernel launch (grid over B*H)
+    computing the intra-chunk causal quadratic + state application —
+    ``core.lln.decode_step`` math vectorized over the chunk.  Dispatches to
+    the jnp twin (core.lln.decode_chunk) under interpret mode.
+    """
+    from repro.core.lln import LLNState
+
+    b, t, h, d = q.shape
+    g = k.shape[2]
+    # Per-G-head beta shared by BOTH dispatch branches: an (H,) beta that is
+    # not a group-uniform repeat is group-mean-pooled (the batch_alpha_beta
+    # convention, cf. multi_head_attention) — identically on every backend.
+    beta_b = jnp.asarray(beta, jnp.float32)
+    if beta_b.ndim and beta_b.shape[0] == h and g != h:
+        beta_b = beta_b.reshape(g, h // g).mean(axis=1)
+    beta_b = _bcast_heads(beta_b, g)
+    if _interpret(interpret):
+        kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+        vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+        beta_h = jnp.repeat(beta_b, h // g) if g != h else beta_b
+        return core_lln.decode_chunk(state, q, kf, vf, alpha, beta_h)
+    alpha_b = _bcast_heads(alpha, h)
+    aq = q.astype(jnp.float32) * alpha_b[None, None, :, None]
+    bk = k.astype(jnp.float32) * beta_b[None, None, :, None]
+    c_q = jax.lax.stop_gradient(jnp.max(aq, axis=(1, 3), keepdims=True))
+    # Group-level new reference constant: max of the group's carried c_k and
+    # the chunk keys; each query head rescales from its own old constant.
+    r = h // g
+    c_old_g = jnp.max(state.c_k.reshape(b, 1, g, r, 1), axis=3)
+    c_bk = jax.lax.stop_gradient(jnp.max(bk, axis=(1, 3), keepdims=True))
+    c_new_g = jnp.maximum(c_old_g, c_bk)               # (B,1,G,1)
+    c_new_h = jnp.repeat(c_new_g, r, axis=2) if r != 1 else c_new_g
+    rescale = jnp.exp(state.c_k - c_new_h)[:, 0, :, 0]  # (B,H)
+    s0 = (state.s * rescale[..., None, None]).reshape(b * h, d, -1)
+    z0 = (state.z * rescale[..., None]).reshape(b * h, 1, d)
+
+    # Pad T to a sublane multiple; padded keys at NEG_INF => Phi(k) = 0.
+    tp = -(-t // 16) * 16
+    qs = _to_kernel(aq - c_q)
+    ks = _to_kernel(bk - c_new_g)
+    vk = _to_kernel(v)
+    if tp != t:
+        qs = jnp.pad(qs, ((0, 0), (0, tp - t), (0, 0)))
+        ks = jnp.pad(ks, ((0, 0), (0, tp - t), (0, 0)),
+                     constant_values=-1e30)
+        vk = jnp.pad(vk, ((0, 0), (0, tp - t), (0, 0)))
+    out_k, s1, z1 = lln_decode_pallas(qs, ks, vk, s0, z0, r=r,
+                                      interpret=False)
+    out = _from_kernel(out_k[:, :t], b)
+    return out, LLNState(s=s1.reshape(b, h, d, -1),
+                         z=z1.reshape(b, h, d), c_k=c_new_h)
 
 
 # ---------------------------------------------------------------------------

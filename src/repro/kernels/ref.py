@@ -69,6 +69,20 @@ def block_diag_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out.reshape(bh, n, dv).astype(v.dtype)
 
 
+def lln_prefill_state_ref(qs: jnp.ndarray, ks: jnp.ndarray, v: jnp.ndarray,
+                          r: int = 1):
+    """Oracle for the state-emitting causal kernel: (out, s, z) with the
+    final running state s = sum_j Phi(k_j) v_j^T (BH, D, DV) and
+    z = sum_j Phi(k_j) (BH, 1, D), per query-head row (GQA rows repeat the
+    group state, matching the H-head decode cache)."""
+    out = lln_causal_ref(qs, ks, v, r)
+    fk = jnp.exp(_expand_kv(ks, r).astype(jnp.float32))
+    vf = _expand_kv(v, r).astype(jnp.float32)
+    s = jnp.einsum("hnd,hnv->hdv", fk, vf)
+    z = jnp.sum(fk, axis=1, keepdims=True)
+    return out, s, z
+
+
 def _segsum_kv(t: jnp.ndarray, r: int) -> jnp.ndarray:
     """Sum a per-query-head gradient over the r heads sharing each KV row."""
     if r == 1:

@@ -13,14 +13,22 @@ from __future__ import annotations
 import jax
 
 
+def compat_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (explicit-Auto)
+    only exists on newer releases; older ones are Auto-only anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_mesh(shape, axes)
 
 
 def make_smoke_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over whatever devices exist (tests)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_mesh((data, model), ("data", "model"))

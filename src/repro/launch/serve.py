@@ -1,10 +1,17 @@
-"""Serving driver: batched prefill + decode loop.
+"""Serving driver: batched prefill + scanned decode loop.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
       --batch 4 --prompt-len 64 --gen 32
 
 Demonstrates the two cache regimes: softmax KV cache vs the paper's O(d^2)
 LLN state (--attn-impl lln_diag), which is what makes long_500k serveable.
+
+Generation runs as a single jitted ``lax.scan`` segment (one dispatch for
+the whole tail of the generation, donated cache carry); the first decode
+step runs standalone — it carries the compile — and is reported separately
+so the tok/s figure measures steady state.  ``--no-scan`` restores the
+seed-style one-dispatch-per-token Python loop (the benchmark baseline);
+``--no-serve-kernel`` restores the seed two-pass prefill.
 """
 from __future__ import annotations
 
@@ -17,7 +24,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec
-from repro.launch.steps import make_serve_setup
+from repro.launch.mesh import compat_mesh
+from repro.launch.steps import make_serve_setup, sample_token
 from repro.models import build_model, synthetic_batch
 
 
@@ -33,17 +41,23 @@ def main(argv=None):
     ap.add_argument("--mesh", default="1,1")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-scan", dest="scan", action="store_false",
+                    default=True, help="seed-style per-token dispatch loop")
+    ap.add_argument("--no-serve-kernel", dest="serve_kernel",
+                    action="store_false", default=True,
+                    help="seed two-pass prefill (no state-emitting kernel)")
     args = ap.parse_args(argv)
 
     overrides = {}
     if args.attn_impl:
         overrides["attn_impl"] = args.attn_impl
+    if not args.serve_kernel:
+        overrides["use_serve_kernel"] = False
     cfg = get_config(args.arch, smoke=args.smoke, **overrides)
     model = build_model(cfg)
 
     data, model_ax = (int(x) for x in args.mesh.split(","))
-    mesh = jax.make_mesh((data, model_ax), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_mesh((data, model_ax), ("data", "model"))
     max_len = args.prompt_len + args.gen + cfg.num_prefix_tokens
     shape = ShapeSpec("cli", max_len, args.batch, "decode")
 
@@ -61,29 +75,62 @@ def main(argv=None):
         t_prefill = time.time() - t0
         caches = jax.device_put(caches, setup.cache_shardings)
 
-        tok = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
-                         -1).astype(jnp.int32)
-        generated = [np.asarray(tok)]
+        tok0 = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
+                          -1).astype(jnp.int32)
+        tok = tok0
+        generated = [np.asarray(tok0)]
         pos = batch["inputs"].shape[1]
         if cfg.family == "vlm":
             pos += cfg.num_prefix_tokens
-        t0 = time.time()
-        for i in range(args.gen - 1):
+
+        # First decode step standalone: it carries the compile, so it is
+        # excluded from the steady-state tok/s either way.
+        t_first = t_steady = 0.0
+        if args.gen > 1:
+            t0 = time.time()
             logits, caches = setup.decode_fn(params, caches, tok,
-                                             jnp.asarray(pos + i, jnp.int32))
-            if args.temperature > 0:
-                key = jax.random.PRNGKey(args.seed + i)
-                tok = jax.random.categorical(
-                    key, logits / args.temperature, -1).astype(jnp.int32)
-            else:
-                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                                             jnp.asarray(pos, jnp.int32))
+            tok = sample_token(logits, args.temperature,
+                               jax.random.PRNGKey(args.seed))
             generated.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
+            jax.block_until_ready(tok)
+            t_first = time.time() - t0
+
+        steady_steps = max(args.gen - 2, 0)
+        if steady_steps > 0 and args.scan:
+            gen_fn = setup.make_generate(steady_steps, args.temperature)
+            key = jax.random.PRNGKey(args.seed + 1)
+            # AOT-compile the segment so the compile does not pollute the
+            # steady-state figure — lowering never executes, so the segment
+            # (and its donated cache carry) runs exactly once below.
+            gen_fn = gen_fn.lower(params, caches, tok,
+                                  jnp.asarray(pos + 1, jnp.int32),
+                                  key).compile()
+            t0 = time.time()
+            toks, caches = gen_fn(params, caches, tok,
+                                  jnp.asarray(pos + 1, jnp.int32), key)
+            toks.block_until_ready()
+            t_steady = time.time() - t0
+            generated.extend(np.asarray(toks).T)
+        elif steady_steps > 0:
+            t0 = time.time()
+            for i in range(steady_steps):
+                logits, caches = setup.decode_fn(
+                    params, caches, tok, jnp.asarray(pos + 1 + i, jnp.int32))
+                tok = sample_token(logits, args.temperature,
+                                   jax.random.PRNGKey(args.seed + 1 + i))
+                generated.append(np.asarray(tok))
+            jax.block_until_ready(tok)
+            t_steady = time.time() - t0
+
         toks = np.stack(generated, 1)
-        print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s")
-        print(f"decode : {args.gen - 1} steps in {t_decode:.2f}s "
-              f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+        mode = "scan" if args.scan else "loop"
+        tok_s = steady_steps * args.batch / max(t_steady, 1e-9)
+        print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.3f}s"
+              f"  (serve_kernel={cfg.use_serve_kernel})")
+        print(f"decode : first step {t_first:.3f}s (compile, excluded); "
+              f"{steady_steps} steady steps [{mode}] in {t_steady:.3f}s "
+              f"({tok_s:.1f} tok/s)")
         print("sample tokens:", toks[0, :16].tolist())
         return toks
 

@@ -75,8 +75,9 @@ def cache_shardings(cache_tree, cfg, mesh, rules):
 
     per_name = [
         (r"(^|/)(len|pos|alpha|beta)$", ()),
-        # LLN tails carry full q-heads
-        (r"(^|/)(tail_k|tail_v)$", (b_ax, None, h_ax, h_fd)),
+        # LLN tails carry G kv-heads on the kernelized serve path (H on the
+        # seed path / MLA); fit_spec drops non-divisible axes either way.
+        (r"(^|/)(tail_k|tail_v)$", (b_ax, None, kv_ax, kv_fd)),
         # MLA latent cache: shard the latent dim
         (r"(^|/)ckv$", (b_ax, None, "model")),
         (r"(^|/)kr$", (b_ax, None, None)),
@@ -189,6 +190,16 @@ def make_train_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
                       rules=rules)
 
 
+def sample_token(logits, temperature: float, key) -> jnp.ndarray:
+    """Greedy (temperature == 0) or temperature sampling; jit-safe.  The one
+    sampling rule shared by the scanned generation loop and the per-token
+    serve driver."""
+    if temperature > 0:
+        return jax.random.categorical(key, logits / temperature,
+                                      -1).astype(jnp.int32)
+    return jnp.argmax(logits, -1).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class ServeSetup:
     prefill_fn: Any
@@ -201,6 +212,12 @@ class ServeSetup:
     rules: dict
     token_struct: Any = None
     pos_struct: Any = None
+    # make_generate(steps, temperature) -> jitted
+    #   (params, caches, tok, pos0, key) -> (tokens (B, steps), caches):
+    # the whole generation segment as ONE dispatch — a lax.scan over the
+    # decode step with donated cache carry (vs one jitted dispatch per
+    # token from a Python loop).
+    make_generate: Any = None
 
 
 def make_serve_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
@@ -232,16 +249,44 @@ def make_serve_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
     pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
 
     prefill_fn = jax.jit(prefill_step, in_shardings=(params_shardings, None))
+    # Token in_sharding is left open: a (B,) int token is tiny and arrives
+    # committed-replicated from the previous step's argmax; pinning it to the
+    # data axis would make older jax reject the arg instead of resharding.
     decode_fn = jax.jit(decode_step,
                         in_shardings=(params_shardings, cache_shard,
-                                      NamedSharding(mesh, tok_spec), None),
+                                      None, None),
                         out_shardings=(None, cache_shard),
                         donate_argnums=(1,))
+
+    def make_generate(steps: int, temperature: float = 0.0):
+        """Build a jitted scanned generation segment: ``steps`` greedy (or
+        temperature-sampled) decode steps folded into one ``lax.scan`` with
+        the cache carry donated — one XLA dispatch per segment."""
+
+        def gen(params, caches, tok, pos0, key):
+            def body(carry, i):
+                caches, tok = carry
+                logits, caches = model.decode(params, caches, tok, pos0 + i)
+                tok = sample_token(logits, temperature,
+                                   jax.random.fold_in(key, i))
+                return (caches, tok), tok
+
+            with shd.logical_rules(mesh, rules):
+                (caches, _), toks = jax.lax.scan(
+                    body, (caches, tok), jnp.arange(steps, dtype=jnp.int32))
+            return toks.transpose(1, 0), caches
+
+        return jax.jit(gen,
+                       in_shardings=(params_shardings, cache_shard,
+                                     None, None, None),
+                       out_shardings=(None, cache_shard),
+                       donate_argnums=(1,))
+
     setup = ServeSetup(prefill_fn=prefill_fn, decode_fn=decode_fn,
                        params_struct=params_struct,
                        params_shardings=params_shardings, batch=batch,
                        cache_struct=cache_struct, cache_shardings=cache_shard,
-                       rules=rules)
+                       rules=rules, make_generate=make_generate)
     setup.token_struct = token_struct
     setup.pos_struct = pos_struct
     return setup

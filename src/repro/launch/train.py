@@ -57,8 +57,8 @@ def main(argv=None):
     cfg = get_config(args.arch, smoke=args.smoke, **overrides)
 
     data, model_ax = (int(x) for x in args.mesh.split(","))
-    mesh = jax.make_mesh((data, model_ax), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_mesh
+    mesh = compat_mesh((data, model_ax), ("data", "model"))
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
 
     with mesh:

@@ -87,6 +87,18 @@ def attn_apply(p, x, cfg, positions, *, causal: bool = True,
 
 # ---------------------------------------------------------------------------
 # Serving: prefill + decode with impl-appropriate cache.
+#
+# The default (``cfg.use_serve_kernel``) LLN path is kernelized end to end:
+# * prefill gets outputs AND the O(d^2) decode state from ONE pass over the
+#   keys (kernels/ops.py:lln_prefill — state-emitting Pallas kernel / its
+#   lax.scan twin on CPU), instead of the seed's jnp scan + second full-key
+#   einsum; the lln_diag hybrid routes its diagonal component through the
+#   block_diag Pallas kernel;
+# * the decode cache stores the diag tail at the G kv heads (bytes / r under
+#   GQA) — repeated to H only inside the tiny tail-softmax;
+# * decode advances T >= 1 tokens per dispatch (chunked multi-token decode).
+# ``use_serve_kernel=False`` keeps the seed two-pass path (H-head tails) as
+# an explicit escape, used by benchmarks/bench_serve.py as the baseline.
 # ---------------------------------------------------------------------------
 
 def attn_cache_init(cfg, batch: int, max_len: int):
@@ -95,14 +107,23 @@ def attn_cache_init(cfg, batch: int, max_len: int):
         return {"k": jnp.zeros((batch, max_len, g, hd), cfg.cdtype),
                 "v": jnp.zeros((batch, max_len, g, hd), cfg.cdtype),
                 "len": jnp.zeros((), jnp.int32)}
+    gt = g if cfg.use_serve_kernel else h     # tail heads: G (kernel) / H (seed)
     return {"s": jnp.zeros((batch, h, hd, hd), jnp.float32),
             "z": jnp.zeros((batch, h, hd), jnp.float32),
             "c_k": jnp.zeros((batch, 1, h, 1), jnp.float32),
-            "tail_k": jnp.zeros((batch, cfg.diag_block, h, hd), cfg.cdtype),
-            "tail_v": jnp.zeros((batch, cfg.diag_block, h, hd), cfg.cdtype),
+            "tail_k": jnp.zeros((batch, cfg.diag_block, gt, hd), cfg.cdtype),
+            "tail_v": jnp.zeros((batch, cfg.diag_block, gt, hd), cfg.cdtype),
             "pos": jnp.zeros((), jnp.int32),
             "alpha": jnp.ones((h,), jnp.float32),
             "beta": jnp.ones((h,), jnp.float32)}   # expanded to H heads
+
+
+def _tail_of(t, n: int, blk: int):
+    """Contents of the (partially filled) last ``blk``-sized block."""
+    nb = -(-n // blk)
+    last = (nb - 1) * blk
+    pad = nb * blk - n
+    return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
 
 
 def attn_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
@@ -123,25 +144,36 @@ def attn_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
     else:
         alpha, beta = ca.batch_alpha_beta(q, k, acfg)
         beta_h = jnp.repeat(beta, h // g) if g != h else beta
-        kf = k if g == h else jnp.repeat(k, h // g, axis=2)
-        vf = v if g == h else jnp.repeat(v, h // g, axis=2)
-        lln_out, st = core_lln.prefill(q, kf, vf, alpha, beta_h,
-                                       chunk=cfg.lln_chunk)
         blk = cfg.diag_block
-        nb = -(-n // blk)
-        if cfg.attn_impl == "lln_diag":
-            from repro.core.diag import block_diag_attn
-            diag_out = block_diag_attn(q, kf, vf, block=blk, causal=True)
-            out = (0.5 * (lln_out.astype(jnp.float32)
-                          + diag_out.astype(jnp.float32))).astype(v.dtype)
+        if cfg.use_serve_kernel:
+            # One pass over the keys: outputs + decode state from the
+            # state-emitting kernel; no KV repeat anywhere on this path.
+            from repro.kernels import ops as kops
+            lln_out, s, z, c_k = kops.lln_prefill(q, k, v, alpha, beta,
+                                                  chunk=cfg.lln_chunk)
+            if cfg.attn_impl == "lln_diag":
+                diag_out = kops.block_diag_fwd(q, k, v, blk, True)
+                out = (0.5 * (lln_out.astype(jnp.float32)
+                              + diag_out.astype(jnp.float32))).astype(v.dtype)
+            else:
+                out = lln_out
+            tail_k, tail_v = _tail_of(k, n, blk), _tail_of(v, n, blk)
         else:
-            out = lln_out
-        # Tail buffer: contents of the (partially filled) last block.
-        last = (nb - 1) * blk
-        pad = nb * blk - n
-        tail_k = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
-        tail_v = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
-        cache = {"s": st.s, "z": st.z, "c_k": st.c_k,
+            # Seed path: jnp causal scan + repeated KV, H-head tails.
+            kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+            vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+            lln_out, st = core_lln.prefill(q, kf, vf, alpha, beta_h,
+                                           chunk=cfg.lln_chunk)
+            s, z, c_k = st.s, st.z, st.c_k
+            if cfg.attn_impl == "lln_diag":
+                from repro.core.diag import block_diag_attn
+                diag_out = block_diag_attn(q, kf, vf, block=blk, causal=True)
+                out = (0.5 * (lln_out.astype(jnp.float32)
+                              + diag_out.astype(jnp.float32))).astype(v.dtype)
+            else:
+                out = lln_out
+            tail_k, tail_v = _tail_of(kf, n, blk), _tail_of(vf, n, blk)
+        cache = {"s": s, "z": z, "c_k": c_k,
                  "tail_k": tail_k.astype(cfg.cdtype),
                  "tail_v": tail_v.astype(cfg.cdtype),
                  "pos": jnp.asarray(n, jnp.int32),
@@ -152,7 +184,9 @@ def attn_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
 
 
 def attn_decode(p, x, cache, cfg, position):
-    """One-token decode.  x: (B, 1, d); position: scalar absolute index."""
+    """Decode over T >= 1 new tokens.  x: (B, T, d); position: scalar
+    absolute index of the first new token (T=1 is the generation loop,
+    T>1 the chunked multi-token / speculative-scoring path)."""
     b, n, _ = x.shape
     hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     q = dense(p["q_w"], x, cfg.cdtype).reshape(b, n, h, hd)
@@ -161,8 +195,8 @@ def attn_decode(p, x, cache, cfg, position):
     if cfg.qk_norm:
         q = rms_head_norm(p["q_norm_scale"], q)
         k = rms_head_norm(p["k_norm_scale"], k)
-    pos = jnp.full((1,), position, jnp.int32) if jnp.ndim(position) == 0 \
-        else position
+    pos = position + jnp.arange(n, dtype=jnp.int32) \
+        if jnp.ndim(position) == 0 else position
     q = rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
     k = rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
 
@@ -173,21 +207,20 @@ def attn_decode(p, x, cache, cfg, position):
             cache["v"], v.astype(cache["v"].dtype), cache["len"], axis=1)
         kc = constrain(kc, "act_batch", "act_seq_cache", "kv_heads", None)
         vc = constrain(vc, "act_batch", "act_seq_cache", "kv_heads", None)
-        new_len = cache["len"] + 1
+        new_len = cache["len"] + n
         valid = jnp.broadcast_to(
             jnp.arange(kc.shape[1])[None] < new_len, (b, kc.shape[1]))
-        out = ca.flash_softmax(q, kc, vc, causal=False,
+        out = ca.flash_softmax(q, kc, vc, causal=True,
                                chunk=min(cfg.softmax_chunk, kc.shape[1]),
-                               mask=valid)
+                               mask=valid, q_start=cache["len"])
         new_cache = {"k": kc, "v": vc, "len": new_len}
     else:
-        kf = k if g == h else jnp.repeat(k, h // g, axis=2)
-        vf = v if g == h else jnp.repeat(v, h // g, axis=2)
         st = ca.LLNDecodeState(
             lln=core_lln.LLNState(s=cache["s"], z=cache["z"], c_k=cache["c_k"]),
             tail_k=cache["tail_k"], tail_v=cache["tail_v"], pos=cache["pos"])
-        out, st = ca.decode_lln(st, q, kf, vf, cache["alpha"], cache["beta"],
-                                impl=cfg.attn_impl)
+        out, st = ca.decode_lln_chunk(st, q, k, v, cache["alpha"],
+                                      cache["beta"], impl=cfg.attn_impl,
+                                      use_kernel=cfg.use_serve_kernel)
         new_cache = {"s": st.lln.s, "z": st.lln.z, "c_k": st.lln.c_k,
                      "tail_k": st.tail_k, "tail_v": st.tail_v, "pos": st.pos,
                      "alpha": cache["alpha"], "beta": cache["beta"]}

@@ -157,6 +157,9 @@ def encdec_prefill(p, src_embed, tgt_tokens, cfg, max_len: int):
 
 
 def encdec_decode(p, caches, token, cfg, position):
+    if token.ndim != 1:
+        raise NotImplementedError(
+            "chunked (B, T) decode is not wired for the encdec family")
     x = embed_lookup(p["embed"], token[:, None], cfg.cdtype, cfg.embed_scale)
     b = x.shape[0]
 

@@ -192,6 +192,9 @@ def hybrid_prefill(p, tokens, cfg, max_len: int):
 
 
 def hybrid_decode(p, caches, token, cfg, position):
+    if token.ndim != 1:
+        raise NotImplementedError(
+            "chunked (B, T) decode is not wired for the ssm/hybrid family")
     x = embed_lookup(p["embed"], token[:, None], cfg.cdtype, cfg.embed_scale)
     x0 = x
     grouped, tail_p, g, per = _groups_params(p, cfg)

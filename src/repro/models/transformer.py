@@ -230,9 +230,16 @@ def lm_prefill(p, tokens, cfg, max_len: int,
 
 
 def lm_decode(p, caches, token, cfg, position):
-    """One decode step.  token: (B,) int32; position: scalar int32."""
+    """Decode step.  token: (B,) or (B, T) int32 — T > 1 advances the caches
+    over a whole chunk in one dispatch (multi-token/speculative scoring);
+    position: scalar int32 index of the first new token.  Returns logits
+    (B, V) for (B,) input, (B, T, V) for chunked input."""
+    single = token.ndim == 1
+    if not single and _use_mla(cfg):
+        raise NotImplementedError("chunked decode is not wired for MLA")
     first, n_main, is_moe = _layer_groups(cfg)
-    x = embed_lookup(p["embed"], token[:, None], cfg.cdtype, cfg.embed_scale)
+    toks = token[:, None] if single else token
+    x = embed_lookup(p["embed"], toks, cfg.cdtype, cfg.embed_scale)
     new_caches = {}
 
     def mk(use_moe):
@@ -253,4 +260,4 @@ def lm_decode(p, caches, token, cfg, position):
     x = apply_norm(p["final_norm"], x, cfg.norm)
     logits = logits_from_hidden(lm_head_of(p), x, cfg.cdtype,
                                 cfg.logit_softcap)
-    return logits[:, 0], new_caches
+    return (logits[:, 0] if single else logits), new_caches

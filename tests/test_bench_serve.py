@@ -1,0 +1,20 @@
+"""Smoke test: the serving benchmark runs end-to-end (interpret mode)."""
+import json
+
+from benchmarks.bench_serve import run
+
+
+def test_bench_serve_smoke(tmp_path):
+    out = tmp_path / "BENCH_serve.json"
+    report = run(str(out), smoke=True, repeats=1, verbose=False)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk["modes"].keys() == {"seed", "kernel"}
+    assert len(on_disk["results"]) == len(report["results"]) == 2
+    for row in on_disk["results"]:
+        assert row["prefill_us"]["seed"] > 0
+        assert row["prefill_us"]["kernel"] > 0
+        assert row["prefill_speedup"] > 0
+        assert row["decode"]["seed_loop_tok_s"] > 0
+        assert row["decode"]["scan_tok_s"] > 0
+        assert row["decode_chunk"]["speedup"] > 0

@@ -102,13 +102,12 @@ class TestElastic:
             from repro.checkpoint.checkpointer import save, restore
             from repro.distributed.sharding import param_shardings
             d = tempfile.mkdtemp()
-            mesh1 = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import compat_mesh
+            mesh1 = compat_mesh((2, 4), ("data", "model"))
             tree = {"layers": {"q_w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
             tree = jax.device_put(tree, param_shardings(tree, mesh1))
             save(d, 1, tree)
-            mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh2 = compat_mesh((4, 2), ("data", "model"))
             template = jax.tree_util.tree_map(
                 lambda a: jnp.zeros(a.shape, a.dtype), tree)
             out = restore(d, 1, template, param_shardings(template, mesh2))
@@ -145,8 +144,8 @@ class TestMultiDeviceTraining:
             from repro.optim import adamw_init
 
             cfg = get_config("yi-9b", smoke=True, attn_impl="lln_diag")
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import compat_mesh
+            mesh = compat_mesh((2, 4), ("data", "model"))
             shape = ShapeSpec("t", 32, 4, "train")
             with mesh:
                 setup = make_train_setup(cfg, shape, mesh, multi_pod=False)
@@ -177,8 +176,8 @@ class TestMultiDeviceTraining:
             from repro.models import build_model, synthetic_batch
 
             cfg = get_config("yi-9b", smoke=True)
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import compat_mesh
+            mesh = compat_mesh((2, 4), ("data", "model"))
             shape = ShapeSpec("s", 48, 4, "decode")
             with mesh:
                 setup = make_serve_setup(cfg, shape, mesh, multi_pod=False)

@@ -73,8 +73,10 @@ def test_decode_consistency(arch, impl):
         # serve path exactly comparable.
         cfg = cfg.replace(lln_fixed_ab=2.1)
     # bf16 noise scales with logit magnitude (embed_scale multiplies by
-    # sqrt(d)) and with matmul-chain depth (MLA's low-rank decompositions).
-    tol = 0.3 if cfg.embed_scale else (0.15 if cfg.kv_lora else 0.05)
+    # sqrt(d)) and with matmul-chain depth (MLA's low-rank decompositions;
+    # hybrid stacks bf16 SSM recurrences on top of the attention path).
+    tol = 0.3 if cfg.embed_scale else (
+        0.15 if cfg.kv_lora else (0.1 if cfg.family == "hybrid" else 0.05))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     n_prompt, n_gen = 24, 6

@@ -84,8 +84,23 @@ def test_train_cli_with_restart(tmp_path):
 
 
 def test_serve_cli_lln_state_decode():
+    """O(d^2) LLN-state cache regime through the scanned generation loop."""
     from repro.launch.serve import main as serve_main
     toks = serve_main(["--arch", "chatglm3-6b", "--smoke", "--attn-impl",
                        "lln_diag", "--batch", "2", "--prompt-len", "24",
                        "--gen", "6"])
     assert toks.shape == (2, 6)
+
+
+def test_serve_cli_softmax_kv_decode():
+    """KV-cache regime end-to-end; --no-scan exercises the seed-style
+    per-token dispatch loop kept as the benchmark baseline."""
+    from repro.launch.serve import main as serve_main
+    toks = serve_main(["--arch", "chatglm3-6b", "--smoke", "--attn-impl",
+                       "softmax", "--batch", "2", "--prompt-len", "24",
+                       "--gen", "6"])
+    assert toks.shape == (2, 6)
+    toks = serve_main(["--arch", "chatglm3-6b", "--smoke", "--attn-impl",
+                       "softmax", "--batch", "2", "--prompt-len", "16",
+                       "--gen", "4", "--no-scan", "--no-serve-kernel"])
+    assert toks.shape == (2, 4)
