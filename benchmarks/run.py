@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
   bench_scaling        Table 2 (+ LRA Table 4 timing class)
   bench_serve          serving path: kernel prefill + scanned decode
                        (also writes BENCH_serve.json at the repo root)
+  bench_batching       continuous vs static batching goodput under skewed
+                       request lengths (writes BENCH_batching.json)
 
 Roofline terms (EXPERIMENTS.md §Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
@@ -19,17 +21,21 @@ import time
 
 
 def main() -> None:
-    from . import (bench_concentration, bench_convergence,
+    from . import (bench_batching, bench_concentration, bench_convergence,
                    bench_distribution, bench_scaling, bench_serve)
 
     class _ServeAdapter:
         run = staticmethod(bench_serve.run_rows)
 
+    class _BatchingAdapter:
+        run = staticmethod(bench_batching.run_rows)
+
     modules = [("distribution", bench_distribution),
                ("concentration", bench_concentration),
                ("convergence", bench_convergence),
                ("scaling", bench_scaling),
-               ("serve", _ServeAdapter)]
+               ("serve", _ServeAdapter),
+               ("batching", _BatchingAdapter)]
     all_rows = []
     for name, mod in modules:
         print(f"== {name} ==", file=sys.stderr, flush=True)

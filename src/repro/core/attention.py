@@ -102,14 +102,20 @@ def flash_softmax(
     prefix_len: int = 0,
     q_start: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """q: (B,Nq,H,D); k/v: (B,Nk,G,D[v]).  mask: (B, Nk) key validity.
+    """Flash-style (online-softmax) attention, chunked over keys.
+
+    q: (B,Nq,H,D); k/v: (B,Nk,G,D[v]) — G kv heads with G | H (GQA/MQA;
+    KV is repeated to H inside).  ``mask``: (B, Nk) key validity.
+    Returns (B, Nq, H, Dv) in ``v.dtype``; accumulation is fp32.
 
     Online-softmax accumulation over key chunks; O(Nq * chunk) live scores.
     Assumes query i attends keys j <= i + (Nk - Nq) when causal (i.e. the
     queries are the *last* Nq positions — the decode/prefill convention).
     ``q_start`` overrides that convention with explicit absolute query
     positions ``q_start + i`` — the multi-token decode case, where queries
-    sit mid-buffer in a max_len-sized cache (may be a traced scalar).
+    sit mid-buffer in a max_len-sized cache.  It may be a traced scalar or,
+    for continuous batching, a per-row ``(B,)`` vector (each batch row sits
+    at its own depth in the cache).
     ``prefix_len``: prefix-LM — keys < prefix_len are visible to every query
     (PaliGemma-style bidirectional image prefix).
     """
@@ -159,17 +165,26 @@ def flash_softmax(
     key_pos_all = jnp.arange(nkc * chunk).reshape(nkc, chunk)
 
     q_off = (nk - nq) if q_start is None else q_start
+    per_row = q_start is not None and jnp.ndim(q_start) == 1
 
     def q_block(carry, xs):
         qq, qbase = xs                           # (B,Cq,H,D), scalar
-        q_pos = qbase + jnp.arange(qchunk) + q_off
+        if per_row:                              # (B, Cq) absolute positions
+            q_pos = (qbase + jnp.arange(qchunk))[None, :] + q_off[:, None]
+        else:
+            q_pos = qbase + jnp.arange(qchunk) + q_off
 
         def kv_step(inner, ys):
             m, l, acc = inner                    # (B,H,Cq), ..., (...,Dv)
             ck, cv, cm, key_pos = ys
             s = einsum_f32("bqhd,bjhd->bhqj", qq, ck)
             bias = jnp.where(cm[:, None, None, :], 0.0, NEG_INF)
-            if causal:
+            if causal and per_row:
+                allowed = q_pos[:, :, None] >= key_pos[None, None, :]
+                if prefix_len:
+                    allowed = allowed | (key_pos[None, None, :] < prefix_len)
+                bias = bias + jnp.where(allowed[:, None], 0.0, NEG_INF)
+            elif causal:
                 allowed = q_pos[:, None] >= key_pos[None, :]
                 if prefix_len:
                     allowed = allowed | (key_pos[None, :] < prefix_len)
@@ -322,7 +337,7 @@ class LLNDecodeState:
     lln: LLNState
     tail_k: jnp.ndarray     # (B, BLK, G, D)
     tail_v: jnp.ndarray     # (B, BLK, G, Dv)
-    pos: jnp.ndarray        # scalar int32: absolute next position
+    pos: jnp.ndarray        # absolute next position: scalar or per-row (B,)
 
     @staticmethod
     def init(batch: int, heads: int, d: int, dv: int, block: int,
@@ -337,18 +352,52 @@ class LLNDecodeState:
 
 
 def decode_softmax(cache: KVCache, q: jnp.ndarray, k_new: jnp.ndarray,
-                   v_new: jnp.ndarray, *, scale: Optional[float] = None
+                   v_new: jnp.ndarray, *, scale: Optional[float] = None,
+                   chunk: int = 1024,
+                   row_mask: Optional[jnp.ndarray] = None
                    ) -> tuple[jnp.ndarray, KVCache]:
     """Softmax decode of T >= 1 tokens against a KV cache.
-    q/k/v_new: (B,T,H|G,D); within-chunk causality via explicit positions."""
-    kc = jax.lax.dynamic_update_slice_in_dim(
-        cache.k, k_new.astype(cache.k.dtype), cache.length, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(
-        cache.v, v_new.astype(cache.v.dtype), cache.length, axis=1)
-    new_len = cache.length + q.shape[1]
-    valid = jnp.arange(kc.shape[1])[None, :] < new_len
-    valid = jnp.broadcast_to(valid, (q.shape[0], kc.shape[1]))
-    out = flash_softmax(q, kc, vc, causal=True, chunk=min(1024, kc.shape[1]),
+
+    q: (B,T,H,D); k/v_new: (B,T,G,D[v]) — new tokens are appended at
+    ``cache.length`` and within-chunk causality comes from explicit
+    absolute positions (``q_start``), so T > 1 scores a draft chunk in one
+    call.  ``cache.length`` may be a scalar (static batch: all rows at the
+    same depth) or a per-row ``(B,)`` vector (continuous batching; the
+    append is then a vmapped per-row ``dynamic_update_slice``).
+    ``row_mask``: optional (B,) bool — rows where it is False do not write
+    the cache and do not advance ``length`` (their outputs are garbage and
+    must be discarded by the caller); requires per-row ``length``.
+    Returns (out (B,T,H,Dv), new cache).
+    """
+    from repro.distributed.sharding import constrain
+
+    per_row = jnp.ndim(cache.length) == 1
+    if per_row:
+        upd = lambda c, u, l: jax.lax.dynamic_update_slice_in_dim(
+            c, u, l, axis=0)
+        kc = jax.vmap(upd)(cache.k, k_new.astype(cache.k.dtype),
+                           cache.length)
+        vc = jax.vmap(upd)(cache.v, v_new.astype(cache.v.dtype),
+                           cache.length)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), cache.length, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), cache.length, axis=1)
+    t = q.shape[1]
+    if row_mask is not None:
+        keep = row_mask[:, None, None, None]
+        kc = jnp.where(keep, kc, cache.k)
+        vc = jnp.where(keep, vc, cache.v)
+        new_len = cache.length + t * row_mask.astype(jnp.int32)
+    else:
+        new_len = cache.length + t
+    kc = constrain(kc, "act_batch", "act_seq_cache", "kv_heads", None)
+    vc = constrain(vc, "act_batch", "act_seq_cache", "kv_heads", None)
+    lens = new_len if per_row else jnp.broadcast_to(new_len, (q.shape[0],))
+    valid = jnp.arange(kc.shape[1])[None, :] < lens[:, None]
+    out = flash_softmax(q, kc, vc, causal=True,
+                        chunk=min(chunk, kc.shape[1]),
                         mask=valid, scale=scale, q_start=cache.length)
     return out, KVCache(k=kc, v=vc, length=new_len)
 
@@ -357,26 +406,42 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
                      k_new: jnp.ndarray, v_new: jnp.ndarray,
                      alpha: jnp.ndarray, beta: jnp.ndarray,
                      *, impl: str = "lln_diag",
-                     use_kernel: bool = True
+                     use_kernel: bool = True,
+                     row_mask: Optional[jnp.ndarray] = None
                      ) -> tuple[jnp.ndarray, LLNDecodeState]:
     """LLN(+Diag) decode of T >= 1 tokens.  q: (B,T,H,D); k/v_new: (B,T,G,D[v]).
 
     The LLN state advance is vectorized over the chunk (one rescale, one
     intra-chunk causal quadratic — kernels/ops.py:lln_decode_chunk when
-    ``use_kernel``).  The diag component runs one masked softmax over
-    [tail block ∪ chunk keys] with per-token block-diagonal visibility
-    derived from absolute positions, so a chunk may straddle a diag-block
-    boundary and still match T sequential single-token steps exactly.
+    ``use_kernel``; the jnp ``core.lln.decode_chunk`` otherwise).  The diag
+    component runs one masked softmax over [tail block ∪ chunk keys] with
+    per-token block-diagonal visibility derived from absolute positions, so
+    a chunk may straddle a diag-block boundary and still match T sequential
+    single-token steps exactly.
+
+    ``state.pos`` may be a scalar (static batch) or a per-row ``(B,)``
+    vector (continuous batching: every row sits at its own absolute
+    position; the tail slot rotation and the block-diagonal visibility are
+    evaluated per row).  ``alpha``/``beta`` may be (H,)/(B, H) —
+    per-row calibration for pooled requests prefillled separately.
+    ``row_mask``: optional (B,) bool; rows where it is False advance
+    NOTHING — lln state, tails and ``pos`` keep their old values (their
+    outputs are garbage and must be discarded).  Requires per-row ``pos``.
     """
     b, t, h, d = q.shape
     if use_kernel:
         from repro.kernels import ops as kops
         lln_out, lln_state = kops.lln_decode_chunk(state.lln, q, k_new,
-                                                   v_new, alpha, beta)
+                                                   v_new, alpha, beta,
+                                                   row_mask=row_mask)
     else:
+        beta_h = jnp.asarray(beta, jnp.float32)
+        g = k_new.shape[2]
+        if beta_h.ndim and beta_h.shape[-1] == g and g != h:
+            beta_h = jnp.repeat(beta_h, h // g, axis=-1)
         lln_out, lln_state = lln_mod.decode_chunk(
             state.lln, q, _repeat_kv(k_new, h), _repeat_kv(v_new, h),
-            alpha, beta)
+            alpha, beta_h, row_mask=row_mask)
 
     # --- rolling tail update, vectorized: for each slot i the last chunk
     # token writing it is j_i = j0 + block*((t-1-j0)//block), j0 = (i-pos)%blk.
@@ -385,35 +450,44 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
     k_t = _repeat_kv(k_new, gt) if k_new.shape[2] != gt else k_new
     v_t = _repeat_kv(v_new, gt) if v_new.shape[2] != gt else v_new
     pos = state.pos
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))    # (B,)
     idx = jnp.arange(block)
-    j0 = jnp.mod(idx - pos, block)
+    j0 = jnp.mod(idx[None, :] - posb[:, None], block)             # (B, BLK)
     j_last = jnp.clip(j0 + block * ((t - 1 - j0) // block), 0, t - 1)
-    wrote = (j0 < t)[None, :, None, None]
-    tail_k = jnp.where(wrote, jnp.take(k_t, j_last, axis=1
-                                       ).astype(state.tail_k.dtype),
+    wrote = (j0 < t)[:, :, None, None]
+    if row_mask is not None:
+        wrote = wrote & row_mask[:, None, None, None]
+    gather = j_last[:, :, None, None]
+    tail_k = jnp.where(wrote, jnp.take_along_axis(k_t, gather, axis=1
+                                                  ).astype(state.tail_k.dtype),
                        state.tail_k)
-    tail_v = jnp.where(wrote, jnp.take(v_t, j_last, axis=1
-                                       ).astype(state.tail_v.dtype),
+    tail_v = jnp.where(wrote, jnp.take_along_axis(v_t, gather, axis=1
+                                                  ).astype(state.tail_v.dtype),
                        state.tail_v)
+    if row_mask is not None:
+        new_pos = pos + t * row_mask.astype(jnp.int32)
+    else:
+        new_pos = pos + t
     new_state = LLNDecodeState(lln=lln_state, tail_k=tail_k, tail_v=tail_v,
-                               pos=pos + t)
+                               pos=new_pos)
     if impl == "lln":
         return lln_out, new_state
 
     # --- diagonal component: one softmax over [tail ∪ chunk] keys.
     # Absolute position of tail slot i (entries from the previous block get
     # positions < the current block start and are masked; never-written
-    # slots get negative positions).
-    cur_base = (pos // block) * block
-    tail_pos = jnp.where(idx < pos - cur_base, cur_base + idx,
-                         cur_base + idx - block)
-    q_pos = pos + jnp.arange(t)
-    q_base = (q_pos // block) * block                   # block start per query
-    m_tail = (tail_pos[None, :] >= q_base[:, None]) \
-        & (tail_pos[None, :] >= 0)                      # (T, BLK)
-    m_chunk = (jnp.arange(t)[None, :] <= jnp.arange(t)[:, None]) \
-        & (q_base[None, :] == q_base[:, None])          # (T, T): j<=i, same blk
-    allowed = jnp.concatenate([m_tail, m_chunk], axis=1)
+    # slots get negative positions).  All per-row: (B, ...) masks.
+    cur_base = (posb // block) * block                            # (B,)
+    abs_idx = cur_base[:, None] + idx[None, :]                    # (B, BLK)
+    tail_pos = jnp.where(idx[None, :] < (posb - cur_base)[:, None],
+                         abs_idx, abs_idx - block)
+    q_pos = posb[:, None] + jnp.arange(t)[None, :]                # (B, T)
+    q_base = (q_pos // block) * block                 # block start per query
+    m_tail = (tail_pos[:, None, :] >= q_base[:, :, None]) \
+        & (tail_pos[:, None, :] >= 0)                             # (B, T, BLK)
+    m_chunk = (jnp.arange(t)[None, None, :] <= jnp.arange(t)[None, :, None]) \
+        & (q_base[:, None, :] == q_base[:, :, None])  # (B,T,T): j<=i, same blk
+    allowed = jnp.concatenate([m_tail, m_chunk], axis=2)
 
     keys = jnp.concatenate(
         [state.tail_k, k_t.astype(state.tail_k.dtype)], axis=1)
@@ -423,7 +497,7 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
     kf = _repeat_kv(keys, h).astype(jnp.float32)
     vf = _repeat_kv(vals, h).astype(jnp.float32)
     s = jnp.einsum("bihd,bjhd->bhij", q.astype(jnp.float32), kf) * (d ** -0.5)
-    s = jnp.where(allowed[None, None], s, NEG_INF)
+    s = jnp.where(allowed[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     diag_out = jnp.einsum("bhij,bjhv->bihv", p, vf)
     out = 0.5 * (lln_out.astype(jnp.float32) + diag_out)

@@ -51,10 +51,13 @@ def feature_map_k(k: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
 
 
 def _bcast(p: jnp.ndarray, like: jnp.ndarray) -> jnp.ndarray:
-    """Broadcast a scalar or per-head (H,) parameter over (B, N, H, D)."""
+    """Broadcast a scalar, per-head (H,) or per-row-per-head (B, H)
+    parameter over (B, N, H, D)."""
     p = jnp.asarray(p, like.dtype)
     if p.ndim == 0:
         return p
+    if p.ndim == 2:                       # (B, H): per-row calibration
+        return p[:, None, :, None]
     return p.reshape((1, 1, -1, 1))
 
 
@@ -311,6 +314,7 @@ def decode_chunk(
     v: jnp.ndarray,
     alpha: jnp.ndarray,
     beta: jnp.ndarray,
+    row_mask: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, LLNState]:
     """Advance the state over T new tokens at once.  q/k/v: (B, T, H, D[v]).
 
@@ -319,6 +323,12 @@ def decode_chunk(
     quadratic for the new-token interactions, and a per-row normalizer —
     mathematically identical to T sequential :func:`decode_step` calls
     (the normalized form is exactly invariant to the reference constant).
+
+    ``alpha``/``beta``: scalar, (H,), or per-row (B, H) (continuous
+    batching, where pooled requests carry their own calibration).
+    ``row_mask``: optional (B,) bool — rows where it is False keep their
+    old ``(s, z, c_k)`` exactly (no rescale, no accumulation); their
+    outputs are garbage and must be discarded by the caller.
     """
     b, t, h, d = q.shape
     dv = v.shape[-1]
@@ -341,4 +351,9 @@ def decode_chunk(
     out = (intra + inter) / (intra_z + inter_z + EPS)[..., None]
     s = s0 + jnp.einsum("bjhd,bjhv->bhdv", fk, vf)
     z = z0 + jnp.sum(fk, axis=1)
+    if row_mask is not None:
+        keep = row_mask
+        s = jnp.where(keep[:, None, None, None], s, state.s)
+        z = jnp.where(keep[:, None, None], z, state.z)
+        c_new = jnp.where(keep[:, None, None, None], c_new, state.c_k)
     return out.astype(v.dtype), LLNState(s=s, z=z, c_k=c_new)

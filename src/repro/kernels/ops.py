@@ -72,10 +72,16 @@ def _from_kernel(t: jnp.ndarray, b: int) -> jnp.ndarray:
 
 
 def _bcast_heads(p, heads: int) -> jnp.ndarray:
+    """Scalar -> (heads,); (heads,) and per-row (B, heads) pass through."""
     p = jax.lax.stop_gradient(jnp.asarray(p, jnp.float32))
     if p.ndim == 0:
         p = jnp.broadcast_to(p, (heads,))
     return p
+
+
+def _row_head_bcast(p: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast (H,) or per-row (B, H) calibration over (B, N, H, D)."""
+    return p[:, None, :, None] if p.ndim == 2 else p[None, None, :, None]
 
 
 def _scaled_stabilized(q, k, alpha, beta, with_const: bool = False):
@@ -112,10 +118,24 @@ def _zero_ab(alpha, beta):
 def lln_attention(q, k, v, alpha, beta, causal: bool = True,
                   chunk: int = 256, interpret: Optional[bool] = None,
                   pallas_bwd: bool = True):
-    """LLN attention via Pallas.  q: (B,N,H,D); k/v: (B,N,G,D[v]).
+    """LLN attention (paper eq. 8) via Pallas — the training entry point.
 
-    ``pallas_bwd=False`` forces the chunked-jnp reference backward (the
-    pre-fused behaviour) — kept for benchmarking and debugging.
+    Args:
+      q: (B, N, H, D); k/v: (B, N, G, D[v]) with G | H — GQA ratio
+        ``r = H // G`` is threaded to the kernels' BlockSpec index maps, so
+        repeated KV is never materialized.  Any float dtype; output is
+        ``v.dtype``, internal exponents/accumulators fp32.
+      alpha/beta: moment-matching calibration, scalar or per-head
+        ((H,) / (G,)); non-differentiable by construction (zero gradients).
+      chunk: block size of the causal scan; ``N % chunk != 0`` falls back
+        to the jnp reference (``core.lln``) — same math, ragged-safe.
+
+    Backend: compiled (TPU) runs the Pallas forward and, under
+    ``custom_vjp``, the fused Pallas backward (kernels/lln_backward.py);
+    interpret mode (CPU container) runs the forward kernel interpreted and
+    the backward's chunked ``lax.scan`` twins.  ``pallas_bwd=False`` forces
+    the chunked-jnp reference backward (the pre-fused behaviour) — kept for
+    benchmarking and debugging.
     """
     return _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret)
 
@@ -335,34 +355,54 @@ def _block_diag_twin(q, k, v, block, causal):
 
 
 def lln_decode_chunk(state, q, k, v, alpha, beta,
-                     interpret: Optional[bool] = None):
+                     interpret: Optional[bool] = None,
+                     row_mask: Optional[jnp.ndarray] = None):
     """Advance an ``LLNState`` over T new tokens in one dispatch.
 
-    q: (B,T,H,D); k/v: (B,T,G,D[v]).  Single max-rescale of the carried
-    state against the chunk's keys, then one kernel launch (grid over B*H)
-    computing the intra-chunk causal quadratic + state application —
-    ``core.lln.decode_step`` math vectorized over the chunk.  Dispatches to
-    the jnp twin (core.lln.decode_chunk) under interpret mode.
+    Args:
+      state: ``core.lln.LLNState`` — ``s`` (B,H,D,Dv) fp32, ``z`` (B,H,D)
+        fp32, ``c_k`` (B,1,H,1) fp32 reference stabilization constant.
+      q: (B,T,H,D); k/v: (B,T,G,D[v]) — any dtype (cast to fp32 inside);
+        GQA ratio ``r = H // G``: the kernel contracts each query head
+        against its group's kv head via the grid index map, repeated KV is
+        never materialized (compiled path).
+      alpha/beta: calibration constants — scalar, per-head (H,)/(G,), or
+        per-row (B, H)/(B, G) for continuous batching.  An (H,)-shaped beta
+        that is not a group-uniform repeat is group-mean-pooled to (G,)
+        (the ``batch_alpha_beta`` convention) identically on every backend.
+      row_mask: optional (B,) bool — rows where it is False keep their old
+        ``(s, z, c_k)`` exactly (masked rows must not advance state; their
+        outputs are garbage and must be discarded by the caller).
+
+    Returns ``(out (B,T,H,Dv) in v.dtype, new LLNState)``.
+
+    Backend dispatch: one Pallas kernel launch (grid over B*H, T padded to
+    a sublane multiple with NEG_INF keys so padded Phi(k) = 0) after a
+    single group-level max-rescale of the carried state on compiled
+    backends; the jnp twin ``core.lln.decode_chunk`` under interpret mode
+    (the CPU container).  Both equal T sequential ``decode_step`` calls.
     """
     from repro.core.lln import LLNState
 
     b, t, h, d = q.shape
     g = k.shape[2]
-    # Per-G-head beta shared by BOTH dispatch branches: an (H,) beta that is
-    # not a group-uniform repeat is group-mean-pooled (the batch_alpha_beta
-    # convention, cf. multi_head_attention) — identically on every backend.
+    # Per-G-head beta shared by BOTH dispatch branches: an (H,)/(B,H) beta
+    # that is not a group-uniform repeat is group-mean-pooled (the
+    # batch_alpha_beta convention, cf. multi_head_attention) — identically
+    # on every backend.
     beta_b = jnp.asarray(beta, jnp.float32)
-    if beta_b.ndim and beta_b.shape[0] == h and g != h:
-        beta_b = beta_b.reshape(g, h // g).mean(axis=1)
+    if beta_b.ndim and beta_b.shape[-1] == h and g != h:
+        beta_b = beta_b.reshape(beta_b.shape[:-1] + (g, h // g)).mean(axis=-1)
     beta_b = _bcast_heads(beta_b, g)
     if _interpret(interpret):
         kf = k if g == h else jnp.repeat(k, h // g, axis=2)
         vf = v if g == h else jnp.repeat(v, h // g, axis=2)
-        beta_h = jnp.repeat(beta_b, h // g) if g != h else beta_b
-        return core_lln.decode_chunk(state, q, kf, vf, alpha, beta_h)
+        beta_h = jnp.repeat(beta_b, h // g, axis=-1) if g != h else beta_b
+        return core_lln.decode_chunk(state, q, kf, vf, alpha, beta_h,
+                                     row_mask=row_mask)
     alpha_b = _bcast_heads(alpha, h)
-    aq = q.astype(jnp.float32) * alpha_b[None, None, :, None]
-    bk = k.astype(jnp.float32) * beta_b[None, None, :, None]
+    aq = q.astype(jnp.float32) * _row_head_bcast(alpha_b)
+    bk = k.astype(jnp.float32) * _row_head_bcast(beta_b)
     c_q = jax.lax.stop_gradient(jnp.max(aq, axis=(1, 3), keepdims=True))
     # Group-level new reference constant: max of the group's carried c_k and
     # the chunk keys; each query head rescales from its own old constant.
@@ -388,8 +428,14 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
     out_k, s1, z1 = lln_decode_pallas(qs, ks, vk, s0, z0, r=r,
                                       interpret=False)
     out = _from_kernel(out_k[:, :t], b)
-    return out, LLNState(s=s1.reshape(b, h, d, -1),
-                         z=z1.reshape(b, h, d), c_k=c_new_h)
+    s_new = s1.reshape(b, h, d, -1)
+    z_new = z1.reshape(b, h, d)
+    if row_mask is not None:
+        keep = row_mask
+        s_new = jnp.where(keep[:, None, None, None], s_new, state.s)
+        z_new = jnp.where(keep[:, None, None], z_new, state.z)
+        c_new_h = jnp.where(keep[:, None, None, None], c_new_h, state.c_k)
+    return out, LLNState(s=s_new, z=z_new, c_k=c_new_h)
 
 
 # ---------------------------------------------------------------------------
@@ -400,7 +446,16 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
 def block_diag_attention(q, k, v, block: int = 256, causal: bool = False,
                          interpret: Optional[bool] = None,
                          pallas_bwd: bool = True):
-    """Block-diagonal softmax attention via Pallas. q: (B,N,H,D)."""
+    """Block-diagonal softmax attention via Pallas (§4.2 diag component).
+
+    q: (B, N, H, D); k/v: (B, N, G, D[v]), GQA via the ``h // r`` index map.
+    Each ``block``-sized diagonal block attends only within itself
+    (causally masked when ``causal``).  Training entry point (custom_vjp:
+    Pallas backward on compiled backends, scan twin under interpret mode,
+    jnp reference when ``N % block`` or ``pallas_bwd=False``); returns
+    (B, N, H, Dv) in ``v.dtype``.  Inference prefill uses
+    :func:`block_diag_fwd` instead.
+    """
     return _diag_fwd_impl(q, k, v, block, causal, interpret)
 
 
@@ -469,7 +524,15 @@ block_diag_attention.defvjp(_diag_vjp_fwd, _diag_vjp_bwd)
 def lln_diag_attention(q, k, v, alpha, beta, causal: bool = True,
                        block: int = 256, interpret: Optional[bool] = None,
                        pallas_bwd: bool = True):
-    """0.5 * (LLN + block-diag softmax); fused kernel when causal."""
+    """The paper's §4.2 hybrid: 0.5 * (LLN + block-diag softmax).
+
+    Shapes/dtypes/GQA semantics as :func:`lln_attention` (``block`` doubles
+    as the LLN chunk and the diag block).  When ``causal`` the two
+    components run as ONE fused Pallas kernel sharing block loads (fused
+    backward likewise); bidirectional runs them as two kernels.  Fallbacks:
+    jnp reference when ``N % block`` or ``pallas_bwd=False``; scan twins
+    under interpret mode for the backward.
+    """
     return _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret)
 
 

@@ -1,0 +1,239 @@
+"""Continuous-batching serving engine: a slotted request pool.
+
+The static serving loop (``ServeSetup.make_generate``) advances one batch
+shape in lockstep: every row prefills together and decodes until the LAST
+row finishes, so under skewed request lengths short requests pin their slot
+while a straggler drains.  This engine keeps a pool of ``slots`` rows where
+each slot carries its own absolute position, its own remaining-token budget
+and an active mask:
+
+* **admit** — queued requests are prefilled slot-locally at their EXACT
+  prompt length (see the ragged-prompt rule in docs/serving.md) and their
+  decode state (LLN ``(s, z)`` + diag tail, or the softmax KV block) is
+  scattered into the freed pool rows (``PoolSetup.admit_fn``), while the
+  other rows keep decoding from where they are — admission is mid-segment
+  from the pool's point of view.  Same-length queued prompts admit as ONE
+  batched prefill when that is exact (softmax / fixed alpha/beta; dynamic
+  moment matching pools prompt-batch statistics, so those configs prefill
+  per request);
+* **decode** — ``segment`` steps run as ONE jitted ``lax.scan`` with the
+  pooled cache carry donated (``PoolSetup.segment_fn``), so steady-state
+  throughput matches the static scanned loop;
+* **evict** — a row whose budget hits zero drops out of the active mask
+  *inside* the scan (masked rows provably advance nothing: KV writes, LLN
+  state, tails and positions are all ``where``-guarded on the mask), and
+  its slot is handed back to the queue at the next segment boundary.
+
+Why this is cheap for LLN attention: the per-request decode state is
+O(d^2) — a (H, D, Dv) matrix, a (H, D) vector and a diag tail block —
+independent of how long the request's history is, so admitting a request
+into a slot moves a few hundred KB instead of re-paging a full softmax KV
+cache.  (Softmax caches work too; they just move O(max_len) bytes.)
+
+The engine is deliberately host-driven between segments (admission needs a
+queue, which jit cannot own); everything per-token is inside the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import PoolSetup, make_pool_setup
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: ``prompt`` (plen,) int32 token ids and the
+    number of tokens to generate (``gen_len`` >= 1; the first generated
+    token comes from the prefill's last-position logits)."""
+    rid: int
+    prompt: np.ndarray
+    gen_len: int
+
+
+@dataclasses.dataclass
+class BatchingStats:
+    """Engine run summary.  ``outputs`` maps rid -> generated tokens
+    (length == the request's ``gen_len``).  ``completed_tokens`` counts
+    exactly those tokens (goodput numerator); ``decode_steps`` counts
+    scan steps actually dispatched (segments * segment length)."""
+    outputs: dict
+    completed_tokens: int
+    decode_steps: int
+    segments: int
+    admitted: int
+    wall_s: float
+
+
+def synthetic_traffic(n_requests: int, vocab: int, prompt_lens,
+                      gen_lens, seed: int = 0) -> list[Request]:
+    """Mixed-length synthetic traffic: prompts/gen budgets drawn round-robin
+    from the given length menus (deterministic — benchmarks and parity
+    tests need identical request streams across engines)."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(prompt_lens[i % len(prompt_lens)])
+        glen = int(gen_lens[i % len(gen_lens)])
+        prompt = rng.randint(0, vocab, size=(plen,)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, gen_len=glen))
+    return reqs
+
+
+class ContinuousBatcher:
+    """Drives a ``PoolSetup`` over a queue of :class:`Request`s.
+
+    Typical use (see ``launch/serve.py --continuous`` for the CLI form)::
+
+        setup = make_pool_setup(cfg, mesh, slots=4, max_len=256, segment=8)
+        eng = ContinuousBatcher(setup, params)
+        stats = eng.run(synthetic_traffic(...))
+    """
+
+    def __init__(self, setup: PoolSetup, params):
+        self.setup = setup
+        self.params = params
+        self.key = jax.random.PRNGKey(0)
+        # Grouped admission (one batched prefill for several same-length
+        # queued prompts) is only exact when prefill is per-row
+        # independent: softmax has no calibration, and fixed alpha/beta
+        # skips the prompt-batch moment pooling.  Dynamic moment matching
+        # pools sigma statistics across the prompt batch, so grouping
+        # would change outputs — those configs prefill one request at a
+        # time (group size 1).
+        cfg = setup.cfg
+        self.group_admits = (cfg.attn_impl == "softmax"
+                             or cfg.lln_fixed_ab != 0)
+
+    def warmup(self, prompt_lens) -> None:
+        """Compile every (prompt length, admit-group size) prefill, the
+        admit scatters and the segment scan so a timed :meth:`run` measures
+        steady state, not compiles."""
+        s = self.setup
+        plens = list(dict.fromkeys(int(p) for p in prompt_lens))
+        sizes = range(1, s.slots + 1) if self.group_admits else (1,)
+        pooled = s.cache_init()
+        for p in plens:
+            for k in sizes:       # mid-stream admits form every group size
+                _, sc = s.prefill_fn(p, k)(self.params,
+                                           jnp.zeros((k, p), jnp.int32))
+                pooled = s.admit_fn(pooled, sc,
+                                    jnp.arange(k, dtype=jnp.int32))
+        del pooled
+        # One tiny end-to-end pass for the segment scan + harvest path;
+        # generation budgets are clamped to the pool's max_len.
+        dummy = [Request(rid=i, prompt=np.zeros((p,), np.int32),
+                         gen_len=max(1, min(s.segment + 1, s.max_len - p)))
+                 for i, p in enumerate(plens)]
+        self.run(dummy)
+
+    def run(self, requests, key: Optional[jax.Array] = None
+            ) -> BatchingStats:
+        s = self.setup
+        if any(r.rid < 0 for r in requests):
+            raise ValueError("request ids must be >= 0 (-1 marks a free slot)")
+        queue = deque(requests)
+        outputs: dict = {r.rid: [] for r in requests}
+        slot_rid = np.full((s.slots,), -1, np.int64)
+
+        caches = s.cache_init()
+        tok = jnp.zeros((s.slots,), jnp.int32)
+        pos = jnp.zeros((s.slots,), jnp.int32)
+        remaining = jnp.zeros((s.slots,), jnp.int32)
+        active = jnp.zeros((s.slots,), jnp.bool_)
+        if key is None:    # advance so repeated runs sample fresh streams
+            self.key, key = jax.random.split(self.key)
+
+        admitted = segments = decode_steps = 0
+        t0 = time.perf_counter()
+        while queue or slot_rid.max() >= 0:
+            # --- admit into every free slot, grouped by prompt length ---
+            free = list(np.nonzero(slot_rid < 0)[0])
+            while queue and free:
+                group = [queue.popleft()]
+                plen = group[0].prompt.shape[0]
+                if self.group_admits:
+                    while (queue and len(group) < len(free)
+                           and queue[0].prompt.shape[0] == plen):
+                        group.append(queue.popleft())
+                for req in group:
+                    if plen + req.gen_len > s.max_len:
+                        raise ValueError(
+                            f"request {req.rid}: prompt {plen} + gen "
+                            f"{req.gen_len} exceeds max_len {s.max_len}")
+                pf = s.prefill_fn(plen, len(group))
+                prompts = jnp.asarray(np.stack([r.prompt for r in group]))
+                logits, slot_caches = pf(self.params, prompts)
+                last = logits[:, -1] if logits.ndim == 3 else logits
+                tok0 = np.asarray(jnp.argmax(last, -1).astype(jnp.int32))
+                live, live_slots = [], []
+                for j, req in enumerate(group):
+                    outputs[req.rid].append(int(tok0[j]))
+                    admitted += 1
+                    if req.gen_len <= 1:
+                        continue                 # done at prefill; slot free
+                    slot = int(free.pop(0))
+                    live.append(j)
+                    live_slots.append(slot)
+                    slot_rid[slot] = req.rid
+                if not live:
+                    continue
+                if len(live) != len(group):      # drop prefill-only rows
+                    sel = jnp.asarray(live)
+                    # Leaves whose rank matches the pooled leaf carry the
+                    # admit-group axis at position 1; lower-rank leaves
+                    # (len/pos/alpha/beta) are shared across the group.
+                    slot_caches = jax.tree_util.tree_map(
+                        lambda sl, pl: sl[:, sel] if sl.ndim == pl.ndim
+                        else sl, slot_caches, caches)
+                slots_dev = jnp.asarray(live_slots, jnp.int32)
+                caches = s.admit_fn(caches, slot_caches, slots_dev)
+                tok = tok.at[slots_dev].set(jnp.asarray(tok0[live]))
+                pos = pos.at[slots_dev].set(
+                    jnp.full((len(live),), plen, jnp.int32))
+                remaining = remaining.at[slots_dev].set(jnp.asarray(
+                    [r.gen_len - 1 for i, r in enumerate(group)
+                     if i in live], jnp.int32))
+                active = active.at[slots_dev].set(True)
+
+            if slot_rid.max() < 0:
+                continue                          # all admits finished early
+
+            # --- one scanned decode segment -----------------------------
+            key, seg_key = jax.random.split(key)
+            (caches, tok, pos, remaining, active,
+             toks, emitted) = s.segment_fn(self.params, caches, tok, pos,
+                                           remaining, active, seg_key)
+            segments += 1
+            decode_steps += s.segment
+
+            # --- harvest + evict ---------------------------------------
+            toks_h = np.asarray(toks)             # (S, B)
+            emitted_h = np.asarray(emitted)
+            active_h = np.asarray(active)
+            for idx in range(s.slots):
+                rid = int(slot_rid[idx])
+                if rid == -1:
+                    continue
+                steps = np.nonzero(emitted_h[:, idx])[0]
+                outputs[rid].extend(int(t) for t in toks_h[steps, idx])
+                if not active_h[idx]:             # evict: budget exhausted
+                    slot_rid[idx] = -1
+        wall = time.perf_counter() - t0
+
+        outputs = {rid: np.asarray(t, np.int32) for rid, t in
+                   outputs.items()}
+        done = sum(len(t) for t in outputs.values())
+        return BatchingStats(outputs=outputs, completed_tokens=done,
+                             decode_steps=decode_steps, segments=segments,
+                             admitted=admitted, wall_s=wall)
+
+
+__all__ = ["Request", "BatchingStats", "ContinuousBatcher",
+           "synthetic_traffic", "make_pool_setup", "PoolSetup"]

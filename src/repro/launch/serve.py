@@ -12,6 +12,15 @@ step runs standalone — it carries the compile — and is reported separately
 so the tok/s figure measures steady state.  ``--no-scan`` restores the
 seed-style one-dispatch-per-token Python loop (the benchmark baseline);
 ``--no-serve-kernel`` restores the seed two-pass prefill.
+
+``--continuous`` switches to the continuous-batching pool
+(``launch/batcher.py``): mixed-length synthetic traffic is admitted into
+freed slots mid-stream (per-row positions, masked rows), e.g.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+      --continuous --requests 16 --batch 4 --gen-lens 4,4,4,24
+
+and reports goodput (completed tok/s) instead of lockstep tok/s.
 """
 from __future__ import annotations
 
@@ -25,7 +34,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec
 from repro.launch.mesh import compat_mesh
-from repro.launch.steps import make_serve_setup, sample_token
+from repro.launch.steps import (make_pool_setup, make_serve_setup,
+                                sample_token)
 from repro.models import build_model, synthetic_batch
 
 
@@ -46,6 +56,17 @@ def main(argv=None):
     ap.add_argument("--no-serve-kernel", dest="serve_kernel",
                     action="store_false", default=True,
                     help="seed two-pass prefill (no state-emitting kernel)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching pool (mixed-length traffic)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="[--continuous] synthetic requests to serve")
+    ap.add_argument("--segment", type=int, default=8,
+                    help="[--continuous] decode steps per scanned segment")
+    ap.add_argument("--gen-lens", default=None,
+                    help="[--continuous] comma list of generation budgets "
+                         "(skewed by default)")
+    ap.add_argument("--prompt-lens", default=None,
+                    help="[--continuous] comma list of prompt lengths")
     args = ap.parse_args(argv)
 
     overrides = {}
@@ -58,6 +79,8 @@ def main(argv=None):
 
     data, model_ax = (int(x) for x in args.mesh.split(","))
     mesh = compat_mesh((data, model_ax), ("data", "model"))
+    if args.continuous:
+        return _run_continuous(cfg, model, mesh, args)
     max_len = args.prompt_len + args.gen + cfg.num_prefix_tokens
     shape = ShapeSpec("cli", max_len, args.batch, "decode")
 
@@ -133,6 +156,42 @@ def main(argv=None):
               f"({tok_s:.1f} tok/s)")
         print("sample tokens:", toks[0, :16].tolist())
         return toks
+
+
+def _run_continuous(cfg, model, mesh, args):
+    """Continuous-batching pool over mixed-length synthetic traffic."""
+    from repro.launch.batcher import ContinuousBatcher, synthetic_traffic
+
+    gen_lens = ([int(x) for x in args.gen_lens.split(",")]
+                if args.gen_lens else [args.gen // 4 or 1] * 3 + [args.gen])
+    prompt_lens = ([int(x) for x in args.prompt_lens.split(",")]
+                   if args.prompt_lens else [args.prompt_len])
+    max_len = max(prompt_lens) + max(gen_lens)
+
+    with mesh:
+        setup = make_pool_setup(cfg, mesh, slots=args.batch,
+                                max_len=max_len, segment=args.segment,
+                                temperature=args.temperature)
+        params = jax.device_put(model.init(jax.random.PRNGKey(args.seed)))
+        eng = ContinuousBatcher(setup, params)
+        reqs = synthetic_traffic(args.requests, cfg.vocab, prompt_lens,
+                                 gen_lens, seed=args.seed)
+        eng.warmup(prompt_lens)
+        stats = eng.run(reqs, key=jax.random.PRNGKey(args.seed + 1))
+
+    # Same definition as benchmarks/bench_batching.py: useful tokens over
+    # dispatched row-steps (+1 prefill-emitted token per request).
+    util = stats.completed_tokens / max(
+        stats.decode_steps * args.batch + args.requests, 1)
+    print(f"continuous: {args.requests} requests over {args.batch} slots, "
+          f"segment={args.segment}, gen_lens={gen_lens}")
+    print(f"  {stats.completed_tokens} tokens in {stats.wall_s:.3f}s "
+          f"({stats.completed_tokens / max(stats.wall_s, 1e-9):.1f} tok/s "
+          f"goodput), {stats.segments} segments, "
+          f"slot utilization {util:.2f}")
+    first = stats.outputs[0]
+    print("request 0 tokens:", first[:16].tolist())
+    return stats
 
 
 if __name__ == "__main__":

@@ -202,6 +202,21 @@ def sample_token(logits, temperature: float, key) -> jnp.ndarray:
 
 @dataclasses.dataclass
 class ServeSetup:
+    """Jitted serving entry points for one (cfg, mesh, batch-shape).
+
+    ``prefill_fn(params, batch) -> (last logits, caches)`` — batched prompt
+    forward building the decode caches (state-emitting LLN kernel path by
+    default).  ``decode_fn(params, caches, token, pos) -> (logits, caches)``
+    — one decode step, donated caches.  ``make_generate(steps, temperature)``
+    builds a jitted scanned generation segment
+    ``(params, caches, tok, pos0, key) -> (tokens (B, steps), caches)``:
+    the whole segment is ONE dispatch — a ``lax.scan`` over the decode step
+    with donated cache carry (vs one jitted dispatch per token from a
+    Python loop).  ``tok`` is the (B,) int32 token decoded first; ``pos0``
+    its scalar absolute position; greedy when ``temperature == 0`` (the
+    PRNG key is then unused).  All rows advance in lockstep — for
+    mixed-length traffic see ``make_pool_setup``.
+    """
     prefill_fn: Any
     decode_fn: Any
     params_struct: Any
@@ -212,11 +227,6 @@ class ServeSetup:
     rules: dict
     token_struct: Any = None
     pos_struct: Any = None
-    # make_generate(steps, temperature) -> jitted
-    #   (params, caches, tok, pos0, key) -> (tokens (B, steps), caches):
-    # the whole generation segment as ONE dispatch — a lax.scan over the
-    # decode step with donated cache carry (vs one jitted dispatch per
-    # token from a Python loop).
     make_generate: Any = None
 
 
@@ -290,3 +300,136 @@ def make_serve_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
     setup.token_struct = token_struct
     setup.pos_struct = pos_struct
     return setup
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: slotted request pool over per-row caches.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PoolSetup:
+    """Jitted building blocks of the continuous-batching engine
+    (``launch/batcher.py`` drives them; ``docs/serving.md`` has the
+    lifecycle diagram).
+
+    * ``cache_init()`` — pooled per-row caches for ``slots`` rows at
+      ``max_len``: every leaf carries the slot axis, and the per-layer
+      ``len``/``pos`` counters are (B,) vectors ((B, H) alpha/beta) so each
+      slot sits at its own depth with its own prompt calibration.
+    * ``prefill_fn(plen, batch=1)`` — a jitted slot-local prefill
+      ``(params, tokens (batch, plen)) -> (last logits, slot caches)`` at
+      the requests' EXACT prompt length (compiled once per distinct
+      (length, group size) — the ragged-prompt rule: LLN state accumulates
+      every key it sees, so right-padding a prompt would corrupt the
+      carry; see docs/serving.md).  ``batch > 1`` admits a same-length
+      group in one dispatch (the engine only groups when per-request
+      semantics are preserved: softmax, or fixed alpha/beta — dynamic
+      moment matching pools statistics over the prompt batch).
+    * ``admit_fn(pooled, slot_caches, slot_idx)`` — scatters the k rows of
+      a slot-local cache into pool rows ``slot_idx`` ((k,) int32) via one
+      fused per-leaf scatter (donated pooled carry, no host copies).
+    * ``segment_fn(params, caches, tok, pos, remaining, active, key) ->
+      (caches, tok, pos, remaining, active, tokens (S, B), emitted (S, B))``
+      — ``segment`` decode steps folded into ONE jitted ``lax.scan`` with
+      donated cache carry.  Each step decodes every slot, samples only
+      active rows, advances per-row positions, and retires rows whose
+      ``remaining`` hits zero (in-scan evict: the row's mask drops, so by
+      the masked-row contract nothing it does from then on can mutate
+      state).  Steady-state throughput therefore matches the static
+      ``make_generate`` loop — admits/evicts never leave the scan.
+    """
+    cfg: Any
+    model: Any
+    mesh: Any
+    rules: dict
+    slots: int
+    max_len: int
+    segment: int
+    temperature: float
+    cache_init: Any
+    prefill_fn: Any
+    admit_fn: Any
+    segment_fn: Any
+
+
+def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
+                    slots: int, max_len: int, segment: int = 8,
+                    temperature: float = 0.0,
+                    multi_pod: bool = False) -> PoolSetup:
+    """Build the jitted pieces of the continuous-batching pool.
+
+    Supports the dense/MoE decoder families with standard attention
+    (softmax / lln / lln_diag KV-state caches); MLA caches are not wired
+    for per-row decode yet.
+    """
+    if cfg.family not in ("dense", "moe") or cfg.kv_lora > 0:
+        raise NotImplementedError(
+            "continuous batching supports dense/moe decoders "
+            f"(family={cfg.family}, kv_lora={cfg.kv_lora})")
+    model = build_model(cfg)
+    rules = shd.make_rules(cfg, multi_pod=multi_pod, serve=True)
+
+    def cache_init():
+        struct = params_struct if params_struct is not None else \
+            jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        return model.cache_init(struct, slots, max_len, per_row=True)
+
+    def _pf(params, tokens):
+        with shd.logical_rules(mesh, rules):
+            return model.prefill(params, {"inputs": tokens}, max_len)
+
+    _pf_jit = jax.jit(_pf)
+
+    def prefill_fn(plen: int, batch: int = 1):
+        # jax.jit caches executables per input shape, so one jitted object
+        # serves every (prompt length, admit-group size); the signature
+        # documents that each distinct pair costs one trace/compile.
+        del plen, batch
+        return _pf_jit
+
+    def _admit(pooled, slot_caches, slot_idx):
+        """Scatter a k-row slot-local cache into pool rows ``slot_idx``
+        ((k,) int32).  Scalar-per-layer leaves (len/pos/alpha/beta, which a
+        batched prefill shares across its rows) broadcast over the group.
+        """
+        k_rows = slot_idx.shape[0]
+
+        def leaf(pl, sl):
+            sl = sl.astype(pl.dtype)
+            if sl.ndim == pl.ndim - 1:     # scalar-per-layer (len/pos/alpha)
+                sl = jnp.broadcast_to(
+                    sl[:, None], sl.shape[:1] + (k_rows,) + sl.shape[1:])
+            return pl.at[:, slot_idx].set(sl)
+        return jax.tree_util.tree_map(leaf, pooled, slot_caches)
+
+    admit_fn = jax.jit(_admit, donate_argnums=(0,))
+
+    def _segment(params, caches, tok, pos, remaining, active, key):
+        def body(carry, i):
+            caches, tok, pos, remaining, active = carry
+            logits, caches = model.decode(params, caches, tok, pos,
+                                          row_mask=active)
+            nxt = sample_token(logits, temperature,
+                               jax.random.fold_in(key, i))
+            tok = jnp.where(active, nxt, tok)
+            emitted = active
+            adv = active.astype(jnp.int32)
+            pos = pos + adv
+            remaining = remaining - adv
+            active = active & (remaining > 0)
+            return (caches, tok, pos, remaining, active), (tok, emitted)
+
+        with shd.logical_rules(mesh, rules):
+            carry, (toks, emitted) = jax.lax.scan(
+                body, (caches, tok, pos, remaining, active),
+                jnp.arange(segment, dtype=jnp.int32))
+        caches, tok, pos, remaining, active = carry
+        return caches, tok, pos, remaining, active, toks, emitted
+
+    segment_fn = jax.jit(_segment, donate_argnums=(1,))
+
+    return PoolSetup(cfg=cfg, model=model, mesh=mesh, rules=rules,
+                     slots=slots, max_len=max_len, segment=segment,
+                     temperature=temperature, cache_init=cache_init,
+                     prefill_fn=prefill_fn, admit_fn=admit_fn,
+                     segment_fn=segment_fn)

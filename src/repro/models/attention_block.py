@@ -101,21 +101,32 @@ def attn_apply(p, x, cfg, positions, *, causal: bool = True,
 # an explicit escape, used by benchmarks/bench_serve.py as the baseline.
 # ---------------------------------------------------------------------------
 
-def attn_cache_init(cfg, batch: int, max_len: int):
+def attn_cache_init(cfg, batch: int, max_len: int, per_row: bool = False):
+    """Zeroed decode cache for one attention layer.
+
+    ``per_row=False`` (static batch): one scalar ``len``/``pos`` and one
+    (H,) alpha/beta shared by every row — all rows advance in lockstep.
+    ``per_row=True`` (continuous batching): ``len``/``pos`` are (B,) and
+    alpha/beta are (B, H) so every slot carries its own depth and its own
+    prompt-derived calibration (requests are prefilled separately and admit
+    into a freed slot mid-segment).
+    """
     hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ctr = (batch,) if per_row else ()
     if cfg.attn_impl == "softmax":
         return {"k": jnp.zeros((batch, max_len, g, hd), cfg.cdtype),
                 "v": jnp.zeros((batch, max_len, g, hd), cfg.cdtype),
-                "len": jnp.zeros((), jnp.int32)}
+                "len": jnp.zeros(ctr, jnp.int32)}
     gt = g if cfg.use_serve_kernel else h     # tail heads: G (kernel) / H (seed)
+    ab = (batch, h) if per_row else (h,)
     return {"s": jnp.zeros((batch, h, hd, hd), jnp.float32),
             "z": jnp.zeros((batch, h, hd), jnp.float32),
             "c_k": jnp.zeros((batch, 1, h, 1), jnp.float32),
             "tail_k": jnp.zeros((batch, cfg.diag_block, gt, hd), cfg.cdtype),
             "tail_v": jnp.zeros((batch, cfg.diag_block, gt, hd), cfg.cdtype),
-            "pos": jnp.zeros((), jnp.int32),
-            "alpha": jnp.ones((h,), jnp.float32),
-            "beta": jnp.ones((h,), jnp.float32)}   # expanded to H heads
+            "pos": jnp.zeros(ctr, jnp.int32),
+            "alpha": jnp.ones(ab, jnp.float32),
+            "beta": jnp.ones(ab, jnp.float32)}   # expanded to H heads
 
 
 def _tail_of(t, n: int, blk: int):
@@ -183,10 +194,18 @@ def attn_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
     return dense(p["o_w"], out, cfg.cdtype), cache
 
 
-def attn_decode(p, x, cache, cfg, position):
-    """Decode over T >= 1 new tokens.  x: (B, T, d); position: scalar
-    absolute index of the first new token (T=1 is the generation loop,
-    T>1 the chunked multi-token / speculative-scoring path)."""
+def attn_decode(p, x, cache, cfg, position, *, row_mask=None):
+    """Decode over T >= 1 new tokens.  x: (B, T, d).
+
+    ``position``: absolute index of the first new token — a scalar (static
+    batch: every row at the same depth; T=1 is the generation loop, T>1 the
+    chunked multi-token / speculative-scoring path) or a per-row (B,)
+    vector (continuous batching; requires a ``per_row`` cache, whose
+    ``len``/``pos`` leaves are (B,) and alpha/beta (B, H)).
+    ``row_mask``: optional (B,) bool — rows where it is False write nothing
+    (KV cache / LLN state / tails / positions all keep their old values);
+    their outputs are garbage and must be discarded by the caller.
+    """
     b, n, _ = x.shape
     hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     q = dense(p["q_w"], x, cfg.cdtype).reshape(b, n, h, hd)
@@ -195,32 +214,30 @@ def attn_decode(p, x, cache, cfg, position):
     if cfg.qk_norm:
         q = rms_head_norm(p["q_norm_scale"], q)
         k = rms_head_norm(p["k_norm_scale"], k)
-    pos = position + jnp.arange(n, dtype=jnp.int32) \
-        if jnp.ndim(position) == 0 else position
+    counter = cache["len" if cfg.attn_impl == "softmax" else "pos"]
+    if jnp.ndim(position) == 0:
+        pos = position + jnp.arange(n, dtype=jnp.int32)
+    elif jnp.ndim(position) == 1 and jnp.ndim(counter) == 1:
+        # Per-row bases: (B,) -> (B, T) absolute positions.
+        pos = position[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
+    else:
+        pos = position
     q = rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
     k = rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
 
     if cfg.attn_impl == "softmax":
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), cache["len"], axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), cache["len"], axis=1)
-        kc = constrain(kc, "act_batch", "act_seq_cache", "kv_heads", None)
-        vc = constrain(vc, "act_batch", "act_seq_cache", "kv_heads", None)
-        new_len = cache["len"] + n
-        valid = jnp.broadcast_to(
-            jnp.arange(kc.shape[1])[None] < new_len, (b, kc.shape[1]))
-        out = ca.flash_softmax(q, kc, vc, causal=True,
-                               chunk=min(cfg.softmax_chunk, kc.shape[1]),
-                               mask=valid, q_start=cache["len"])
-        new_cache = {"k": kc, "v": vc, "len": new_len}
+        out, kv2 = ca.decode_softmax(
+            ca.KVCache(k=cache["k"], v=cache["v"], length=cache["len"]),
+            q, k, v, chunk=cfg.softmax_chunk, row_mask=row_mask)
+        new_cache = {"k": kv2.k, "v": kv2.v, "len": kv2.length}
     else:
         st = ca.LLNDecodeState(
             lln=core_lln.LLNState(s=cache["s"], z=cache["z"], c_k=cache["c_k"]),
             tail_k=cache["tail_k"], tail_v=cache["tail_v"], pos=cache["pos"])
         out, st = ca.decode_lln_chunk(st, q, k, v, cache["alpha"],
                                       cache["beta"], impl=cfg.attn_impl,
-                                      use_kernel=cfg.use_serve_kernel)
+                                      use_kernel=cfg.use_serve_kernel,
+                                      row_mask=row_mask)
         new_cache = {"s": st.lln.s, "z": st.lln.z, "c_k": st.lln.c_k,
                      "tail_k": st.tail_k, "tail_v": st.tail_v, "pos": st.pos,
                      "alpha": cache["alpha"], "beta": cache["beta"]}

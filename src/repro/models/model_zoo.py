@@ -7,7 +7,11 @@ Batch conventions (all int32 tokens in [0, vocab)):
 
 ``loss``  : params, batch -> scalar (chunked xent + router aux).
 ``prefill``: params, batch -> (last logits (B, Vpad), caches).
-``decode`` : params, caches, token (B,), position -> (logits, caches).
+``decode`` : params, caches, token (B,) or (B, T), position -> (logits,
+             caches).  Dense/MoE decoders additionally accept a per-row
+             (B,) ``position`` plus ``row_mask`` against per-row caches
+             (``cache_init(..., per_row=True)``) — the continuous-batching
+             contract (masked rows advance nothing).
 """
 from __future__ import annotations
 
@@ -65,8 +69,10 @@ def build_model(cfg: ArchConfig) -> Model:
 
         return Model(cfg=cfg, init=lambda key: tr.lm_init(key, cfg),
                      loss=loss, hidden=hidden, prefill=prefill,
-                     decode=lambda p, c, t, pos: tr.lm_decode(p, c, t, cfg, pos),
-                     cache_init=lambda p, b, n: tr.lm_cache_init(p, cfg, b, n),
+                     decode=lambda p, c, t, pos, row_mask=None: tr.lm_decode(
+                         p, c, t, cfg, pos, row_mask=row_mask),
+                     cache_init=lambda p, b, n, per_row=False:
+                         tr.lm_cache_init(p, cfg, b, n, per_row=per_row),
                      param_count=_count)
 
     if fam in ("ssm", "hybrid"):

@@ -91,13 +91,17 @@ def block_prefill(p, x, cfg, positions, *, use_moe: bool, prefix_len: int = 0,
     return x + ffn_out.astype(x.dtype), cache
 
 
-def block_decode(p, x, cache, cfg, position, *, use_moe: bool):
+def block_decode(p, x, cache, cfg, position, *, use_moe: bool,
+                 row_mask=None):
     h = apply_norm(p["ln1"], x, cfg.norm)
     if _use_mla(cfg):
+        if row_mask is not None:
+            raise NotImplementedError("row-masked decode is not wired for MLA")
         attn_out, cache = mla_mod.mla_decode(p["attn"], h, cache, cfg,
                                              position)
     else:
-        attn_out, cache = attn_decode(p["attn"], h, cache, cfg, position)
+        attn_out, cache = attn_decode(p["attn"], h, cache, cfg, position,
+                                      row_mask=row_mask)
     x = x + attn_out.astype(x.dtype)
     h = apply_norm(p["ln2"], x, cfg.norm)
     ffn_out = (moe_apply(p["moe"], h, cfg)[0] if use_moe
@@ -182,10 +186,15 @@ def lm_logits(p, tokens, cfg, **kw):
 # Serving.
 # ---------------------------------------------------------------------------
 
-def lm_cache_init(p, cfg, batch: int, max_len: int):
+def lm_cache_init(p, cfg, batch: int, max_len: int, per_row: bool = False):
+    """Stacked per-layer decode caches.  ``per_row=True`` allocates the
+    continuous-batching layout (per-row ``len``/``pos``, (B, H)
+    alpha/beta — see ``attn_cache_init``); unsupported for MLA."""
     first, n_main, is_moe = _layer_groups(cfg)
+    if per_row and _use_mla(cfg):
+        raise NotImplementedError("per-row caches are not wired for MLA")
     one = (mla_mod.mla_cache_init(cfg, batch, max_len) if _use_mla(cfg)
-           else attn_cache_init(cfg, batch, max_len))
+           else attn_cache_init(cfg, batch, max_len, per_row=per_row))
 
     def stack(n):
         return jax.tree_util.tree_map(
@@ -229,11 +238,14 @@ def lm_prefill(p, tokens, cfg, max_len: int,
     return logits, caches
 
 
-def lm_decode(p, caches, token, cfg, position):
+def lm_decode(p, caches, token, cfg, position, row_mask=None):
     """Decode step.  token: (B,) or (B, T) int32 — T > 1 advances the caches
     over a whole chunk in one dispatch (multi-token/speculative scoring);
-    position: scalar int32 index of the first new token.  Returns logits
-    (B, V) for (B,) input, (B, T, V) for chunked input."""
+    position: scalar int32 index of the first new token, or a per-row (B,)
+    vector when the caches were allocated ``per_row`` (continuous
+    batching).  ``row_mask``: optional (B,) bool — masked-off rows leave
+    every cache leaf untouched and their logits are garbage.  Returns
+    logits (B, V) for (B,) input, (B, T, V) for chunked input."""
     single = token.ndim == 1
     if not single and _use_mla(cfg):
         raise NotImplementedError("chunked decode is not wired for MLA")
@@ -246,7 +258,7 @@ def lm_decode(p, caches, token, cfg, position):
         def fn(x, xs):
             lp, cache = xs
             x, cache = block_decode(lp, x, cache, cfg, position,
-                                    use_moe=use_moe)
+                                    use_moe=use_moe, row_mask=row_mask)
             return x, cache
         return fn
 

@@ -1,0 +1,20 @@
+"""Smoke test: the batching benchmark runs end-to-end (interpret mode)."""
+import json
+
+from benchmarks.bench_batching import run
+
+
+def test_bench_batching_smoke(tmp_path):
+    out = tmp_path / "BENCH_batching.json"
+    report = run(str(out), smoke=True, repeats=1, verbose=False)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk["modes"].keys() == {"static", "continuous"}
+    assert len(on_disk["results"]) == len(report["results"]) == 1
+    for row in on_disk["results"]:
+        assert row["goodput_tok_s"]["static"] > 0
+        assert row["goodput_tok_s"]["continuous"] > 0
+        assert row["speedup"] > 0
+        assert 0 < row["slot_utilization"]["continuous"] <= 1
+        assert row["traffic"]["useful_tokens"] == sum(
+            [3, 3, 9, 3, 3][:row["traffic"]["requests"]])
