@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
                        (also writes BENCH_serve.json at the repo root)
   bench_batching       continuous vs static batching goodput under skewed
                        request lengths (writes BENCH_batching.json)
+  bench_dispatch       AttentionEngine indirection vs direct kernel calls
+                       (ratio must stay ~1.0; writes BENCH_dispatch.json
+                       when run standalone)
 
 Roofline terms (EXPERIMENTS.md §Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
@@ -22,7 +25,8 @@ import time
 
 def main() -> None:
     from . import (bench_batching, bench_concentration, bench_convergence,
-                   bench_distribution, bench_scaling, bench_serve)
+                   bench_dispatch, bench_distribution, bench_scaling,
+                   bench_serve)
 
     class _ServeAdapter:
         run = staticmethod(bench_serve.run_rows)
@@ -30,12 +34,16 @@ def main() -> None:
     class _BatchingAdapter:
         run = staticmethod(bench_batching.run_rows)
 
+    class _DispatchAdapter:
+        run = staticmethod(bench_dispatch.run_rows)
+
     modules = [("distribution", bench_distribution),
                ("concentration", bench_concentration),
                ("convergence", bench_convergence),
                ("scaling", bench_scaling),
                ("serve", _ServeAdapter),
-               ("batching", _BatchingAdapter)]
+               ("batching", _BatchingAdapter),
+               ("dispatch", _DispatchAdapter)]
     all_rows = []
     for name, mod in modules:
         print(f"== {name} ==", file=sys.stderr, flush=True)

@@ -29,11 +29,16 @@ class ArchConfig:
     diag_block: int = 256
     lln_chunk: int = 256
     use_kernel: bool = False         # Pallas kernels (TPU); jnp path on CPU
-    use_serve_kernel: bool = True    # kernelized serving path (state-emitting
-                                     # prefill, G-head tails); False = seed
-                                     # two-pass path, kept for benchmarking
+    use_serve_kernel: bool = True    # legacy escape: False maps to
+                                     # attn_backend="ref" (the seed jnp
+                                     # serving path), kept for benchmarking
+    attn_backend: str = "auto"       # kernels/registry.py backend:
+                                     # auto | pallas | scan | ref
     qk_norm: bool = False
     lln_fixed_ab: float = 0.0        # fixed alpha=beta (paper §A.8.4); 0=dynamic
+    lln_per_row_calib: bool = False  # moment-match each batch row alone
+                                     # ((B,H) alpha/beta — the continuous-
+                                     # batching admission setting)
     rope_theta: float = 10000.0
     rotary_pct: float = 1.0          # stablelm 0.25; chatglm 0.5 ("2d" RoPE)
     softmax_chunk: int = 1024

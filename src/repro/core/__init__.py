@@ -6,8 +6,10 @@ from .diag import block_diag_attn
 from .lln import LLNState, lln_bidir, lln_causal, lln_causal_scan
 from .moment_matching import (DEFAULT_A, DEFAULT_B, constants_for_dim,
                               fit_lln_constants, solve_alpha_beta)
+from .engine import AttentionEngine, AttentionState
 
 __all__ = [
+    "AttentionEngine", "AttentionState",
     "AttnConfig", "KVCache", "LLNDecodeState", "LLNState",
     "multi_head_attention", "flash_softmax", "naive_softmax",
     "decode_lln", "decode_lln_chunk", "decode_softmax", "block_diag_attn",

@@ -38,6 +38,8 @@ class AttnConfig:
     lln_chunk: int = 128           # chunk of the causal LLN scan
     softmax_chunk: int = 1024      # key-chunk of the flash softmax path
     use_kernel: bool = False       # route through Pallas kernels (kernels/ops)
+    backend: Optional[str] = None  # explicit kernel backend (kernels/registry
+                                   # auto|pallas|scan|ref); None -> "auto"
     # Moment-matching constants; None -> calibrated defaults for head_dim.
     mm_a: Optional[float] = None
     mm_b: Optional[float] = None
@@ -53,8 +55,9 @@ def _repeat_kv(t: jnp.ndarray, h: int) -> jnp.ndarray:
     return jnp.repeat(t, h // g, axis=2)
 
 
-def batch_alpha_beta(q: jnp.ndarray, k: jnp.ndarray,
-                     cfg: AttnConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+def batch_alpha_beta(q: jnp.ndarray, k: jnp.ndarray, cfg: AttnConfig,
+                     per_row: bool = False
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Moment-matched (alpha, beta) from current-batch statistics.
 
     Mirrors the artifact: sigma_q/sigma_k are measured on the fly
@@ -63,25 +66,39 @@ def batch_alpha_beta(q: jnp.ndarray, k: jnp.ndarray,
 
     GQA: statistics are pooled per kv *group* (the r query heads sharing one
     kv head), so alpha: (H,) and beta: (G,) stay consistent within a group.
+
+    ``per_row=True`` measures each batch row ALONE (statistics over that
+    row's sequence and feature dims only) and returns alpha: (B, H) and
+    beta: (B, G).  This is the continuous-batching admission setting: a
+    batched slot prefill then yields exactly the calibration each request
+    would get prefilled solo, so grouped admission stays per-request exact
+    even under dynamic moment matching.  ``cfg`` may be any object with
+    ``fixed_ab`` / ``mm_a`` / ``mm_b`` attributes (``AttnConfig`` or
+    ``kernels.registry.AttnSpec``).
     """
-    h, g = q.shape[2], k.shape[2]
+    bsz, h, g = q.shape[0], q.shape[2], k.shape[2]
     if cfg.fixed_ab:
+        if per_row:
+            return (jnp.full((bsz, h), cfg.fixed_ab, jnp.float32),
+                    jnp.full((bsz, g), cfg.fixed_ab, jnp.float32))
         return (jnp.full((h,), cfg.fixed_ab, jnp.float32),
                 jnp.full((g,), cfg.fixed_ab, jnp.float32))
     a, b = (cfg.mm_a, cfg.mm_b)
     if a is None or b is None:
         a, b = constants_for_dim(q.shape[-1])
     r = h // g
-    sq = jnp.sqrt(jnp.mean(jnp.square(q.astype(jnp.float32)), axis=(0, 1, 3)))
-    sq_g = jnp.mean(sq.reshape(g, r), axis=1)                       # (G,)
+    axes = (1, 3) if per_row else (0, 1, 3)   # row-local vs batch-pooled
+    sq = jnp.sqrt(jnp.mean(jnp.square(q.astype(jnp.float32)), axis=axes))
+    sq_g = jnp.mean(sq.reshape(sq.shape[:-1] + (g, r)), axis=-1)    # (..,G)
     sk_g = jnp.sqrt(jnp.mean(jnp.square(k.astype(jnp.float32)),
-                             axis=(0, 1, 3)))                       # (G,)
+                             axis=axes))                            # (..,G)
     alpha_g, beta_g = solve_alpha_beta(sq_g, sk_g, a, b)
     # Per-query-head alpha re-solved against the group's sigma_tilde so each
     # q head is correctly normalized by its own sigma_q (eq. 10).
     sigma_sm_sq = jnp.square(sq_g) * jnp.square(sk_g)
-    st = jnp.sqrt(jnp.maximum((sigma_sm_sq - b) / a, 1e-4))         # (G,)
-    alpha = jnp.repeat(st, r) / (jnp.sqrt(2.0) * jnp.maximum(sq, 1e-4))
+    st = jnp.sqrt(jnp.maximum((sigma_sm_sq - b) / a, 1e-4))         # (..,G)
+    alpha = jnp.repeat(st, r, axis=-1) / (jnp.sqrt(2.0)
+                                          * jnp.maximum(sq, 1e-4))
     del alpha_g
     return alpha, beta_g
 
@@ -270,23 +287,26 @@ def multi_head_attention(
         alpha = jnp.broadcast_to(alpha, (h,))
     if beta.ndim == 0:
         beta = jnp.broadcast_to(beta, (g,))
-    if beta.shape[0] == h and g != h:      # caller passed per-q-head beta
-        beta = beta.reshape(g, h // g).mean(axis=1)
+    # Heads live on the LAST axis ((H,) or per-row (B, H)) — pool a
+    # per-q-head beta to the kv groups either way.
+    if beta.shape[-1] == h and g != h:
+        beta = beta.reshape(beta.shape[:-1] + (g, h // g)).mean(axis=-1)
 
     if cfg.use_kernel:
-        # Kernels handle GQA via BlockSpec index maps — no KV repeat.
-        from repro.kernels import ops as kops
-        if cfg.impl == "lln":
-            return kops.lln_attention(q, k, v, alpha, beta, cfg.causal,
-                                      cfg.lln_chunk)
-        if cfg.impl == "lln_diag":
-            return kops.lln_diag_attention(q, k, v, alpha, beta, cfg.causal,
-                                           cfg.diag_block)
-        raise ValueError(f"unknown attention impl: {cfg.impl}")
+        # Kernels handle GQA via BlockSpec index maps — no KV repeat; the
+        # backend registry owns the pallas/scan/ref dispatch.
+        from repro.kernels import registry as kreg
+        spec = kreg.AttnSpec(impl=cfg.impl, causal=cfg.causal, r=h // g,
+                             backend=cfg.backend or "auto",
+                             lln_chunk=cfg.lln_chunk,
+                             diag_block=cfg.diag_block,
+                             softmax_chunk=cfg.softmax_chunk,
+                             fixed_ab=cfg.fixed_ab)
+        return kreg.attention(spec, q, k, v, alpha, beta)
 
     kv_k = _repeat_kv(k, h)
     kv_v = _repeat_kv(v, h)
-    beta_h = jnp.repeat(beta, h // g) if g != h else beta
+    beta_h = jnp.repeat(beta, h // g, axis=-1) if g != h else beta
     if cfg.causal:
         lln_out = lln_causal(q, kv_k, kv_v, alpha, beta_h, chunk=cfg.lln_chunk)
     else:
@@ -407,7 +427,8 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
                      alpha: jnp.ndarray, beta: jnp.ndarray,
                      *, impl: str = "lln_diag",
                      use_kernel: bool = True,
-                     row_mask: Optional[jnp.ndarray] = None
+                     row_mask: Optional[jnp.ndarray] = None,
+                     backend: Optional[str] = None
                      ) -> tuple[jnp.ndarray, LLNDecodeState]:
     """LLN(+Diag) decode of T >= 1 tokens.  q: (B,T,H,D); k/v_new: (B,T,G,D[v]).
 
@@ -427,13 +448,19 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
     ``row_mask``: optional (B,) bool; rows where it is False advance
     NOTHING — lln state, tails and ``pos`` keep their old values (their
     outputs are garbage and must be discarded).  Requires per-row ``pos``.
+    ``backend``: explicit registry backend (``auto``/``pallas`` route
+    through ``kernels/ops.py``; ``scan``/``ref`` run the jnp twin below);
+    None derives it from the legacy ``use_kernel`` flag.
     """
     b, t, h, d = q.shape
-    if use_kernel:
+    if backend is None:
+        backend = "auto" if use_kernel else "ref"
+    if backend not in ("scan", "ref"):
         from repro.kernels import ops as kops
         lln_out, lln_state = kops.lln_decode_chunk(state.lln, q, k_new,
                                                    v_new, alpha, beta,
-                                                   row_mask=row_mask)
+                                                   row_mask=row_mask,
+                                                   backend=backend)
     else:
         beta_h = jnp.asarray(beta, jnp.float32)
         g = k_new.shape[2]
@@ -507,6 +534,14 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
 def decode_lln(state: LLNDecodeState, q: jnp.ndarray, k_new: jnp.ndarray,
                v_new: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray,
                *, impl: str = "lln_diag") -> tuple[jnp.ndarray, LLNDecodeState]:
-    """One-token LLN(+Diag) decode (T=1 :func:`decode_lln_chunk`)."""
+    """One-token LLN(+Diag) decode (T=1 :func:`decode_lln_chunk`).
+
+    .. deprecated:: use :meth:`repro.core.engine.AttentionEngine.decode`
+       (or :func:`decode_lln_chunk` directly) — chunked decode subsumes the
+       single-token case.
+    """
+    from repro.kernels.registry import warn_deprecated
+    warn_deprecated("repro.core.attention.decode_lln",
+                    "AttentionEngine.decode / decode_lln_chunk")
     return decode_lln_chunk(state, q, k_new, v_new, alpha, beta, impl=impl,
                             use_kernel=False)

@@ -1,0 +1,323 @@
+"""The unified AttentionEngine: one spec, one state pytree, one lifecycle.
+
+Every attention path in this repo — training forward, prefill, chunked
+decode, continuous batching, MLA — now runs through this module:
+
+* :class:`AttentionState` is the ONE decode-state pytree.  It carries the
+  softmax KV cache (``k``/``v``/``len``), the LLN O(d^2) state
+  (``s``/``z``/``c_k``), the §4.2 diag tails at the G kv heads
+  (``tail_k``/``tail_v``), the MLA latent cache (``ckv``/``kr``) and the
+  per-row serving contract (``pos``/``len`` (B,), ``alpha``/``beta``
+  (B, H)) — unused fields are ``None`` and vanish from the pytree.
+  Scalar-position static batching is just the degenerate case where every
+  row agrees; there is no separate scalar cache layout any more.
+* :class:`AttentionEngine` binds an :class:`~repro.kernels.registry.AttnSpec`
+  to one layer's head geometry and exposes the lifecycle
+  ``init_state -> prefill -> decode* -> evict``.  Backend selection
+  (pallas / scan twin / jnp ref) is owned by ``kernels/registry.py``.
+
+The legacy entry points (``attn_prefill``/``attn_decode``/
+``attn_cache_init``/``mla_decode``/…) survive as thin shims delegating
+here — see ``models/attention_block.py`` and ``docs/api.md`` for the
+old→new migration table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as ca
+from .attention import KVCache, LLNDecodeState, batch_alpha_beta
+from .lln import LLNState
+from repro.kernels import registry as kreg
+from repro.kernels.registry import AttnSpec
+
+
+# ---------------------------------------------------------------------------
+# The one state pytree.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AttentionState:
+    """Unified per-layer attention decode state (a registered pytree).
+
+    Exactly one family of fields is populated per impl; ``None`` fields
+    contribute no leaves:
+
+    ==========  =======================================================
+    softmax     ``k``/``v`` (B, S, G, D[v]) KV cache, ``len`` (B,)
+    lln(+diag)  ``s`` (B,H,D,Dv) fp32, ``z`` (B,H,D) fp32, ``c_k``
+                (B,1,H,1) fp32, ``tail_k``/``tail_v`` (B,BLK,G,D[v]),
+                ``pos`` (B,), ``alpha``/``beta`` (B,H) fp32
+    MLA latent  ``ckv`` (B,S,kv_lora), ``kr`` (B,S,rd), ``len`` (B,)
+    ==========  =======================================================
+
+    Counters are ALWAYS per-row (B,): a static lockstep batch is simply
+    every row holding the same value.  The pytree flattens with dict-style
+    key paths (``DictKey``), so path-pattern consumers (the sharding rules
+    in ``launch/steps.py:cache_shardings``, tree-walking tests) see the
+    same leaf names the legacy dict caches used; ``state["pos"]`` works as
+    an alias of ``state.pos`` for the same reason.
+    """
+    k: Optional[jnp.ndarray] = None
+    v: Optional[jnp.ndarray] = None
+    len: Optional[jnp.ndarray] = None
+    s: Optional[jnp.ndarray] = None
+    z: Optional[jnp.ndarray] = None
+    c_k: Optional[jnp.ndarray] = None
+    tail_k: Optional[jnp.ndarray] = None
+    tail_v: Optional[jnp.ndarray] = None
+    pos: Optional[jnp.ndarray] = None
+    alpha: Optional[jnp.ndarray] = None
+    beta: Optional[jnp.ndarray] = None
+    ckv: Optional[jnp.ndarray] = None
+    kr: Optional[jnp.ndarray] = None
+
+    def __getitem__(self, name: str):
+        """Dict-style read access (legacy cache-dict compatibility)."""
+        if name not in _STATE_FIELDS:
+            raise KeyError(name)
+        return getattr(self, name)
+
+    def replace(self, **kw) -> "AttentionState":
+        return dataclasses.replace(self, **kw)
+
+
+_STATE_FIELDS = tuple(f.name for f in dataclasses.fields(AttentionState))
+
+
+def _state_flatten_with_keys(st: AttentionState):
+    return ([(jax.tree_util.DictKey(n), getattr(st, n))
+             for n in _STATE_FIELDS], None)
+
+
+def _state_flatten(st: AttentionState):
+    return tuple(getattr(st, n) for n in _STATE_FIELDS), None
+
+
+def _state_unflatten(_, children) -> AttentionState:
+    return AttentionState(**dict(zip(_STATE_FIELDS, children)))
+
+
+jax.tree_util.register_pytree_with_keys(
+    AttentionState, _state_flatten_with_keys, _state_unflatten,
+    _state_flatten)
+
+
+def _tail_of(t: jnp.ndarray, n: int, blk: int) -> jnp.ndarray:
+    """Contents of the (partially filled) last ``blk``-sized block."""
+    nb = -(-n // blk)
+    last = (nb - 1) * blk
+    pad = nb * blk - n
+    return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionEngine:
+    """One attention configuration bound to one layer's head geometry.
+
+    ``spec`` declares impl/causality/backend/chunking
+    (:class:`~repro.kernels.registry.AttnSpec`); ``heads``/``kv_heads``/
+    ``head_dim``/``v_dim`` are the layer's projection shapes and
+    ``cache_dtype`` the KV/tail storage dtype.  All methods are pure and
+    jit-safe; the engine object itself is static (hashable) and cheap to
+    construct per call.
+
+    Lifecycle::
+
+        eng = AttentionEngine.from_cfg(cfg)          # or explicit dims
+        state = eng.init_state(batch, max_len)       # zeroed, per-row
+        out, state = eng.prefill(q, k, v, max_len=max_len)
+        out, state = eng.decode(state, q1, k1, v1)   # T >= 1 tokens
+        state = eng.evict(state, rows)               # free slots
+    """
+    spec: AttnSpec
+    heads: int
+    kv_heads: int
+    head_dim: int
+    v_dim: int
+    # KV/tail storage dtype; None derives it from ``spec.precision`` (the
+    # one declared source — pass cache_dtype only to override it).
+    cache_dtype: Any = None
+
+    @property
+    def state_dtype(self):
+        return (jnp.dtype(self.spec.precision) if self.cache_dtype is None
+                else jnp.dtype(self.cache_dtype))
+
+    @classmethod
+    def from_cfg(cls, cfg, causal: bool = True, *,
+                 heads: Optional[int] = None,
+                 kv_heads: Optional[int] = None,
+                 head_dim: Optional[int] = None,
+                 v_dim: Optional[int] = None) -> "AttentionEngine":
+        """Engine for an ``ArchConfig`` layer (dims overridable — MLA binds
+        its assembled ``nope+rope`` q/k dim and its own v dim)."""
+        h = heads if heads is not None else cfg.n_heads
+        g = kv_heads if kv_heads is not None else cfg.n_kv_heads
+        d = head_dim if head_dim is not None else cfg.hd
+        spec = AttnSpec.from_cfg(cfg, causal=causal, r=h // g)
+        return cls(spec=spec, heads=h, kv_heads=g, head_dim=d,
+                   v_dim=v_dim if v_dim is not None else d)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def init_state(self, batch: int, max_len: int) -> AttentionState:
+        """Zeroed decode state for ``batch`` rows.  Always per-row: ``len``
+        / ``pos`` are (B,) and calibration is (B, H) — the static lockstep
+        batch is the degenerate case where all rows stay equal."""
+        h, g, d, dv = self.heads, self.kv_heads, self.head_dim, self.v_dim
+        if self.spec.impl == "softmax":
+            return AttentionState(
+                k=jnp.zeros((batch, max_len, g, d), self.state_dtype),
+                v=jnp.zeros((batch, max_len, g, dv), self.state_dtype),
+                len=jnp.zeros((batch,), jnp.int32))
+        blk = self.spec.diag_block
+        return AttentionState(
+            s=jnp.zeros((batch, h, d, dv), jnp.float32),
+            z=jnp.zeros((batch, h, d), jnp.float32),
+            c_k=jnp.zeros((batch, 1, h, 1), jnp.float32),
+            tail_k=jnp.zeros((batch, blk, g, d), self.state_dtype),
+            tail_v=jnp.zeros((batch, blk, g, dv), self.state_dtype),
+            pos=jnp.zeros((batch,), jnp.int32),
+            alpha=jnp.ones((batch, h), jnp.float32),
+            beta=jnp.ones((batch, h), jnp.float32))
+
+    def calibrate(self, q, k):
+        """Moment-matched (alpha, beta) per ``spec.calibration`` —
+        ``batch`` pools statistics (training semantics), ``per_row``
+        measures each row alone ((B, H)/(B, G); admission semantics)."""
+        return batch_alpha_beta(q, k, self.spec,
+                                per_row=self.spec.calibration == "per_row")
+
+    def attention(self, q, k, v, *, mask=None, alpha=None, beta=None,
+                  prefix_len: int = 0):
+        """Stateless full-sequence attention (training / scoring).
+        q: (B,N,H,D); k/v: (B,N,G,D[v]).  Softmax ``backend='ref'`` is the
+        naive quadratic; other softmax backends run flash."""
+        spec = self.spec
+        if spec.impl == "softmax":
+            if spec.backend == "ref":
+                return ca.naive_softmax(q, k, v, causal=spec.causal,
+                                        mask=mask, prefix_len=prefix_len)
+            return ca.flash_softmax(q, k, v, causal=spec.causal,
+                                    chunk=min(spec.softmax_chunk,
+                                              k.shape[1]),
+                                    mask=mask, prefix_len=prefix_len)
+        if alpha is None or beta is None:
+            # Calibrate HERE so spec.calibration="per_row" applies to the
+            # full-sequence forward too (multi_head_attention's internal
+            # batch_alpha_beta only knows the batch-pooled mode).
+            alpha, beta = self.calibrate(q, k)
+        acfg = ca.AttnConfig(
+            impl=spec.impl, causal=spec.causal, diag_block=spec.diag_block,
+            lln_chunk=spec.lln_chunk, softmax_chunk=spec.softmax_chunk,
+            use_kernel=spec.backend != "ref",
+            backend=None if spec.backend == "auto" else spec.backend,
+            fixed_ab=spec.fixed_ab, mm_a=spec.mm_a, mm_b=spec.mm_b)
+        return ca.multi_head_attention(q, k, v, acfg, mask=mask,
+                                       alpha=alpha, beta=beta,
+                                       prefix_len=prefix_len)
+
+    def prefill(self, q, k, v, *, max_len: int, prefix_len: int = 0,
+                alpha=None, beta=None):
+        """Causal forward over the prompt; returns ``(out, state)``.
+
+        q: (B,N,H,D); k/v: (B,N,G,D[v]).  The softmax KV cache is padded to
+        ``max_len`` so decode appends in place; LLN gets outputs AND the
+        O(d^2) state from one pass (``kernels/ops.py:lln_prefill`` under
+        ``spec.backend``) plus the diag tail at the G kv heads.
+        ``alpha``/``beta`` override the moment-matching calibration.
+        """
+        b, n, h, _ = q.shape
+        g = k.shape[2]
+        spec = self.spec
+        if spec.impl == "softmax":
+            if spec.backend == "ref":     # independent quadratic oracle
+                out = ca.naive_softmax(q, k, v, causal=spec.causal,
+                                       prefix_len=prefix_len)
+            else:
+                out = ca.flash_softmax(q, k, v, causal=spec.causal,
+                                       chunk=min(spec.softmax_chunk, n),
+                                       prefix_len=prefix_len)
+            pad = ((0, 0), (0, max_len - n), (0, 0), (0, 0))
+            return out, AttentionState(
+                k=jnp.pad(k.astype(self.state_dtype), pad),
+                v=jnp.pad(v.astype(self.state_dtype), pad),
+                len=jnp.full((b,), n, jnp.int32))
+        if alpha is None or beta is None:
+            alpha, beta = self.calibrate(q, k)
+        lln_out, s, z, c_k = kreg.prefill(spec, q, k, v, alpha, beta)
+        if spec.impl == "lln_diag":
+            diag_out = kreg.diag_fwd(spec, q, k, v)
+            out = (0.5 * (lln_out.astype(jnp.float32)
+                          + diag_out.astype(jnp.float32))).astype(v.dtype)
+        else:
+            out = lln_out
+        blk = spec.diag_block
+        beta_h = jnp.asarray(beta, jnp.float32)
+        if beta_h.shape[-1] == g and g != h:
+            beta_h = jnp.repeat(beta_h, h // g, axis=-1)
+        state = AttentionState(
+            s=s, z=z, c_k=c_k,
+            tail_k=_tail_of(k, n, blk).astype(self.state_dtype),
+            tail_v=_tail_of(v, n, blk).astype(self.state_dtype),
+            pos=jnp.full((b,), n, jnp.int32),
+            alpha=jnp.broadcast_to(jnp.asarray(alpha, jnp.float32),
+                                   (b, h)).astype(jnp.float32),
+            beta=jnp.broadcast_to(beta_h, (b, h)).astype(jnp.float32))
+        return out, state
+
+    def decode(self, state: AttentionState, q, k, v, *,
+               row_mask: Optional[jnp.ndarray] = None):
+        """Advance ``state`` over T >= 1 new tokens; returns
+        ``(out (B,T,H,Dv), new state)``.
+
+        Positions come from the state itself (``len``/``pos`` are per-row
+        (B,)).  ``row_mask`` (B,) bool: masked rows advance NOTHING and
+        their outputs must be discarded (the continuous-batching
+        contract).
+        """
+        spec = self.spec
+        if spec.impl == "softmax":
+            out, kv2 = ca.decode_softmax(
+                KVCache(k=state.k, v=state.v, length=state.len),
+                q, k, v, chunk=spec.softmax_chunk, row_mask=row_mask)
+            return out, state.replace(k=kv2.k, v=kv2.v, len=kv2.length)
+        st = LLNDecodeState(
+            lln=LLNState(s=state.s, z=state.z, c_k=state.c_k),
+            tail_k=state.tail_k, tail_v=state.tail_v, pos=state.pos)
+        out, st2 = ca.decode_lln_chunk(st, q, k, v, state.alpha, state.beta,
+                                       impl=spec.impl, row_mask=row_mask,
+                                       backend=spec.backend)
+        return out, state.replace(
+            s=st2.lln.s, z=st2.lln.z, c_k=st2.lln.c_k,
+            tail_k=st2.tail_k, tail_v=st2.tail_v, pos=st2.pos)
+
+    def evict(self, state: AttentionState, rows) -> AttentionState:
+        """Clear the given rows (freed slots) of every state leaf.
+
+        ``rows``: (k,) int32 slot indices, or a (B,) bool mask of rows to
+        clear.  Semantically optional — admission overwrites a slot's rows
+        wholesale — but zeroing freed slots keeps stale request state from
+        outliving its request (and makes the lifecycle testable).
+        """
+        rows = jnp.asarray(rows)
+        if rows.dtype == jnp.bool_:
+            def clear(leaf):
+                keep = ~rows.reshape((-1,) + (1,) * (leaf.ndim - 1))
+                return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
+        else:
+            def clear(leaf):
+                return leaf.at[rows].set(jnp.zeros((), leaf.dtype))
+        return jax.tree_util.tree_map(clear, state)
+
+
+__all__ = ["AttentionState", "AttentionEngine", "AttnSpec"]

@@ -1,11 +1,14 @@
 """Pallas TPU kernels for the perf-critical attention paths.
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers
-with custom_vjp and interpret-mode dispatch for the CPU container.
+with custom_vjp and backend dispatch (registry.py: ``auto`` | ``pallas`` |
+``scan`` | ``ref`` — one declarative :class:`AttnSpec` per configuration).
 """
-from .ops import (block_diag_attention, lln_attention, lln_decode_chunk,
-                  lln_diag_attention, lln_prefill, ssd_scan)
+from .ops import (block_diag_attention, block_diag_fwd, lln_attention,
+                  lln_decode_chunk, lln_diag_attention, lln_prefill,
+                  ssd_scan)
+from .registry import AttnSpec, BACKENDS, IMPLS, resolve
 
-__all__ = ["lln_attention", "block_diag_attention",
+__all__ = ["lln_attention", "block_diag_attention", "block_diag_fwd",
            "lln_diag_attention", "lln_prefill", "lln_decode_chunk",
-           "ssd_scan"]
+           "ssd_scan", "AttnSpec", "BACKENDS", "IMPLS", "resolve"]

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 
 from repro.core import lln as core_lln
 from repro.core.diag import block_diag_attn as core_diag
+from . import ref as kref
+from . import registry
 from .block_diag import block_diag_bwd_pallas, block_diag_pallas
 from .lln_attention import (lln_bidir_pallas, lln_causal_pallas,
                             lln_decode_pallas, lln_diag_fused_pallas)
@@ -47,6 +49,25 @@ def _interpret(flag: Optional[bool]) -> bool:
     if flag is not None:
         return flag
     return jax.default_backend() == "cpu"
+
+
+def _dispatch(backend: str, interpret: Optional[bool], *, ragged: bool,
+              cpu_twin: str, ragged_kind: str = "ref") -> tuple[str, bool]:
+    """Resolve (kind, interpret) for one op call.
+
+    ``backend='auto'`` reproduces the historical per-op dispatch (honouring
+    the legacy ``interpret=`` override): ragged lengths fall back to
+    ``ragged_kind``, interpret mode runs ``cpu_twin``, compiled backends run
+    the Pallas kernel.  Explicit backends go through
+    :func:`repro.kernels.registry.resolve`.
+    """
+    if backend == "auto":
+        if ragged:
+            return ragged_kind, False
+        ip = _interpret(interpret)
+        return (cpu_twin if ip else "pallas"), ip
+    res = registry.resolve(backend, ragged=ragged, cpu_twin=cpu_twin)
+    return res.kind, res.interpret
 
 
 # Interpret-mode Pallas pays a full block copy per grid step, so the fused
@@ -86,12 +107,14 @@ def _row_head_bcast(p: jnp.ndarray) -> jnp.ndarray:
 
 def _scaled_stabilized(q, k, alpha, beta, with_const: bool = False):
     """Return (qs, ks) in kernel layout plus the broadcast (alpha, beta);
-    fp32-safe exponents.  ``with_const`` appends the key stabilization
-    constant ``c_k`` (B, 1, G, 1) — the decode state's reference constant."""
+    fp32-safe exponents.  alpha/beta may be scalar, per-head (H,)/(G,) or
+    per-row (B, H)/(B, G) (continuous-batching calibration).  ``with_const``
+    appends the key stabilization constant ``c_k`` (B, 1, G, 1) — the
+    decode state's reference constant."""
     alpha = _bcast_heads(alpha, q.shape[2])
     beta = _bcast_heads(beta, k.shape[2])
-    aq = q.astype(jnp.float32) * alpha[None, None, :, None]
-    bk = k.astype(jnp.float32) * beta[None, None, :, None]
+    aq = q.astype(jnp.float32) * _row_head_bcast(alpha)
+    bk = k.astype(jnp.float32) * _row_head_bcast(beta)
     c_q = jax.lax.stop_gradient(jnp.max(aq, axis=(1, 3), keepdims=True))
     c_k = jax.lax.stop_gradient(jnp.max(bk, axis=(1, 3), keepdims=True))
     out = (_to_kernel(aq - c_q), _to_kernel(bk - c_k), alpha, beta)
@@ -114,10 +137,10 @@ def _zero_ab(alpha, beta):
 # LLN attention.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
 def lln_attention(q, k, v, alpha, beta, causal: bool = True,
                   chunk: int = 256, interpret: Optional[bool] = None,
-                  pallas_bwd: bool = True):
+                  pallas_bwd: bool = True, backend: str = "auto"):
     """LLN attention (paper eq. 8) via Pallas — the training entry point.
 
     Args:
@@ -130,25 +153,36 @@ def lln_attention(q, k, v, alpha, beta, causal: bool = True,
       chunk: block size of the causal scan; ``N % chunk != 0`` falls back
         to the jnp reference (``core.lln``) — same math, ragged-safe.
 
-    Backend: compiled (TPU) runs the Pallas forward and, under
+    Backend: ``backend='auto'`` (the default) keeps the historical
+    dispatch — compiled (TPU) runs the Pallas forward and, under
     ``custom_vjp``, the fused Pallas backward (kernels/lln_backward.py);
     interpret mode (CPU container) runs the forward kernel interpreted and
-    the backward's chunked ``lax.scan`` twins.  ``pallas_bwd=False`` forces
-    the chunked-jnp reference backward (the pre-fused behaviour) — kept for
-    benchmarking and debugging.
+    the backward's chunked ``lax.scan`` twins.  Explicit
+    ``backend='pallas' | 'scan' | 'ref'`` forces the Pallas kernel
+    (interpreted on CPU), the core chunked-scan reference, or the quadratic
+    oracle (kernels/ref.py) respectively — see kernels/registry.py.
+    ``pallas_bwd=False`` forces the chunked-jnp reference backward (the
+    pre-fused behaviour) — kept for benchmarking and debugging.
     """
-    return _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret)
+    return _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret,
+                         backend)
 
 
-def _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret):
+def _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret,
+                  backend="auto"):
     b, n, h, _ = q.shape
     g = k.shape[2]
-    if n % chunk:
+    # The historical ragged fallback IS the core chunked scan ("scan").
+    kind, ip = _dispatch(backend, interpret, ragged=bool(n % chunk),
+                         cpu_twin="pallas", ragged_kind="scan")
+    if kind == "scan":
         return _lln_ref(q, k, v, alpha, beta, causal, chunk)
+    if kind == "ref":
+        return _lln_quad_ref(q, k, v, alpha, beta, causal)
     qs, ks, _, _ = _scaled_stabilized(q, k, alpha, beta)
     vk = _to_kernel(v)
     fn = lln_causal_pallas if causal else lln_bidir_pallas
-    out = fn(qs, ks, vk, r=h // g, blk=chunk, interpret=_interpret(interpret))
+    out = fn(qs, ks, vk, r=h // g, blk=chunk, interpret=ip)
     return _from_kernel(out, b)
 
 
@@ -158,8 +192,8 @@ def _lln_ref(q, k, v, alpha, beta, causal, chunk):
     kf = k if g == h else jnp.repeat(k, h // g, axis=2)
     vf = v if g == h else jnp.repeat(v, h // g, axis=2)
     beta = jnp.asarray(beta, jnp.float32)
-    if beta.ndim and beta.shape[0] == g and g != h:
-        beta = jnp.repeat(beta, h // g)
+    if beta.ndim and beta.shape[-1] == g and g != h:
+        beta = jnp.repeat(beta, h // g, axis=-1)
     if causal:
         out = core_lln.lln_causal(q, kf, vf, alpha, beta, chunk=chunk)
     else:
@@ -169,16 +203,31 @@ def _lln_ref(q, k, v, alpha, beta, causal, chunk):
     return out.astype(v.dtype)
 
 
-def _lln_vjp_fwd(q, k, v, alpha, beta, causal, chunk, interpret, pallas_bwd):
+def _lln_quad_ref(q, k, v, alpha, beta, causal):
+    """Quadratic-form oracle (kernels/ref.py) — the ``backend='ref'``
+    target for the training forward: materializes the full (masked) score
+    matrix, O(N^2) memory."""
+    b, _, h, _ = q.shape
+    g = k.shape[2]
+    qs, ks, _, _ = _scaled_stabilized(q, k, alpha, beta)
+    vk = _to_kernel(v)
+    fn = kref.lln_causal_ref if causal else kref.lln_bidir_ref
+    return _from_kernel(fn(qs, ks, vk, r=h // g), b).astype(v.dtype)
+
+
+def _lln_vjp_fwd(q, k, v, alpha, beta, causal, chunk, interpret, pallas_bwd,
+                 backend="auto"):
     n, h = q.shape[1], q.shape[2]
     g = k.shape[2]
-    if n % chunk or not pallas_bwd:
-        out = _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret)
+    if n % chunk or not pallas_bwd or backend in ("scan", "ref"):
+        out = _lln_fwd_impl(q, k, v, alpha, beta, causal, chunk, interpret,
+                            backend)
         return out, {"ref": (q, k, v, alpha, beta)}
     b = q.shape[0]
     qs, ks, alpha_b, beta_b = _scaled_stabilized(q, k, alpha, beta)
     vk = _to_kernel(v)
-    ip = _interpret(interpret)
+    ip = True if backend == "pallas" and registry.on_cpu() \
+        else _interpret(interpret)
     if causal:
         out_k, den = lln_causal_pallas(qs, ks, vk, r=h // g, blk=chunk,
                                        interpret=ip, return_res=True)
@@ -193,7 +242,7 @@ def _lln_vjp_fwd(q, k, v, alpha, beta, causal, chunk, interpret, pallas_bwd):
     return _from_kernel(out_k, b), res
 
 
-def _lln_vjp_bwd(causal, chunk, interpret, pallas_bwd, res, g_out):
+def _lln_vjp_bwd(causal, chunk, interpret, pallas_bwd, backend, res, g_out):
     if "ref" in res:
         q, k, v, alpha, beta = res["ref"]
         _, vjp = jax.vjp(
@@ -223,9 +272,10 @@ def _lln_vjp_bwd(causal, chunk, interpret, pallas_bwd, res, g_out):
         else:
             dqs, dks, dvk = lln_bidir_bwd_scan(qs, ks, vk, gk, out_k, den,
                                                s, z, r=r, blk=chunk)
-    # Chain rule through qs = alpha*q - stop_grad(c_q) (and same for k).
-    dq = (_from_kernel(dqs, b) * alpha_b[None, None, :, None]).astype(tq.dtype)
-    dk = (_from_kernel(dks, b) * beta_b[None, None, :, None]).astype(tk.dtype)
+    # Chain rule through qs = alpha*q - stop_grad(c_q) (and same for k);
+    # _row_head_bcast handles per-head (H,) and per-row (B, H) calibration.
+    dq = (_from_kernel(dqs, b) * _row_head_bcast(alpha_b)).astype(tq.dtype)
+    dk = (_from_kernel(dks, b) * _row_head_bcast(beta_b)).astype(tk.dtype)
     dv = _from_kernel(dvk, b).astype(tv.dtype)
     return dq, dk, dv, jnp.zeros_like(alpha0), jnp.zeros_like(beta0)
 
@@ -241,7 +291,7 @@ lln_attention.defvjp(_lln_vjp_fwd, _lln_vjp_bwd)
 # ---------------------------------------------------------------------------
 
 def lln_prefill(q, k, v, alpha, beta, chunk: int = 256,
-                interpret: Optional[bool] = None):
+                interpret: Optional[bool] = None, backend: str = "auto"):
     """Causal LLN prefill emitting outputs AND the decode state in one pass.
 
     q: (B,N,H,D); k/v: (B,N,G,D[v]) — GQA via the kernels' ``h // r`` index
@@ -249,18 +299,24 @@ def lln_prefill(q, k, v, alpha, beta, chunk: int = 256,
     out (B,N,H,Dv); s (B,H,D,Dv) fp32; z (B,H,D) fp32; c_k (B,1,H,1) fp32 —
     exactly the ``core.lln.LLNState`` layout the decode cache stores (state
     per query head: GQA groups share values, matching the H-head cache).
+
+    ``backend``: ``auto`` (historical dispatch — Pallas compiled, scan twin
+    on CPU, jnp reference for ragged lengths) | ``pallas`` | ``scan`` |
+    ``ref`` (the seed two-pass jnp path, ``core/lln.py:prefill``).
     """
     b, n, h, _ = q.shape
     g = k.shape[2]
-    if n % chunk:
+    kind, ip = _dispatch(backend, interpret, ragged=bool(n % chunk),
+                         cpu_twin="scan")
+    if kind == "ref":
         return _lln_prefill_ref(q, k, v, alpha, beta, chunk)
     qs, ks, _, _, c_k = _scaled_stabilized(q, k, alpha, beta, with_const=True)
     vk = _to_kernel(v)
-    if _interpret(interpret):
+    if kind == "scan":
         out_k, s, z = _lln_prefill_scan(qs, ks, vk, r=h // g, blk=chunk)
     else:
         out_k, s, z = lln_causal_pallas(qs, ks, vk, r=h // g, blk=chunk,
-                                        interpret=False, return_state=True)
+                                        interpret=ip, return_state=True)
     s = s.reshape(b, h, *s.shape[1:])                  # (B, H, D, Dv)
     z = z.reshape(b, h, z.shape[-1])                   # (B, H, D)
     c_kh = jnp.repeat(c_k, h // g, axis=2) if g != h else c_k
@@ -274,8 +330,8 @@ def _lln_prefill_ref(q, k, v, alpha, beta, chunk):
     kf = k if g == h else jnp.repeat(k, h // g, axis=2)
     vf = v if g == h else jnp.repeat(v, h // g, axis=2)
     beta = jnp.asarray(beta, jnp.float32)
-    if beta.ndim and beta.shape[0] == g and g != h:
-        beta = jnp.repeat(beta, h // g)
+    if beta.ndim and beta.shape[-1] == g and g != h:
+        beta = jnp.repeat(beta, h // g, axis=-1)
     out, st = core_lln.prefill(q, kf, vf, alpha, beta, chunk=chunk)
     return out.astype(v.dtype), st.s, st.z, st.c_k
 
@@ -316,21 +372,24 @@ def _lln_prefill_scan(qs, ks, vk, *, r: int, blk: int):
 
 
 def block_diag_fwd(q, k, v, block: int = 256, causal: bool = True,
-                   interpret: Optional[bool] = None):
+                   interpret: Optional[bool] = None, backend: str = "auto"):
     """Inference-only block-diagonal softmax with the serving dispatch:
     Pallas kernel on compiled backends, a GQA-aware grouped-einsum twin
     under interpret mode (no repeated KV either way), jnp reference for
-    ragged lengths.  Training keeps the ``block_diag_attention`` custom_vjp
-    entry; this is the prefill path of the §4.2 hybrid."""
+    ragged lengths; explicit ``backend=pallas|scan|ref`` forces one path
+    (kernels/registry.py).  Training keeps the ``block_diag_attention``
+    custom_vjp entry; this is the prefill path of the §4.2 hybrid."""
     b, n, h, _ = q.shape
     g = k.shape[2]
-    if n % block:
+    kind, ip = _dispatch(backend, interpret, ragged=bool(n % block),
+                         cpu_twin="scan")
+    if kind == "ref":
         return _diag_ref(q, k, v, block, causal)
-    if _interpret(interpret):
+    if kind == "scan":
         return _block_diag_twin(q, k, v, block, causal)
     out = block_diag_pallas(_to_kernel(q), _to_kernel(k), _to_kernel(v),
                             r=h // g, blk=block, causal=causal,
-                            interpret=False)
+                            interpret=ip)
     return _from_kernel(out, b)
 
 
@@ -356,7 +415,8 @@ def _block_diag_twin(q, k, v, block, causal):
 
 def lln_decode_chunk(state, q, k, v, alpha, beta,
                      interpret: Optional[bool] = None,
-                     row_mask: Optional[jnp.ndarray] = None):
+                     row_mask: Optional[jnp.ndarray] = None,
+                     backend: str = "auto"):
     """Advance an ``LLNState`` over T new tokens in one dispatch.
 
     Args:
@@ -381,11 +441,15 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
     single group-level max-rescale of the carried state on compiled
     backends; the jnp twin ``core.lln.decode_chunk`` under interpret mode
     (the CPU container).  Both equal T sequential ``decode_step`` calls.
+    ``backend='pallas'`` forces the kernel (interpreted on CPU);
+    ``'scan'``/``'ref'`` force the jnp twin (they coincide for decode —
+    the twin IS the reference).
     """
     from repro.core.lln import LLNState
 
     b, t, h, d = q.shape
     g = k.shape[2]
+    kind, ip = _dispatch(backend, interpret, ragged=False, cpu_twin="ref")
     # Per-G-head beta shared by BOTH dispatch branches: an (H,)/(B,H) beta
     # that is not a group-uniform repeat is group-mean-pooled (the
     # batch_alpha_beta convention, cf. multi_head_attention) — identically
@@ -394,7 +458,7 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
     if beta_b.ndim and beta_b.shape[-1] == h and g != h:
         beta_b = beta_b.reshape(beta_b.shape[:-1] + (g, h // g)).mean(axis=-1)
     beta_b = _bcast_heads(beta_b, g)
-    if _interpret(interpret):
+    if kind != "pallas":
         kf = k if g == h else jnp.repeat(k, h // g, axis=2)
         vf = v if g == h else jnp.repeat(v, h // g, axis=2)
         beta_h = jnp.repeat(beta_b, h // g, axis=-1) if g != h else beta_b
@@ -426,7 +490,7 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
                      constant_values=-1e30)
         vk = jnp.pad(vk, ((0, 0), (0, tp - t), (0, 0)))
     out_k, s1, z1 = lln_decode_pallas(qs, ks, vk, s0, z0, r=r,
-                                      interpret=False)
+                                      interpret=ip)
     out = _from_kernel(out_k[:, :t], b)
     s_new = s1.reshape(b, h, d, -1)
     z_new = z1.reshape(b, h, d)
@@ -442,10 +506,10 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
 # Block-diagonal softmax attention.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def block_diag_attention(q, k, v, block: int = 256, causal: bool = False,
                          interpret: Optional[bool] = None,
-                         pallas_bwd: bool = True):
+                         pallas_bwd: bool = True, backend: str = "auto"):
     """Block-diagonal softmax attention via Pallas (§4.2 diag component).
 
     q: (B, N, H, D); k/v: (B, N, G, D[v]), GQA via the ``h // r`` index map.
@@ -456,17 +520,21 @@ def block_diag_attention(q, k, v, block: int = 256, causal: bool = False,
     (B, N, H, Dv) in ``v.dtype``.  Inference prefill uses
     :func:`block_diag_fwd` instead.
     """
-    return _diag_fwd_impl(q, k, v, block, causal, interpret)
+    return _diag_fwd_impl(q, k, v, block, causal, interpret, backend)
 
 
-def _diag_fwd_impl(q, k, v, block, causal, interpret):
+def _diag_fwd_impl(q, k, v, block, causal, interpret, backend="auto"):
     b, n, h, _ = q.shape
     g = k.shape[2]
-    if n % block:
+    kind, ip = _dispatch(backend, interpret, ragged=bool(n % block),
+                         cpu_twin="pallas")
+    if kind == "ref":
         return _diag_ref(q, k, v, block, causal)
+    if kind == "scan":
+        return _block_diag_twin(q, k, v, block, causal)
     out = block_diag_pallas(_to_kernel(q), _to_kernel(k), _to_kernel(v),
                             r=h // g, blk=block, causal=causal,
-                            interpret=_interpret(interpret))
+                            interpret=ip)
     return _from_kernel(out, b)
 
 
@@ -478,10 +546,11 @@ def _diag_ref(q, k, v, block, causal):
     return core_diag(q, kf, vf, block=block, causal=causal).astype(v.dtype)
 
 
-def _diag_vjp_fwd(q, k, v, block, causal, interpret, pallas_bwd):
+def _diag_vjp_fwd(q, k, v, block, causal, interpret, pallas_bwd,
+                  backend="auto"):
     n = q.shape[1]
-    if n % block or not pallas_bwd:
-        return (_diag_fwd_impl(q, k, v, block, causal, interpret),
+    if n % block or not pallas_bwd or backend in ("scan", "ref"):
+        return (_diag_fwd_impl(q, k, v, block, causal, interpret, backend),
                 {"ref": (q, k, v)})
     qk, kk, vk = _to_kernel(q), _to_kernel(k), _to_kernel(v)
     out = block_diag_pallas(qk, kk, vk, r=q.shape[2] // k.shape[2],
@@ -492,7 +561,7 @@ def _diag_vjp_fwd(q, k, v, block, causal, interpret, pallas_bwd):
     return _from_kernel(out, q.shape[0]), res
 
 
-def _diag_vjp_bwd(block, causal, interpret, pallas_bwd, res, g_out):
+def _diag_vjp_bwd(block, causal, interpret, pallas_bwd, backend, res, g_out):
     if "ref" in res:
         q, k, v = res["ref"]
         _, vjp = jax.vjp(lambda q_, k_, v_: _diag_ref(q_, k_, v_, block,
@@ -520,10 +589,10 @@ block_diag_attention.defvjp(_diag_vjp_fwd, _diag_vjp_bwd)
 # Fused LLN + Diag (causal): single-pass hybrid, shared block loads.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
 def lln_diag_attention(q, k, v, alpha, beta, causal: bool = True,
                        block: int = 256, interpret: Optional[bool] = None,
-                       pallas_bwd: bool = True):
+                       pallas_bwd: bool = True, backend: str = "auto"):
     """The paper's §4.2 hybrid: 0.5 * (LLN + block-diag softmax).
 
     Shapes/dtypes/GQA semantics as :func:`lln_attention` (``block`` doubles
@@ -531,21 +600,32 @@ def lln_diag_attention(q, k, v, alpha, beta, causal: bool = True,
     components run as ONE fused Pallas kernel sharing block loads (fused
     backward likewise); bidirectional runs them as two kernels.  Fallbacks:
     jnp reference when ``N % block`` or ``pallas_bwd=False``; scan twins
-    under interpret mode for the backward.
+    under interpret mode for the backward.  ``backend='scan'`` forces the
+    core chunked-scan hybrid, ``'ref'`` the quadratic-oracle hybrid,
+    ``'pallas'`` the fused kernel (interpreted on CPU).
     """
-    return _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret)
+    return _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret,
+                              backend)
 
 
-def _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret):
+def _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block, interpret,
+                       backend="auto"):
     b, n, h, _ = q.shape
     g = k.shape[2]
-    if n % block:
+    kind, ip_forced = _dispatch(backend, interpret, ragged=bool(n % block),
+                                cpu_twin="pallas", ragged_kind="scan")
+    if kind == "scan":
         return _lln_diag_ref(q, k, v, alpha, beta, causal, block)
+    if kind == "ref":
+        lln = _lln_quad_ref(q, k, v, alpha, beta, causal)
+        diag = _diag_ref(q, k, v, block, causal)
+        return (0.5 * (lln.astype(jnp.float32) + diag.astype(jnp.float32))
+                ).astype(v.dtype)
     # Kernel-layout conversion hoisted: q/k/v are transposed exactly once
     # per call, and the LLN pre-scaling runs once for both components.
     qs, ks, _, _ = _scaled_stabilized(q, k, alpha, beta)
     vk = _to_kernel(v)
-    ip = _interpret(interpret)
+    ip = ip_forced
     if causal:
         out = lln_diag_fused_pallas(qs, ks, _to_kernel(q), _to_kernel(k),
                                     vk, r=h // g, blk=block, causal=True,
@@ -566,12 +646,12 @@ def _lln_diag_ref(q, k, v, alpha, beta, causal, block):
 
 
 def _lln_diag_vjp_fwd(q, k, v, alpha, beta, causal, block, interpret,
-                      pallas_bwd):
+                      pallas_bwd, backend="auto"):
     b, n, h, _ = q.shape
     g = k.shape[2]
-    if n % block or not pallas_bwd:
+    if n % block or not pallas_bwd or backend in ("scan", "ref"):
         out = _lln_diag_fwd_impl(q, k, v, alpha, beta, causal, block,
-                                 interpret)
+                                 interpret, backend)
         return out, {"ref": (q, k, v, alpha, beta)}
     qs, ks, alpha_b, beta_b = _scaled_stabilized(q, k, alpha, beta)
     qk, kk, vk = _to_kernel(q), _to_kernel(k), _to_kernel(v)
@@ -595,7 +675,8 @@ def _lln_diag_vjp_fwd(q, k, v, alpha, beta, causal, block, interpret,
     return _from_kernel(out, b).astype(v.dtype), res
 
 
-def _lln_diag_vjp_bwd(causal, block, interpret, pallas_bwd, res, g_out):
+def _lln_diag_vjp_bwd(causal, block, interpret, pallas_bwd, backend, res,
+                      g_out):
     if "ref" in res:
         q, k, v, alpha, beta = res["ref"]
         _, vjp = jax.vjp(
@@ -635,9 +716,9 @@ def _lln_diag_vjp_bwd(causal, block, interpret, pallas_bwd, res, g_out):
             dqd, dkd, dvd = block_diag_bwd_scan(qk, kk, vk, gh, r=r,
                                                 blk=block, causal=False)
         dvk = dvl + dvd
-    dq = (_from_kernel(dqs, b) * alpha_b[None, None, :, None]
+    dq = (_from_kernel(dqs, b) * _row_head_bcast(alpha_b)
           + _from_kernel(dqd, b)).astype(tq.dtype)
-    dk = (_from_kernel(dks, b) * beta_b[None, None, :, None]
+    dk = (_from_kernel(dks, b) * _row_head_bcast(beta_b)
           + _from_kernel(dkd, b)).astype(tk.dtype)
     dv = _from_kernel(dvk, b).astype(tv.dtype)
     return dq, dk, dv, jnp.zeros_like(alpha0), jnp.zeros_like(beta0)

@@ -1,0 +1,280 @@
+"""Attention backend registry: one declarative spec, one dispatch table.
+
+Before this module, every attention entry point re-decided its own backend:
+``kernels/ops.py`` threaded ``interpret=`` flags per call,
+``models/attention_block.py`` forked on ``cfg.use_serve_kernel`` and
+``models/mla.py`` hand-rolled its own decode.  The registry centralizes
+that choice behind a single declarative :class:`AttnSpec` and four named
+backends:
+
+``auto``
+    Reproduces the historical dispatch exactly: compiled backends (TPU) run
+    the Pallas kernels, the CPU container runs each op's designated twin
+    (interpreted Pallas for the training forward, the chunked ``lax.scan``
+    twin for prefill, the jnp twin for decode), and ragged sequence lengths
+    fall back to the jnp reference.
+``pallas``
+    Force the Pallas kernel (interpret mode on CPU, so the kernel path is a
+    first-class testable target everywhere).  Raises on ragged lengths —
+    there is no kernel for those.
+``scan``
+    Force the chunked ``lax.scan`` / grouped-einsum twin (kernel layout, no
+    repeated KV).  For ops with no dedicated twin this is the core chunked
+    scan.
+``ref``
+    Force the jnp reference (``core/lln.py`` / ``core/diag.py`` — model
+    layout, repeated KV).  This is exactly the seed serving path that
+    ``use_serve_kernel=False`` used to select; for the training forward it
+    is the quadratic oracle from ``kernels/ref.py``.
+
+The per-op twin tables live next to the kernels in ``kernels/ops.py``;
+this module owns the *policy* (spec validation + backend resolution) and
+the spec-level entry points the :class:`~repro.core.engine.AttentionEngine`
+calls (:func:`attention`, :func:`prefill`, :func:`decode_chunk`,
+:func:`diag_fwd`).  It also hosts the deprecation machinery for the legacy
+entry points that the engine supersedes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+import functools
+from typing import Callable, Optional
+
+import jax
+
+IMPLS = ("softmax", "lln", "lln_diag")
+BACKENDS = ("auto", "pallas", "scan", "ref")
+CALIBRATIONS = ("batch", "per_row")
+PRECISIONS = ("float32", "bfloat16", "float16")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Declarative description of one attention configuration.
+
+    Every knob that used to be scattered across ``AttnConfig`` flags,
+    ``use_serve_kernel`` forks and per-call ``interpret=`` arguments in one
+    validated place.  The spec is hashable and cheap — build one per layer
+    call (``AttnSpec.from_cfg``) or inline in tests.
+
+    Attributes:
+      impl: ``softmax`` | ``lln`` | ``lln_diag`` (paper §4.2 hybrid).
+      causal: decoder (True) vs encoder (False) masking.
+      r: GQA ratio ``H // G`` (1 = MHA; k/v carry ``G = H // r`` heads).
+      backend: ``auto`` | ``pallas`` | ``scan`` | ``ref`` — see module
+        docstring.  ``auto`` reproduces the historical dispatch.
+      precision: dtype name for cached tensors (KV cache / diag tails);
+        accumulators are always fp32.
+      calibration: ``batch`` pools moment-matching statistics over the
+        whole (batch, seq) like the paper's training setting; ``per_row``
+        measures each batch row alone and yields (B, H)/(B, G) constants —
+        the continuous-batching admission setting.
+      lln_chunk: chunk of the causal LLN scan.
+      diag_block: block size of the §4.2 diagonal component (also the
+        decode tail length).
+      softmax_chunk: key-chunk of the flash softmax path.
+      fixed_ab: fixed alpha=beta (paper §A.8.4 ablation); 0 = dynamic
+        moment matching.
+      mm_a / mm_b: moment-matching constants; None = calibrated defaults
+        for the head dim.
+    """
+    impl: str = "softmax"
+    causal: bool = True
+    r: int = 1
+    backend: str = "auto"
+    precision: str = "float32"
+    calibration: str = "batch"
+    lln_chunk: int = 128
+    diag_block: int = 256
+    softmax_chunk: int = 1024
+    fixed_ab: float = 0.0
+    mm_a: Optional[float] = None
+    mm_b: Optional[float] = None
+
+    def __post_init__(self):
+        if self.impl not in IMPLS:
+            raise ValueError(
+                f"AttnSpec.impl must be one of {IMPLS}, got {self.impl!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"AttnSpec.backend must be one of {BACKENDS}, "
+                f"got {self.backend!r}")
+        if self.calibration not in CALIBRATIONS:
+            raise ValueError(
+                f"AttnSpec.calibration must be one of {CALIBRATIONS}, "
+                f"got {self.calibration!r}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"AttnSpec.precision must be one of {PRECISIONS}, "
+                f"got {self.precision!r}")
+        if self.r < 1:
+            raise ValueError(f"AttnSpec.r (GQA ratio) must be >= 1, "
+                             f"got {self.r}")
+        if self.impl == "softmax" and self.backend == "pallas":
+            raise ValueError(
+                "softmax attention has no Pallas kernel; use backend "
+                "'auto', 'scan' (flash) or 'ref' (naive quadratic)")
+        for name in ("lln_chunk", "diag_block", "softmax_chunk"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"AttnSpec.{name} must be positive")
+        if self.fixed_ab < 0:
+            raise ValueError("AttnSpec.fixed_ab must be >= 0")
+
+    @classmethod
+    def from_cfg(cls, cfg, causal: bool = True,
+                 r: Optional[int] = None) -> "AttnSpec":
+        """Build the spec an :class:`ArchConfig` implies.
+
+        ``cfg.attn_backend`` selects the backend explicitly; the legacy
+        ``use_serve_kernel=False`` escape maps to ``backend='ref'`` (the
+        seed jnp serving path it used to select).  ``r`` overrides the
+        GQA ratio (MLA runs full heads regardless of ``cfg.n_kv_heads``).
+        """
+        backend = getattr(cfg, "attn_backend", "auto")
+        if backend == "auto" and not getattr(cfg, "use_serve_kernel", True):
+            backend = "ref"
+        return cls(impl=cfg.attn_impl, causal=causal,
+                   r=r if r is not None else cfg.n_heads // cfg.n_kv_heads,
+                   backend=backend,
+                   precision=str(cfg.compute_dtype),
+                   calibration=("per_row" if getattr(
+                       cfg, "lln_per_row_calib", False) else "batch"),
+                   lln_chunk=cfg.lln_chunk, diag_block=cfg.diag_block,
+                   softmax_chunk=cfg.softmax_chunk,
+                   fixed_ab=cfg.lln_fixed_ab)
+
+
+# ---------------------------------------------------------------------------
+# Backend resolution — the one place that owns the interpret/twin/ref choice.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """A concrete dispatch decision: which implementation kind runs, and
+    whether a Pallas kernel runs in interpret mode."""
+    kind: str            # "pallas" | "scan" | "ref"
+    interpret: bool = False
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def resolve(backend: str, *, ragged: bool = False,
+            cpu_twin: str = "scan") -> Resolution:
+    """Resolve a backend name to a concrete implementation kind.
+
+    Args:
+      backend: one of :data:`BACKENDS`.
+      ragged: sequence length not divisible by the op's chunk/block — no
+        kernel or twin exists; ``auto`` falls back to the jnp reference and
+        explicit ``pallas``/``scan`` raise.
+      cpu_twin: the kind ``auto`` selects on the CPU container (per-op:
+        the training forwards run the Pallas kernel interpreted, the
+        serving ops run their ``lax.scan``/jnp twins).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown attention backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    if backend == "auto":
+        if ragged:
+            return Resolution("ref")
+        if on_cpu():
+            return Resolution(cpu_twin, interpret=True)
+        return Resolution("pallas")
+    if backend in ("pallas", "scan"):
+        if ragged:
+            raise ValueError(
+                f"backend={backend!r} has no ragged-length path "
+                "(sequence length must be a chunk/block multiple); "
+                "use backend='auto' or 'ref'")
+        if backend == "pallas":
+            return Resolution("pallas", interpret=on_cpu())
+        return Resolution("scan")
+    return Resolution("ref")
+
+
+# ---------------------------------------------------------------------------
+# Spec-level entry points (what the AttentionEngine calls).  These import
+# kernels.ops lazily: ops imports this module for `resolve`.
+# ---------------------------------------------------------------------------
+
+def attention(spec: AttnSpec, q, k, v, alpha, beta, **kw):
+    """Full-sequence LLN / LLN+Diag attention under ``spec.backend``.
+
+    (Softmax lives in ``core/attention.py`` — it has no Pallas kernel and
+    its flash/naive fork is resolved there.)
+    """
+    from . import ops
+    if spec.impl == "lln":
+        return ops.lln_attention(q, k, v, alpha, beta, spec.causal,
+                                 spec.lln_chunk, backend=spec.backend, **kw)
+    if spec.impl == "lln_diag":
+        return ops.lln_diag_attention(q, k, v, alpha, beta, spec.causal,
+                                      spec.diag_block, backend=spec.backend,
+                                      **kw)
+    raise ValueError(f"registry.attention does not handle {spec.impl!r}")
+
+
+def prefill(spec: AttnSpec, q, k, v, alpha, beta):
+    """State-emitting causal LLN prefill under ``spec.backend``.
+    Returns ``(out, s, z, c_k)`` in the decode-state layout."""
+    from . import ops
+    return ops.lln_prefill(q, k, v, alpha, beta, chunk=spec.lln_chunk,
+                           backend=spec.backend)
+
+
+def decode_chunk(spec: AttnSpec, state, q, k, v, alpha, beta,
+                 row_mask=None):
+    """Advance an ``LLNState`` over T tokens under ``spec.backend``."""
+    from . import ops
+    return ops.lln_decode_chunk(state, q, k, v, alpha, beta,
+                                row_mask=row_mask, backend=spec.backend)
+
+
+def diag_fwd(spec: AttnSpec, q, k, v):
+    """Inference block-diagonal softmax (the §4.2 diag component) under
+    ``spec.backend``."""
+    from . import ops
+    return ops.block_diag_fwd(q, k, v, spec.diag_block, spec.causal,
+                              backend=spec.backend)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims for the legacy entry points the engine supersedes.
+# ---------------------------------------------------------------------------
+
+_WARNED: set[str] = set()
+
+
+def reset_deprecations() -> None:
+    """Forget which shims already warned (tests assert warn-once)."""
+    _WARNED.clear()
+
+
+def warn_deprecated(name: str, replacement: str) -> None:
+    """Emit one DeprecationWarning per process for ``name``."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def deprecated_shim(name: str, replacement: str) -> Callable:
+    """Decorator marking a legacy entry point: warns once, then delegates.
+
+    The wrapped function keeps its signature and return value — it IS the
+    delegation.  ``tests/test_shims.py`` guards that every shim both warns
+    exactly once and reaches the engine path.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            warn_deprecated(name, replacement)
+            return fn(*args, **kwargs)
+        wrapper.__deprecated_shim__ = (name, replacement)
+        return wrapper
+    return deco

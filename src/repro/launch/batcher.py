@@ -101,15 +101,17 @@ class ContinuousBatcher:
         self.params = params
         self.key = jax.random.PRNGKey(0)
         # Grouped admission (one batched prefill for several same-length
-        # queued prompts) is only exact when prefill is per-row
-        # independent: softmax has no calibration, and fixed alpha/beta
-        # skips the prompt-batch moment pooling.  Dynamic moment matching
-        # pools sigma statistics across the prompt batch, so grouping
-        # would change outputs — those configs prefill one request at a
-        # time (group size 1).
+        # queued prompts) is exact whenever prefill is per-row
+        # independent: softmax has no calibration, fixed alpha/beta skips
+        # moment matching, and per-row calibration
+        # (``lln_per_row_calib``, the make_pool_setup default) measures
+        # each row's statistics alone — so dynamic moment matching can
+        # now use batched slot prefill too.  Only a pool explicitly built
+        # with batch-pooled calibration must admit one request at a time.
         cfg = setup.cfg
         self.group_admits = (cfg.attn_impl == "softmax"
-                             or cfg.lln_fixed_ab != 0)
+                             or cfg.lln_fixed_ab != 0
+                             or getattr(cfg, "lln_per_row_calib", False))
 
     def warmup(self, prompt_lens) -> None:
         """Compile every (prompt length, admit-group size) prefill, the
@@ -217,6 +219,7 @@ class ContinuousBatcher:
             toks_h = np.asarray(toks)             # (S, B)
             emitted_h = np.asarray(emitted)
             active_h = np.asarray(active)
+            freed = []
             for idx in range(s.slots):
                 rid = int(slot_rid[idx])
                 if rid == -1:
@@ -225,6 +228,15 @@ class ContinuousBatcher:
                 outputs[rid].extend(int(t) for t in toks_h[steps, idx])
                 if not active_h[idx]:             # evict: budget exhausted
                     slot_rid[idx] = -1
+                    freed.append(idx)
+            if freed and s.evict_fn is not None:
+                # Engine evict: zero the freed rows so stale request state
+                # never outlives its request (admission overwrites a slot
+                # wholesale anyway; this keeps the pool clean in between).
+                # Fixed-shape (slots,) mask => one compile total.
+                mask = np.zeros((s.slots,), np.bool_)
+                mask[freed] = True
+                caches = s.evict_fn(caches, jnp.asarray(mask))
         wall = time.perf_counter() - t0
 
         outputs = {rid: np.asarray(t, np.int32) for rid, t in

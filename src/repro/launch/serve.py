@@ -11,7 +11,9 @@ the whole tail of the generation, donated cache carry); the first decode
 step runs standalone — it carries the compile — and is reported separately
 so the tok/s figure measures steady state.  ``--no-scan`` restores the
 seed-style one-dispatch-per-token Python loop (the benchmark baseline);
-``--no-serve-kernel`` restores the seed two-pass prefill.
+``--no-serve-kernel`` selects ``attn_backend=ref`` (the seed two-pass jnp
+path); ``--attn-backend`` picks any registry backend explicitly
+(``kernels/registry.py``: auto | pallas | scan | ref).
 
 ``--continuous`` switches to the continuous-batching pool
 (``launch/batcher.py``): mixed-length synthetic traffic is admitted into
@@ -55,7 +57,10 @@ def main(argv=None):
                     default=True, help="seed-style per-token dispatch loop")
     ap.add_argument("--no-serve-kernel", dest="serve_kernel",
                     action="store_false", default=True,
-                    help="seed two-pass prefill (no state-emitting kernel)")
+                    help="seed two-pass prefill (attn_backend=ref)")
+    ap.add_argument("--attn-backend", default=None,
+                    choices=[None, "auto", "pallas", "scan", "ref"],
+                    help="explicit attention backend (kernels/registry.py)")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching pool (mixed-length traffic)")
     ap.add_argument("--requests", type=int, default=16,
@@ -74,6 +79,8 @@ def main(argv=None):
         overrides["attn_impl"] = args.attn_impl
     if not args.serve_kernel:
         overrides["use_serve_kernel"] = False
+    if args.attn_backend:
+        overrides["attn_backend"] = args.attn_backend
     cfg = get_config(args.arch, smoke=args.smoke, **overrides)
     model = build_model(cfg)
 

@@ -337,6 +337,12 @@ class PoolSetup:
       the masked-row contract nothing it does from then on can mutate
       state).  Steady-state throughput therefore matches the static
       ``make_generate`` loop — admits/evicts never leave the scan.
+    * ``evict_fn(caches, row_mask)`` — the engine's ``evict`` lifted over
+      the stacked layer tree: zeroes the masked rows ((slots,) bool, a
+      fixed shape so eviction costs ONE compile total) of every cache
+      leaf in one fused (donated) pass, so stale request state never
+      outlives its request.  Admission overwrites a slot wholesale either
+      way; eviction keeps the pool clean between the two.
     """
     cfg: Any
     model: Any
@@ -350,6 +356,7 @@ class PoolSetup:
     prefill_fn: Any
     admit_fn: Any
     segment_fn: Any
+    evict_fn: Any = None
 
 
 def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
@@ -361,11 +368,18 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
     Supports the dense/MoE decoder families with standard attention
     (softmax / lln / lln_diag KV-state caches); MLA caches are not wired
     for per-row decode yet.
+
+    The pool's model calibrates moment matching PER ROW
+    (``lln_per_row_calib=True``: each request's alpha/beta come from its
+    own prompt statistics, (B, H) in the slot cache), which is what makes
+    a batched slot prefill exact per request and lets the batcher group
+    same-length admits even under dynamic moment matching.
     """
     if cfg.family not in ("dense", "moe") or cfg.kv_lora > 0:
         raise NotImplementedError(
             "continuous batching supports dense/moe decoders "
             f"(family={cfg.family}, kv_lora={cfg.kv_lora})")
+    cfg = cfg.replace(lln_per_row_calib=True)
     model = build_model(cfg)
     rules = shd.make_rules(cfg, multi_pod=multi_pod, serve=True)
 
@@ -404,6 +418,19 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
 
     admit_fn = jax.jit(_admit, donate_argnums=(0,))
 
+    def _evict(pooled, row_mask):
+        """AttentionEngine.evict lifted over the stacked layer tree: zero
+        the rows where ``row_mask`` ((slots,) bool) is True, on every leaf
+        (slot axis at position 1, after the stacked-layer axis).  A fixed
+        (slots,) mask keeps this ONE compiled executable regardless of how
+        many slots free per segment."""
+        def clear(leaf):
+            keep = ~row_mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+            return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
+        return jax.tree_util.tree_map(clear, pooled)
+
+    evict_fn = jax.jit(_evict, donate_argnums=(0,))
+
     def _segment(params, caches, tok, pos, remaining, active, key):
         def body(carry, i):
             caches, tok, pos, remaining, active = carry
@@ -432,4 +459,4 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
                      slots=slots, max_len=max_len, segment=segment,
                      temperature=temperature, cache_init=cache_init,
                      prefill_fn=prefill_fn, admit_fn=admit_fn,
-                     segment_fn=segment_fn)
+                     segment_fn=segment_fn, evict_fn=evict_fn)

@@ -2,8 +2,15 @@
 
 Used by the dense/MoE decoder LMs, the seamless encoder/decoder, the
 PaliGemma decoder and Zamba2's shared attention block.  Supports the three
-attention impls (softmax / lln / lln_diag), GQA/MQA, qk-norm, partial RoPE,
-and both cache kinds for decode (KV cache vs. O(d^2) LLN state).
+attention impls (softmax / lln / lln_diag), GQA/MQA, qk-norm and partial
+RoPE.
+
+Serving runs through the unified :class:`repro.core.engine.AttentionEngine`
+(one ``AttentionState`` pytree, per-row counters, backend dispatch owned by
+``kernels/registry.py``): ``serve_state_init`` / ``serve_prefill`` /
+``serve_decode`` are the canonical entry points; the legacy
+``attn_cache_init`` / ``attn_prefill`` / ``attn_decode`` names survive as
+deprecation shims delegating to them (see ``docs/api.md``).
 """
 from __future__ import annotations
 
@@ -13,8 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as ca
-from repro.core import lln as core_lln
 from repro.core.attention import AttnConfig
+from repro.core.engine import AttentionEngine
+from repro.kernels.registry import deprecated_shim
 from repro.distributed.sharding import constrain
 from .layers import dense, dense_init, rms_head_norm, rope
 
@@ -25,6 +33,11 @@ def attn_cfg_of(cfg, causal: bool = True) -> AttnConfig:
                       softmax_chunk=cfg.softmax_chunk,
                       use_kernel=cfg.use_kernel,
                       fixed_ab=cfg.lln_fixed_ab)
+
+
+def attn_engine(cfg, causal: bool = True) -> AttentionEngine:
+    """The serving engine an ``ArchConfig`` attention layer implies."""
+    return AttentionEngine.from_cfg(cfg, causal=causal)
 
 
 def attn_init(key, cfg, d_in: Optional[int] = None):
@@ -86,122 +99,50 @@ def attn_apply(p, x, cfg, positions, *, causal: bool = True,
 
 
 # ---------------------------------------------------------------------------
-# Serving: prefill + decode with impl-appropriate cache.
+# Serving: the unified engine lifecycle (init_state -> prefill -> decode).
 #
-# The default (``cfg.use_serve_kernel``) LLN path is kernelized end to end:
-# * prefill gets outputs AND the O(d^2) decode state from ONE pass over the
-#   keys (kernels/ops.py:lln_prefill — state-emitting Pallas kernel / its
-#   lax.scan twin on CPU), instead of the seed's jnp scan + second full-key
-#   einsum; the lln_diag hybrid routes its diagonal component through the
-#   block_diag Pallas kernel;
-# * the decode cache stores the diag tail at the G kv heads (bytes / r under
-#   GQA) — repeated to H only inside the tiny tail-softmax;
-# * decode advances T >= 1 tokens per dispatch (chunked multi-token decode).
-# ``use_serve_kernel=False`` keeps the seed two-pass path (H-head tails) as
-# an explicit escape, used by benchmarks/bench_serve.py as the baseline.
+# One ``AttentionState`` pytree for every impl, per-row counters always
+# (static lockstep batching is the degenerate case where all rows agree),
+# diag tails at the G kv heads, backend dispatch (pallas / scan twin / jnp
+# ref) owned by ``kernels/registry.py``.  The legacy seed path that
+# ``use_serve_kernel=False`` selected is now ``backend='ref'``
+# (``AttnSpec.from_cfg`` does that mapping) — used by
+# ``benchmarks/bench_serve.py`` as the baseline.
 # ---------------------------------------------------------------------------
 
-def attn_cache_init(cfg, batch: int, max_len: int, per_row: bool = False):
-    """Zeroed decode cache for one attention layer.
+def serve_state_init(cfg, batch: int, max_len: int):
+    """Zeroed :class:`~repro.core.engine.AttentionState` for one layer.
 
-    ``per_row=False`` (static batch): one scalar ``len``/``pos`` and one
-    (H,) alpha/beta shared by every row — all rows advance in lockstep.
-    ``per_row=True`` (continuous batching): ``len``/``pos`` are (B,) and
-    alpha/beta are (B, H) so every slot carries its own depth and its own
-    prompt-derived calibration (requests are prefilled separately and admit
-    into a freed slot mid-segment).
+    Always per-row: ``len``/``pos`` are (B,) and alpha/beta (B, H), so the
+    same cache layout serves the static lockstep loop and the
+    continuous-batching pool (each slot at its own depth with its own
+    prompt calibration).
     """
-    hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
-    ctr = (batch,) if per_row else ()
-    if cfg.attn_impl == "softmax":
-        return {"k": jnp.zeros((batch, max_len, g, hd), cfg.cdtype),
-                "v": jnp.zeros((batch, max_len, g, hd), cfg.cdtype),
-                "len": jnp.zeros(ctr, jnp.int32)}
-    gt = g if cfg.use_serve_kernel else h     # tail heads: G (kernel) / H (seed)
-    ab = (batch, h) if per_row else (h,)
-    return {"s": jnp.zeros((batch, h, hd, hd), jnp.float32),
-            "z": jnp.zeros((batch, h, hd), jnp.float32),
-            "c_k": jnp.zeros((batch, 1, h, 1), jnp.float32),
-            "tail_k": jnp.zeros((batch, cfg.diag_block, gt, hd), cfg.cdtype),
-            "tail_v": jnp.zeros((batch, cfg.diag_block, gt, hd), cfg.cdtype),
-            "pos": jnp.zeros(ctr, jnp.int32),
-            "alpha": jnp.ones(ab, jnp.float32),
-            "beta": jnp.ones(ab, jnp.float32)}   # expanded to H heads
+    return attn_engine(cfg).init_state(batch, max_len)
 
 
-def _tail_of(t, n: int, blk: int):
-    """Contents of the (partially filled) last ``blk``-sized block."""
-    nb = -(-n // blk)
-    last = (nb - 1) * blk
-    pad = nb * blk - n
-    return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
-
-
-def attn_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
-                 max_len: int = 0):
-    """Forward over the prompt; returns (out, cache).  The KV cache is
-    allocated at ``max_len`` (>= n) so decode can append in place."""
+def serve_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
+                  max_len: int = 0):
+    """Forward over the prompt; returns ``(out, AttentionState)``.  The
+    softmax KV cache is allocated at ``max_len`` (>= n) so decode appends
+    in place; LLN emits the O(d^2) state from the same pass."""
     b, n, _ = x.shape
-    max_len = max(max_len, n)
-    hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    hd, h = cfg.hd, cfg.n_heads
     q, k, v = _project_qkv(p, x, cfg, positions)
-    acfg = attn_cfg_of(cfg, True)
-    if cfg.attn_impl == "softmax":
-        out = ca.multi_head_attention(q, k, v, acfg, prefix_len=prefix_len)
-        pad = ((0, 0), (0, max_len - n), (0, 0), (0, 0))
-        cache = {"k": jnp.pad(k.astype(cfg.cdtype), pad),
-                 "v": jnp.pad(v.astype(cfg.cdtype), pad),
-                 "len": jnp.asarray(n, jnp.int32)}
-    else:
-        alpha, beta = ca.batch_alpha_beta(q, k, acfg)
-        beta_h = jnp.repeat(beta, h // g) if g != h else beta
-        blk = cfg.diag_block
-        if cfg.use_serve_kernel:
-            # One pass over the keys: outputs + decode state from the
-            # state-emitting kernel; no KV repeat anywhere on this path.
-            from repro.kernels import ops as kops
-            lln_out, s, z, c_k = kops.lln_prefill(q, k, v, alpha, beta,
-                                                  chunk=cfg.lln_chunk)
-            if cfg.attn_impl == "lln_diag":
-                diag_out = kops.block_diag_fwd(q, k, v, blk, True)
-                out = (0.5 * (lln_out.astype(jnp.float32)
-                              + diag_out.astype(jnp.float32))).astype(v.dtype)
-            else:
-                out = lln_out
-            tail_k, tail_v = _tail_of(k, n, blk), _tail_of(v, n, blk)
-        else:
-            # Seed path: jnp causal scan + repeated KV, H-head tails.
-            kf = k if g == h else jnp.repeat(k, h // g, axis=2)
-            vf = v if g == h else jnp.repeat(v, h // g, axis=2)
-            lln_out, st = core_lln.prefill(q, kf, vf, alpha, beta_h,
-                                           chunk=cfg.lln_chunk)
-            s, z, c_k = st.s, st.z, st.c_k
-            if cfg.attn_impl == "lln_diag":
-                from repro.core.diag import block_diag_attn
-                diag_out = block_diag_attn(q, kf, vf, block=blk, causal=True)
-                out = (0.5 * (lln_out.astype(jnp.float32)
-                              + diag_out.astype(jnp.float32))).astype(v.dtype)
-            else:
-                out = lln_out
-            tail_k, tail_v = _tail_of(kf, n, blk), _tail_of(vf, n, blk)
-        cache = {"s": s, "z": z, "c_k": c_k,
-                 "tail_k": tail_k.astype(cfg.cdtype),
-                 "tail_v": tail_v.astype(cfg.cdtype),
-                 "pos": jnp.asarray(n, jnp.int32),
-                 "alpha": alpha.astype(jnp.float32),
-                 "beta": beta_h.astype(jnp.float32)}
+    eng = attn_engine(cfg)
+    out, state = eng.prefill(q, k, v, max_len=max(max_len, n),
+                             prefix_len=prefix_len)
     out = out.reshape(b, n, h * hd)
-    return dense(p["o_w"], out, cfg.cdtype), cache
+    return dense(p["o_w"], out, cfg.cdtype), state
 
 
-def attn_decode(p, x, cache, cfg, position, *, row_mask=None):
+def serve_decode(p, x, state, cfg, position, *, row_mask=None):
     """Decode over T >= 1 new tokens.  x: (B, T, d).
 
     ``position``: absolute index of the first new token — a scalar (static
     batch: every row at the same depth; T=1 is the generation loop, T>1 the
     chunked multi-token / speculative-scoring path) or a per-row (B,)
-    vector (continuous batching; requires a ``per_row`` cache, whose
-    ``len``/``pos`` leaves are (B,) and alpha/beta (B, H)).
+    vector (continuous batching: every slot at its own depth).
     ``row_mask``: optional (B,) bool — rows where it is False write nothing
     (KV cache / LLN state / tails / positions all keep their old values);
     their outputs are garbage and must be discarded by the caller.
@@ -214,32 +155,41 @@ def attn_decode(p, x, cache, cfg, position, *, row_mask=None):
     if cfg.qk_norm:
         q = rms_head_norm(p["q_norm_scale"], q)
         k = rms_head_norm(p["k_norm_scale"], k)
-    counter = cache["len" if cfg.attn_impl == "softmax" else "pos"]
     if jnp.ndim(position) == 0:
         pos = position + jnp.arange(n, dtype=jnp.int32)
-    elif jnp.ndim(position) == 1 and jnp.ndim(counter) == 1:
+    elif jnp.ndim(position) == 1:
         # Per-row bases: (B,) -> (B, T) absolute positions.
         pos = position[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
     else:
         pos = position
     q = rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
     k = rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
-
-    if cfg.attn_impl == "softmax":
-        out, kv2 = ca.decode_softmax(
-            ca.KVCache(k=cache["k"], v=cache["v"], length=cache["len"]),
-            q, k, v, chunk=cfg.softmax_chunk, row_mask=row_mask)
-        new_cache = {"k": kv2.k, "v": kv2.v, "len": kv2.length}
-    else:
-        st = ca.LLNDecodeState(
-            lln=core_lln.LLNState(s=cache["s"], z=cache["z"], c_k=cache["c_k"]),
-            tail_k=cache["tail_k"], tail_v=cache["tail_v"], pos=cache["pos"])
-        out, st = ca.decode_lln_chunk(st, q, k, v, cache["alpha"],
-                                      cache["beta"], impl=cfg.attn_impl,
-                                      use_kernel=cfg.use_serve_kernel,
-                                      row_mask=row_mask)
-        new_cache = {"s": st.lln.s, "z": st.lln.z, "c_k": st.lln.c_k,
-                     "tail_k": st.tail_k, "tail_v": st.tail_v, "pos": st.pos,
-                     "alpha": cache["alpha"], "beta": cache["beta"]}
+    out, state = attn_engine(cfg).decode(state, q, k, v, row_mask=row_mask)
     out = out.reshape(b, n, h * hd)
-    return dense(p["o_w"], out, cfg.cdtype), new_cache
+    return dense(p["o_w"], out, cfg.cdtype), state
+
+
+# --- legacy entry points (deprecation shims over the engine) ---------------
+
+@deprecated_shim("models.attention_block.attn_cache_init",
+                 "attn_engine(cfg).init_state / serve_state_init")
+def attn_cache_init(cfg, batch: int, max_len: int, per_row: bool = False):
+    """Legacy cache initializer.  The engine state is always per-row now,
+    so ``per_row`` is accepted and ignored (the scalar layout was the
+    degenerate case and has been deleted)."""
+    del per_row
+    return serve_state_init(cfg, batch, max_len)
+
+
+@deprecated_shim("models.attention_block.attn_prefill", "serve_prefill")
+def attn_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
+                 max_len: int = 0):
+    """Legacy prefill — delegates to :func:`serve_prefill`."""
+    return serve_prefill(p, x, cfg, positions, prefix_len=prefix_len,
+                         max_len=max_len)
+
+
+@deprecated_shim("models.attention_block.attn_decode", "serve_decode")
+def attn_decode(p, x, cache, cfg, position, *, row_mask=None):
+    """Legacy decode — delegates to :func:`serve_decode`."""
+    return serve_decode(p, x, cache, cfg, position, row_mask=row_mask)

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 
 from repro.core import attention as ca
 from repro.distributed.sharding import constrain
-from .attention_block import (attn_apply, attn_cache_init, attn_decode,
-                              attn_init, attn_prefill)
+from .attention_block import (attn_apply, attn_init, serve_decode,
+                              serve_prefill, serve_state_init)
 from .layers import (apply_mlp, apply_norm, dense, dense_init, embed_init,
                      embed_lookup, logits_from_hidden, mlp_init, norm_init,
                      trunc_normal)
@@ -108,7 +108,7 @@ def encdec_hidden(p, src_embed, tgt_tokens, cfg):
 # ---------------------------------------------------------------------------
 
 def encdec_cache_init(p, cfg, batch: int, max_len: int, enc_len: int):
-    one = attn_cache_init(cfg, batch, max_len)
+    one = serve_state_init(cfg, batch, max_len)
     g, hd = cfg.n_kv_heads, cfg.hd
     cross = {"ck": jnp.zeros((batch, enc_len, g, hd), cfg.cdtype),
              "cv": jnp.zeros((batch, enc_len, g, hd), cfg.cdtype)}
@@ -128,8 +128,8 @@ def encdec_prefill(p, src_embed, tgt_tokens, cfg, max_len: int):
 
     def body(x, lp):
         h = apply_norm(lp["ln1"], x, cfg.norm)
-        a, self_cache = attn_prefill(lp["attn"], h, cfg, positions,
-                                     max_len=max_len)
+        a, self_cache = serve_prefill(lp["attn"], h, cfg, positions,
+                                      max_len=max_len)
         x = x + a.astype(x.dtype)
         h = apply_norm(lp["ln_x"], x, cfg.norm)
         m = enc_out.shape[1]
@@ -166,8 +166,8 @@ def encdec_decode(p, caches, token, cfg, position):
     def body(x, xs):
         lp, cache = xs
         h = apply_norm(lp["ln1"], x, cfg.norm)
-        a, self_cache = attn_decode(lp["attn"], h, cache["self"], cfg,
-                                    position)
+        a, self_cache = serve_decode(lp["attn"], h, cache["self"], cfg,
+                                     position)
         x = x + a.astype(x.dtype)
         h = apply_norm(lp["ln_x"], x, cfg.norm)
         q = dense(lp["cross"]["q_w"], h, cfg.cdtype).reshape(

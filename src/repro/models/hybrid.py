@@ -19,8 +19,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .attention_block import (attn_apply, attn_cache_init, attn_decode,
-                              attn_init, attn_prefill)
+from .attention_block import (attn_apply, attn_init, serve_decode,
+                              serve_prefill, serve_state_init)
 from .layers import (apply_mlp, apply_norm, dense, dense_init, embed_init,
                      embed_lookup, logits_from_hidden, mlp_init, norm_init,
                      trunc_normal)
@@ -131,7 +131,7 @@ def hybrid_cache_init(p, cfg, batch: int, max_len: int):
     caches = {"layers": jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)}
     if g:
-        sa = attn_cache_init(cfg, batch, max_len)
+        sa = serve_state_init(cfg, batch, max_len)
         caches["shared"] = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (g,) + a.shape), sa)
     return caches
@@ -164,10 +164,10 @@ def hybrid_prefill(p, tokens, cfg, max_len: int):
             # shared block prefill
             hcat = dense(p["shared"]["in_proj"],
                          jnp.concatenate([x, x0], -1), cfg.cdtype)
-            a, sc = attn_prefill(p["shared"]["attn"],
-                                 apply_norm(p["shared"]["ln1"], hcat,
-                                            "rmsnorm"), cfg, positions,
-                                 max_len=max_len)
+            a, sc = serve_prefill(p["shared"]["attn"],
+                                  apply_norm(p["shared"]["ln1"], hcat,
+                                             "rmsnorm"), cfg, positions,
+                                  max_len=max_len)
             hcat = hcat + a.astype(hcat.dtype)
             m = apply_mlp(p["shared"]["mlp"],
                           apply_norm(p["shared"]["ln2"], hcat, "rmsnorm"),
@@ -221,9 +221,9 @@ def hybrid_decode(p, caches, token, cfg, position):
             x, gmc = jax.lax.scan(body, x, (glp, gmc))
             hcat = dense(p["shared"]["in_proj"],
                          jnp.concatenate([x, x0], -1), cfg.cdtype)
-            a, gsc = attn_decode(p["shared"]["attn"],
-                                 apply_norm(p["shared"]["ln1"], hcat,
-                                            "rmsnorm"), gsc, cfg, position)
+            a, gsc = serve_decode(p["shared"]["attn"],
+                                  apply_norm(p["shared"]["ln1"], hcat,
+                                             "rmsnorm"), gsc, cfg, position)
             hcat = hcat + a.astype(hcat.dtype)
             m = apply_mlp(p["shared"]["mlp"],
                           apply_norm(p["shared"]["ln2"], hcat, "rmsnorm"),

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as ca
-from repro.core import lln as core_lln
+from repro.core.engine import AttentionEngine, AttentionState
+from repro.kernels.registry import deprecated_shim
 from repro.distributed.sharding import constrain
 from .attention_block import attn_cfg_of
 from .layers import dense, dense_init, rope
@@ -112,24 +113,32 @@ def mla_apply(p, x, cfg, positions, *, causal: bool = True):
 
 
 # ---------------------------------------------------------------------------
-# Serving.
+# Serving — through the unified AttentionEngine.
+#
+# MLA's assembled per-head q/k (dim nope+rope, G == H) route through the
+# same engine as standard attention, which is what gives MLA chunked
+# multi-token decode and the kernelized LLN prefill/decode for free
+# (ROADMAP "MLA serving parity").  Only the absorbed-form softmax decode
+# stays MLA-specific: its state is the latent ``(ckv, kr)`` cache — carried
+# in the same ``AttentionState`` pytree (``ckv``/``kr``/``len`` fields).
 # ---------------------------------------------------------------------------
 
-def mla_cache_init(cfg, batch: int, max_len: int):
+def mla_engine(cfg, causal: bool = True) -> AttentionEngine:
+    """The engine for MLA's assembled q/k/v (full heads: G == H)."""
+    ql, kvl, nd, rd, vd, h = _dims(cfg)
+    return AttentionEngine.from_cfg(cfg, causal=causal, heads=h, kv_heads=h,
+                                    head_dim=nd + rd, v_dim=vd)
+
+
+def mla_state_init(cfg, batch: int, max_len: int) -> AttentionState:
+    """Zeroed MLA decode state (per-row, like every engine state)."""
     ql, kvl, nd, rd, vd, h = _dims(cfg)
     if cfg.attn_impl == "softmax":
-        return {"ckv": jnp.zeros((batch, max_len, kvl), cfg.cdtype),
-                "kr": jnp.zeros((batch, max_len, rd), cfg.cdtype),
-                "len": jnp.zeros((), jnp.int32)}
-    d = nd + rd
-    return {"s": jnp.zeros((batch, h, d, vd), jnp.float32),
-            "z": jnp.zeros((batch, h, d), jnp.float32),
-            "c_k": jnp.zeros((batch, 1, h, 1), jnp.float32),
-            "tail_k": jnp.zeros((batch, cfg.diag_block, h, d), cfg.cdtype),
-            "tail_v": jnp.zeros((batch, cfg.diag_block, h, vd), cfg.cdtype),
-            "pos": jnp.zeros((), jnp.int32),
-            "alpha": jnp.ones((h,), jnp.float32),
-            "beta": jnp.ones((h,), jnp.float32)}
+        return AttentionState(
+            ckv=jnp.zeros((batch, max_len, kvl), cfg.cdtype),
+            kr=jnp.zeros((batch, max_len, rd), cfg.cdtype),
+            len=jnp.zeros((batch,), jnp.int32))
+    return mla_engine(cfg).init_state(batch, max_len)
 
 
 def mla_prefill(p, x, cfg, positions, *, max_len: int = 0):
@@ -139,86 +148,83 @@ def mla_prefill(p, x, cfg, positions, *, max_len: int = 0):
     ckv, kr = _kv_latent(p, x, cfg, positions)
     k_nope, v = _decompress(p, ckv, cfg)
     q, k = _assemble(q_nope, q_rope, k_nope, kr)
-    acfg = attn_cfg_of(cfg, True)
     if cfg.attn_impl == "softmax":
-        out = ca.multi_head_attention(q, k, v, acfg)
+        out = ca.multi_head_attention(q, k, v, attn_cfg_of(cfg, True))
         ml = max(max_len, n)
         pad = ((0, 0), (0, ml - n), (0, 0))
-        cache = {"ckv": jnp.pad(ckv.astype(cfg.cdtype), pad),
-                 "kr": jnp.pad(kr[:, :, 0].astype(cfg.cdtype), pad),
-                 "len": jnp.asarray(n, jnp.int32)}
+        state = AttentionState(
+            ckv=jnp.pad(ckv.astype(cfg.cdtype), pad),
+            kr=jnp.pad(kr[:, :, 0].astype(cfg.cdtype), pad),
+            len=jnp.full((b,), n, jnp.int32))
     else:
-        alpha, beta = ca.batch_alpha_beta(q, k, acfg)
-        lln_out, st = core_lln.prefill(q, k, v, alpha, beta,
-                                       chunk=cfg.lln_chunk)
-        if cfg.attn_impl == "lln_diag":
-            from repro.core.diag import block_diag_attn
-            diag_out = block_diag_attn(q, k, v, block=cfg.diag_block,
-                                       causal=True)
-            out = (0.5 * (lln_out.astype(jnp.float32)
-                          + diag_out.astype(jnp.float32))).astype(v.dtype)
-        else:
-            out = lln_out
-        blk = cfg.diag_block
-        nb = -(-n // blk)
-        last = (nb - 1) * blk
-        pad = nb * blk - n
-        tail_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
-        tail_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, last:]
-        cache = {"s": st.s, "z": st.z, "c_k": st.c_k,
-                 "tail_k": tail_k.astype(cfg.cdtype),
-                 "tail_v": tail_v.astype(cfg.cdtype),
-                 "pos": jnp.asarray(n, jnp.int32),
-                 "alpha": alpha.astype(jnp.float32),
-                 "beta": beta.astype(jnp.float32)}
+        out, state = mla_engine(cfg).prefill(q, k, v, max_len=max(max_len, n))
     out = out.reshape(b, n, -1)
-    return dense(p["o_w"], out, cfg.cdtype), cache
+    return dense(p["o_w"], out, cfg.cdtype), state
 
 
-def mla_decode(p, x, cache, cfg, position):
-    """One-token MLA decode.  Softmax path uses the absorbed formulation."""
+def _mla_absorbed_decode(p, cfg, state, q_nope, q_rope, ckv_new, kr_new):
+    """Absorbed-form softmax decode over T >= 1 tokens: q is folded into
+    the latent space (``W_uk``) so the whole cache is scored without
+    per-step decompression; within-chunk causality comes from explicit
+    absolute positions (``len + i``)."""
+    ql, kvl, nd, rd, vd, h = _dims(cfg)
+    b, t = q_nope.shape[:2]
+    upd = lambda c, u, l: jax.lax.dynamic_update_slice_in_dim(c, u, l, 0)
+    ckv = jax.vmap(upd)(state.ckv, ckv_new.astype(state.ckv.dtype),
+                        state.len)
+    krc = jax.vmap(upd)(state.kr, kr_new[:, :, 0].astype(state.kr.dtype),
+                        state.len)
+    ckv = constrain(ckv, "act_batch", "act_seq_cache", None)
+    new_len = state.len + t
+    # Absorbed: q' = q_nope @ W_uk (per head) lives in latent space.
+    w_uk = p["w_uk"].reshape(kvl, h, nd)
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = jnp.einsum("bqhk,bsk->bhqs", q_lat, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                       krc.astype(jnp.float32))
+    s = s * ((nd + rd) ** -0.5)
+    # Query i (absolute position len + i) sees keys j <= len + i.
+    key_pos = jnp.arange(ckv.shape[1])
+    q_pos = state.len[:, None] + jnp.arange(t)[None, :]           # (B, T)
+    allowed = key_pos[None, None, None, :] <= q_pos[:, None, :, None]
+    s = jnp.where(allowed, s, -1e30)
+    attn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsk->bqhk", attn, ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(kvl, h, vd)
+    out = jnp.einsum("bqhk,khv->bqhv", ctx, w_uv.astype(jnp.float32))
+    return (out.astype(cfg.cdtype),
+            state.replace(ckv=ckv, kr=krc, len=new_len))
+
+
+def mla_decode(p, x, state, cfg, position):
+    """MLA decode over T >= 1 tokens (x: (B, T, d)) — the engine's chunked
+    decode for LLN impls (``lln_decode_chunk`` with tails), the absorbed
+    formulation for softmax.  ``position``: scalar or per-row (B,) index of
+    the first new token."""
     ql, kvl, nd, rd, vd, h = _dims(cfg)
     b, n, _ = x.shape
-    pos = jnp.full((1,), position, jnp.int32)
+    if jnp.ndim(position) == 0:
+        pos = position + jnp.arange(n, dtype=jnp.int32)
+    elif jnp.ndim(position) == 1:
+        pos = position[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
+    else:
+        pos = position
     q_nope, q_rope = _q_proj(p, x, cfg, pos)
     ckv_new, kr_new = _kv_latent(p, x, cfg, pos)
 
     if cfg.attn_impl == "softmax":
-        ckv = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cache["len"], 1)
-        krc = jax.lax.dynamic_update_slice_in_dim(
-            cache["kr"], kr_new[:, :, 0].astype(cache["kr"].dtype),
-            cache["len"], 1)
-        ckv = constrain(ckv, "act_batch", "act_seq_cache", None)
-        new_len = cache["len"] + 1
-        # Absorbed: q' = q_nope @ W_uk (per head) lives in latent space.
-        w_uk = p["w_uk"].reshape(kvl, h, nd)
-        q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope.astype(jnp.float32),
-                           w_uk.astype(jnp.float32))
-        s = jnp.einsum("bqhk,bsk->bhqs", q_lat,
-                       ckv.astype(jnp.float32))
-        s = s + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
-                           krc.astype(jnp.float32))
-        s = s * ((nd + rd) ** -0.5)
-        valid = jnp.arange(ckv.shape[1])[None, None, None, :] < new_len
-        s = jnp.where(valid, s, -1e30)
-        attn = jax.nn.softmax(s, axis=-1)
-        ctx = jnp.einsum("bhqs,bsk->bqhk", attn, ckv.astype(jnp.float32))
-        w_uv = p["w_uv"].reshape(kvl, h, vd)
-        out = jnp.einsum("bqhk,khv->bqhv", ctx, w_uv.astype(jnp.float32))
-        out = out.astype(cfg.cdtype)
-        new_cache = {"ckv": ckv, "kr": krc, "len": new_len}
+        out, state = _mla_absorbed_decode(p, cfg, state, q_nope, q_rope,
+                                          ckv_new, kr_new)
     else:
         k_nope, v = _decompress(p, ckv_new, cfg)
         q, k = _assemble(q_nope, q_rope, k_nope, kr_new)
-        st = ca.LLNDecodeState(
-            lln=core_lln.LLNState(s=cache["s"], z=cache["z"],
-                                  c_k=cache["c_k"]),
-            tail_k=cache["tail_k"], tail_v=cache["tail_v"], pos=cache["pos"])
-        out, st = ca.decode_lln(st, q, k, v, cache["alpha"], cache["beta"],
-                                impl=cfg.attn_impl)
-        new_cache = {"s": st.lln.s, "z": st.lln.z, "c_k": st.lln.c_k,
-                     "tail_k": st.tail_k, "tail_v": st.tail_v, "pos": st.pos,
-                     "alpha": cache["alpha"], "beta": cache["beta"]}
+        out, state = mla_engine(cfg).decode(state, q, k, v)
     out = out.reshape(b, n, -1)
-    return dense(p["o_w"], out, cfg.cdtype), new_cache
+    return dense(p["o_w"], out, cfg.cdtype), state
+
+
+@deprecated_shim("models.mla.mla_cache_init", "mla_state_init")
+def mla_cache_init(cfg, batch: int, max_len: int):
+    """Legacy cache initializer — delegates to :func:`mla_state_init`."""
+    return mla_state_init(cfg, batch, max_len)

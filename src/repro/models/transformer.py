@@ -18,8 +18,8 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
 from . import mla as mla_mod
-from .attention_block import (attn_apply, attn_cache_init, attn_decode,
-                              attn_init, attn_prefill)
+from .attention_block import (attn_apply, attn_init, serve_decode,
+                              serve_prefill, serve_state_init)
 from .layers import (apply_mlp, apply_norm, embed_init, embed_lookup,
                      logits_from_hidden, mlp_init, norm_init, trunc_normal)
 from .moe import moe_apply, moe_init
@@ -81,9 +81,9 @@ def block_prefill(p, x, cfg, positions, *, use_moe: bool, prefix_len: int = 0,
         attn_out, cache = mla_mod.mla_prefill(p["attn"], h, cfg, positions,
                                               max_len=max_len)
     else:
-        attn_out, cache = attn_prefill(p["attn"], h, cfg, positions,
-                                       prefix_len=prefix_len,
-                                       max_len=max_len)
+        attn_out, cache = serve_prefill(p["attn"], h, cfg, positions,
+                                        prefix_len=prefix_len,
+                                        max_len=max_len)
     x = x + attn_out.astype(x.dtype)
     h = apply_norm(p["ln2"], x, cfg.norm)
     ffn_out = (moe_apply(p["moe"], h, cfg)[0] if use_moe
@@ -100,8 +100,8 @@ def block_decode(p, x, cache, cfg, position, *, use_moe: bool,
         attn_out, cache = mla_mod.mla_decode(p["attn"], h, cache, cfg,
                                              position)
     else:
-        attn_out, cache = attn_decode(p["attn"], h, cache, cfg, position,
-                                      row_mask=row_mask)
+        attn_out, cache = serve_decode(p["attn"], h, cache, cfg, position,
+                                       row_mask=row_mask)
     x = x + attn_out.astype(x.dtype)
     h = apply_norm(p["ln2"], x, cfg.norm)
     ffn_out = (moe_apply(p["moe"], h, cfg)[0] if use_moe
@@ -187,14 +187,15 @@ def lm_logits(p, tokens, cfg, **kw):
 # ---------------------------------------------------------------------------
 
 def lm_cache_init(p, cfg, batch: int, max_len: int, per_row: bool = False):
-    """Stacked per-layer decode caches.  ``per_row=True`` allocates the
-    continuous-batching layout (per-row ``len``/``pos``, (B, H)
-    alpha/beta — see ``attn_cache_init``); unsupported for MLA."""
+    """Stacked per-layer decode caches (``AttentionState`` per layer).
+
+    The engine state is ALWAYS per-row ((B,) ``len``/``pos``, (B, H)
+    alpha/beta) — the static lockstep batch is the degenerate case — so
+    ``per_row`` is accepted for backward compatibility and ignored."""
+    del per_row
     first, n_main, is_moe = _layer_groups(cfg)
-    if per_row and _use_mla(cfg):
-        raise NotImplementedError("per-row caches are not wired for MLA")
-    one = (mla_mod.mla_cache_init(cfg, batch, max_len) if _use_mla(cfg)
-           else attn_cache_init(cfg, batch, max_len, per_row=per_row))
+    one = (mla_mod.mla_state_init(cfg, batch, max_len) if _use_mla(cfg)
+           else serve_state_init(cfg, batch, max_len))
 
     def stack(n):
         return jax.tree_util.tree_map(
@@ -247,8 +248,6 @@ def lm_decode(p, caches, token, cfg, position, row_mask=None):
     every cache leaf untouched and their logits are garbage.  Returns
     logits (B, V) for (B,) input, (B, T, V) for chunked input."""
     single = token.ndim == 1
-    if not single and _use_mla(cfg):
-        raise NotImplementedError("chunked decode is not wired for MLA")
     first, n_main, is_moe = _layer_groups(cfg)
     toks = token[:, None] if single else token
     x = embed_lookup(p["embed"], toks, cfg.cdtype, cfg.embed_scale)

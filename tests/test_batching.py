@@ -99,8 +99,10 @@ class TestPoolParity:
     def test_pool_matches_solo_dynamic_calibration(self):
         """Dynamic moment matching (no fixed alpha/beta): every slot
         carries genuinely different per-row (B, H) alpha/beta from its own
-        prompt statistics, admission is per-request (group size 1), and
-        pooled rows still decode token-for-token like solo runs."""
+        prompt statistics.  Per-row calibration (``lln_per_row_calib``,
+        the pool default) makes a batched slot prefill exact per request,
+        so admission is GROUPED even here — and pooled rows still decode
+        token-for-token like solo runs."""
         cfg = _tiny_cfg("lln_diag", 2, fixed_ab=False)
         assert cfg.lln_fixed_ab == 0
         model = build_model(cfg)
@@ -113,7 +115,7 @@ class TestPoolParity:
             setup = make_pool_setup(cfg, mesh, slots=2, max_len=max_len,
                                     segment=3)
             eng = ContinuousBatcher(setup, params)
-            assert not eng.group_admits
+            assert eng.group_admits     # batched-prefill admission
             stats = eng.run(reqs)
             gen_cache: dict = {}
             for req in reqs:

@@ -1,0 +1,18 @@
+"""Smoke test: the dispatch-overhead microbench runs end-to-end."""
+import json
+
+from benchmarks.bench_dispatch import run
+
+
+def test_bench_dispatch_smoke(tmp_path):
+    out = tmp_path / "BENCH_dispatch.json"
+    rows = run(str(out), smoke=True, repeats=2, verbose=False)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    names = [r["name"] for r in on_disk["rows"]]
+    assert names == ["dispatch_prefill_direct", "dispatch_prefill_engine",
+                     "dispatch_decode_direct", "dispatch_decode_engine"]
+    for row in on_disk["rows"]:
+        assert row["us_per_call"] > 0
+        assert row["ratio_vs_direct"] > 0
+    assert len(rows) == 4

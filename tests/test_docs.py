@@ -18,7 +18,7 @@ import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 DOCS = [ROOT / "README.md", ROOT / "docs" / "serving.md",
-        ROOT / "benchmarks" / "README.md"]
+        ROOT / "docs" / "api.md", ROOT / "benchmarks" / "README.md"]
 FIRST_PARTY = ("repro", "benchmarks")
 
 

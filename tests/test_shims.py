@@ -1,0 +1,131 @@
+"""Deprecation-shim guard.
+
+Every legacy entry point superseded by the AttentionEngine must (a) emit a
+``DeprecationWarning`` exactly once per process, and (b) delegate to the
+engine-era replacement (same returns, no forked math).  If a shim grows its
+own logic again, or the warning disappears, this file fails.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import attention as ca
+from repro.core import lln as core_lln
+from repro.kernels import registry
+from repro.models import attention_block as ab
+from repro.models import mla as mla_mod
+
+SHIMS = [
+    (ab, "attn_cache_init"),
+    (ab, "attn_prefill"),
+    (ab, "attn_decode"),
+    (mla_mod, "mla_cache_init"),
+]
+
+
+def _cfg(**kw):
+    base = dict(name="shim-test", family="dense", n_layers=1, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, head_dim=8,
+                attn_impl="lln_diag", diag_block=8, lln_chunk=8,
+                softmax_chunk=16, lln_fixed_ab=2.1, compute_dtype="float32",
+                param_dtype="float32", remat="none", tie_embeddings=True)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def _mla_cfg():
+    return _cfg(kv_lora=32, q_lora=24, rope_head_dim=8, nope_head_dim=16,
+                v_head_dim=16, n_kv_heads=4, head_dim=None)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_deprecations():
+    registry.reset_deprecations()
+    yield
+    registry.reset_deprecations()
+
+
+def _call(mod, name):
+    cfg = _mla_cfg() if mod is mla_mod else _cfg()
+    if name.endswith("cache_init"):
+        return getattr(mod, name)(cfg, 2, 16)
+    p = ab.attn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    if name == "attn_prefill":
+        return mod.attn_prefill(p, x, cfg, jnp.arange(8), max_len=16)
+    _, st = ab.serve_prefill(p, x, cfg, jnp.arange(8), max_len=16)
+    x1 = x[:, :1]
+    return mod.attn_decode(p, x1, st, cfg, jnp.asarray(8, jnp.int32))
+
+
+class TestWarnOnce:
+    @pytest.mark.parametrize("mod,name", SHIMS,
+                             ids=[n for _, n in SHIMS])
+    def test_shim_warns_exactly_once(self, mod, name):
+        fn = getattr(mod, name)
+        assert getattr(fn, "__deprecated_shim__", None), \
+            f"{name} is not marked as a deprecation shim"
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            _call(mod, name)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            _call(mod, name)        # second call: no warning
+
+    def test_decode_lln_warns_exactly_once(self):
+        b, h, d = 1, 2, 4
+        st = core_lln.LLNState.init(b, h, d, d)
+        dst = ca.LLNDecodeState(lln=st,
+                                tail_k=jnp.zeros((b, 4, h, d)),
+                                tail_v=jnp.zeros((b, 4, h, d)),
+                                pos=jnp.zeros((b,), jnp.int32))
+        q = jnp.ones((b, 1, h, d))
+        with pytest.warns(DeprecationWarning, match="decode_lln"):
+            ca.decode_lln(dst, q, q, q, 1.0, 1.0, impl="lln")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            ca.decode_lln(dst, q, q, q, 1.0, 1.0, impl="lln")
+
+
+class TestDelegation:
+    def test_attn_cache_init_delegates(self, monkeypatch):
+        sentinel = object()
+        monkeypatch.setattr(ab, "serve_state_init",
+                            lambda *a, **k: sentinel)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert ab.attn_cache_init(_cfg(), 2, 16) is sentinel
+
+    def test_attn_prefill_decode_delegate(self, monkeypatch):
+        calls = []
+        monkeypatch.setattr(ab, "serve_prefill",
+                            lambda *a, **k: calls.append("prefill"))
+        monkeypatch.setattr(ab, "serve_decode",
+                            lambda *a, **k: calls.append("decode"))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ab.attn_prefill(None, None, _cfg(), None)
+            ab.attn_decode(None, None, None, _cfg(), None)
+        assert calls == ["prefill", "decode"]
+
+    def test_mla_cache_init_delegates(self, monkeypatch):
+        sentinel = object()
+        monkeypatch.setattr(mla_mod, "mla_state_init",
+                            lambda *a, **k: sentinel)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert mla_mod.mla_cache_init(_mla_cfg(), 2, 16) is sentinel
+
+    def test_shim_outputs_match_canonical(self):
+        """The shim returns the canonical function's exact pytree."""
+        cfg = _cfg()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = ab.attn_cache_init(cfg, 2, 16)
+        new = ab.serve_state_init(cfg, 2, 16)
+        for a, b in zip(jax.tree_util.tree_leaves(old),
+                        jax.tree_util.tree_leaves(new)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
