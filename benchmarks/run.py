@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
   bench_dispatch       AttentionEngine indirection vs direct kernel calls
                        (ratio must stay ~1.0; writes BENCH_dispatch.json
                        when run standalone)
+  bench_spec           speculative decode: acceptance rate + tokens per
+                       verify step across k x impl x r (writes
+                       BENCH_spec.json when run standalone)
 
 Roofline terms (EXPERIMENTS.md §Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
@@ -26,7 +29,7 @@ import time
 def main() -> None:
     from . import (bench_batching, bench_concentration, bench_convergence,
                    bench_dispatch, bench_distribution, bench_scaling,
-                   bench_serve)
+                   bench_serve, bench_spec)
 
     class _ServeAdapter:
         run = staticmethod(bench_serve.run_rows)
@@ -37,13 +40,17 @@ def main() -> None:
     class _DispatchAdapter:
         run = staticmethod(bench_dispatch.run_rows)
 
+    class _SpecAdapter:
+        run = staticmethod(bench_spec.run_rows)
+
     modules = [("distribution", bench_distribution),
                ("concentration", bench_concentration),
                ("convergence", bench_convergence),
                ("scaling", bench_scaling),
                ("serve", _ServeAdapter),
                ("batching", _BatchingAdapter),
-               ("dispatch", _DispatchAdapter)]
+               ("dispatch", _DispatchAdapter),
+               ("spec", _SpecAdapter)]
     all_rows = []
     for name, mod in modules:
         print(f"== {name} ==", file=sys.stderr, flush=True)

@@ -43,6 +43,11 @@ class ArchConfig:
     rotary_pct: float = 1.0          # stablelm 0.25; chatglm 0.5 ("2d" RoPE)
     softmax_chunk: int = 1024
 
+    # --- speculative decoding ------------------------------------------------
+    draft_layers: int = 0            # tied first-k-layers draft (0 = off;
+                                     # n_layers = tied full model)
+    spec_k: int = 0                  # draft tokens per verify chunk (0 = off)
+
     # --- MoE ----------------------------------------------------------------
     n_experts: int = 0
     n_shared_experts: int = 0

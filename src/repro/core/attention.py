@@ -374,7 +374,8 @@ class LLNDecodeState:
 def decode_softmax(cache: KVCache, q: jnp.ndarray, k_new: jnp.ndarray,
                    v_new: jnp.ndarray, *, scale: Optional[float] = None,
                    chunk: int = 1024,
-                   row_mask: Optional[jnp.ndarray] = None
+                   row_mask: Optional[jnp.ndarray] = None,
+                   commit_len: Optional[jnp.ndarray] = None
                    ) -> tuple[jnp.ndarray, KVCache]:
     """Softmax decode of T >= 1 tokens against a KV cache.
 
@@ -387,11 +388,21 @@ def decode_softmax(cache: KVCache, q: jnp.ndarray, k_new: jnp.ndarray,
     ``row_mask``: optional (B,) bool — rows where it is False do not write
     the cache and do not advance ``length`` (their outputs are garbage and
     must be discarded by the caller); requires per-row ``length``.
-    Returns (out (B,T,H,Dv), new cache).
+    ``commit_len``: optional per-row (B,) int32 in [0, T] — speculative
+    partial commit: all T tokens are scored (intra-chunk causality over
+    the full draft), but ``length`` advances only by ``commit_len``.
+    Keys past the accepted prefix stay in the buffer above ``length``,
+    where they are invisible to scoring and overwritten by the next
+    commit before ``length`` can ever reach them; ``commit_len=0`` rows
+    restore their buffer bitwise (the masked-row contract).  Requires
+    per-row ``length``.  Returns (out (B,T,H,Dv), new cache).
     """
     from repro.distributed.sharding import constrain
 
     per_row = jnp.ndim(cache.length) == 1
+    if commit_len is not None and not per_row:
+        raise ValueError("decode_softmax: commit_len requires a per-row "
+                         "(B,) cache length")
     if per_row:
         upd = lambda c, u, l: jax.lax.dynamic_update_slice_in_dim(
             c, u, l, axis=0)
@@ -405,21 +416,37 @@ def decode_softmax(cache: KVCache, q: jnp.ndarray, k_new: jnp.ndarray,
         vc = jax.lax.dynamic_update_slice_in_dim(
             cache.v, v_new.astype(cache.v.dtype), cache.length, axis=1)
     t = q.shape[1]
-    if row_mask is not None:
+    ret_k = ret_v = None
+    if commit_len is not None:
+        cl = lln_mod.commit_lengths(commit_len, row_mask, t)
+        # Scoring sees ALL T draft keys on every row (a verify pass with
+        # commit_len=0 is a pure score); only the RETURNED cache rolls
+        # back — commit_len=0 rows restore their buffer bitwise.
+        keep = (cl > 0)[:, None, None, None]
+        ret_k = jnp.where(keep, kc, cache.k)
+        ret_v = jnp.where(keep, vc, cache.v)
+        new_len = cache.length + cl
+        score_len = cache.length + t          # all T drafts visible to score
+    elif row_mask is not None:
         keep = row_mask[:, None, None, None]
         kc = jnp.where(keep, kc, cache.k)
         vc = jnp.where(keep, vc, cache.v)
         new_len = cache.length + t * row_mask.astype(jnp.int32)
+        score_len = new_len
     else:
         new_len = cache.length + t
+        score_len = new_len
     kc = constrain(kc, "act_batch", "act_seq_cache", "kv_heads", None)
     vc = constrain(vc, "act_batch", "act_seq_cache", "kv_heads", None)
-    lens = new_len if per_row else jnp.broadcast_to(new_len, (q.shape[0],))
+    lens = score_len if per_row else jnp.broadcast_to(score_len,
+                                                      (q.shape[0],))
     valid = jnp.arange(kc.shape[1])[None, :] < lens[:, None]
     out = flash_softmax(q, kc, vc, causal=True,
                         chunk=min(chunk, kc.shape[1]),
                         mask=valid, scale=scale, q_start=cache.length)
-    return out, KVCache(k=kc, v=vc, length=new_len)
+    if ret_k is None:
+        ret_k, ret_v = kc, vc
+    return out, KVCache(k=ret_k, v=ret_v, length=new_len)
 
 
 def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
@@ -428,7 +455,8 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
                      *, impl: str = "lln_diag",
                      use_kernel: bool = True,
                      row_mask: Optional[jnp.ndarray] = None,
-                     backend: Optional[str] = None
+                     backend: Optional[str] = None,
+                     commit_len: Optional[jnp.ndarray] = None
                      ) -> tuple[jnp.ndarray, LLNDecodeState]:
     """LLN(+Diag) decode of T >= 1 tokens.  q: (B,T,H,D); k/v_new: (B,T,G,D[v]).
 
@@ -451,6 +479,11 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
     ``backend``: explicit registry backend (``auto``/``pallas`` route
     through ``kernels/ops.py``; ``scan``/``ref`` run the jnp twin below);
     None derives it from the legacy ``use_kernel`` flag.
+    ``commit_len``: optional per-row (B,) int32 in [0, T] — speculative
+    partial commit: all T positions are scored, but only the accepted
+    prefix folds into the LLN state, the diag tail and ``pos``
+    (``commit_len=0`` ≡ ``row_mask=False``; ``commit_len=T`` ≡ a plain
+    decode).  Requires per-row ``pos``.
     """
     b, t, h, d = q.shape
     if backend is None:
@@ -460,7 +493,8 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
         lln_out, lln_state = kops.lln_decode_chunk(state.lln, q, k_new,
                                                    v_new, alpha, beta,
                                                    row_mask=row_mask,
-                                                   backend=backend)
+                                                   backend=backend,
+                                                   commit_len=commit_len)
     else:
         beta_h = jnp.asarray(beta, jnp.float32)
         g = k_new.shape[2]
@@ -468,22 +502,29 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
             beta_h = jnp.repeat(beta_h, h // g, axis=-1)
         lln_out, lln_state = lln_mod.decode_chunk(
             state.lln, q, _repeat_kv(k_new, h), _repeat_kv(v_new, h),
-            alpha, beta_h, row_mask=row_mask)
+            alpha, beta_h, row_mask=row_mask, commit_len=commit_len)
 
-    # --- rolling tail update, vectorized: for each slot i the last chunk
-    # token writing it is j_i = j0 + block*((t-1-j0)//block), j0 = (i-pos)%blk.
+    # --- rolling tail update, vectorized: for each slot i the last
+    # *committed* chunk token writing it is j_i = j0 + block*((c-1-j0)//block),
+    # j0 = (i-pos)%blk, c the per-row committed length (= t for a plain
+    # decode).
     block = state.tail_k.shape[1]
     gt = state.tail_k.shape[2]          # tail head count (G, or H for seed)
     k_t = _repeat_kv(k_new, gt) if k_new.shape[2] != gt else k_new
     v_t = _repeat_kv(v_new, gt) if v_new.shape[2] != gt else v_new
     pos = state.pos
     posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))    # (B,)
+    if commit_len is not None:
+        cl = lln_mod.commit_lengths(commit_len, row_mask, t)
+    elif row_mask is not None:
+        cl = t * row_mask.astype(jnp.int32)
+    else:
+        cl = jnp.full((b,), t, jnp.int32)
     idx = jnp.arange(block)
     j0 = jnp.mod(idx[None, :] - posb[:, None], block)             # (B, BLK)
-    j_last = jnp.clip(j0 + block * ((t - 1 - j0) // block), 0, t - 1)
-    wrote = (j0 < t)[:, :, None, None]
-    if row_mask is not None:
-        wrote = wrote & row_mask[:, None, None, None]
+    j_last = jnp.clip(j0 + block * ((cl[:, None] - 1 - j0) // block),
+                      0, t - 1)
+    wrote = (j0 < cl[:, None])[:, :, None, None]
     gather = j_last[:, :, None, None]
     tail_k = jnp.where(wrote, jnp.take_along_axis(k_t, gather, axis=1
                                                   ).astype(state.tail_k.dtype),
@@ -491,10 +532,12 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
     tail_v = jnp.where(wrote, jnp.take_along_axis(v_t, gather, axis=1
                                                   ).astype(state.tail_v.dtype),
                        state.tail_v)
-    if row_mask is not None:
+    if commit_len is not None:
+        new_pos = posb + cl         # always per-row under partial commit
+    elif row_mask is not None:
         new_pos = pos + t * row_mask.astype(jnp.int32)
     else:
-        new_pos = pos + t
+        new_pos = pos + t           # scalar pos stays scalar
     new_state = LLNDecodeState(lln=lln_state, tail_k=tail_k, tail_v=tail_v,
                                pos=new_pos)
     if impl == "lln":

@@ -276,48 +276,86 @@ class AttentionEngine:
         return out, state
 
     def decode(self, state: AttentionState, q, k, v, *,
-               row_mask: Optional[jnp.ndarray] = None):
+               row_mask: Optional[jnp.ndarray] = None,
+               commit_len: Optional[jnp.ndarray] = None):
         """Advance ``state`` over T >= 1 new tokens; returns
         ``(out (B,T,H,Dv), new state)``.
 
         Positions come from the state itself (``len``/``pos`` are per-row
         (B,)).  ``row_mask`` (B,) bool: masked rows advance NOTHING and
         their outputs must be discarded (the continuous-batching
-        contract).
+        contract).  ``commit_len`` (B,) int32 in [0, T]: the speculative
+        partial-commit contract — all T positions are scored, but only
+        the accepted prefix folds into the state (see :meth:`verify`).
         """
         spec = self.spec
         if spec.impl == "softmax":
             out, kv2 = ca.decode_softmax(
                 KVCache(k=state.k, v=state.v, length=state.len),
-                q, k, v, chunk=spec.softmax_chunk, row_mask=row_mask)
+                q, k, v, chunk=spec.softmax_chunk, row_mask=row_mask,
+                commit_len=commit_len)
             return out, state.replace(k=kv2.k, v=kv2.v, len=kv2.length)
         st = LLNDecodeState(
             lln=LLNState(s=state.s, z=state.z, c_k=state.c_k),
             tail_k=state.tail_k, tail_v=state.tail_v, pos=state.pos)
         out, st2 = ca.decode_lln_chunk(st, q, k, v, state.alpha, state.beta,
                                        impl=spec.impl, row_mask=row_mask,
-                                       backend=spec.backend)
+                                       backend=spec.backend,
+                                       commit_len=commit_len)
         return out, state.replace(
             s=st2.lln.s, z=st2.lln.z, c_k=st2.lln.c_k,
             tail_k=st2.tail_k, tail_v=st2.tail_v, pos=st2.pos)
 
+    def verify(self, state: AttentionState, q, k, v, *, commit_len,
+               row_mask: Optional[jnp.ndarray] = None):
+        """Speculative verify: score a T-token draft chunk, commit only the
+        accepted prefix.
+
+        Identical to :meth:`decode` except ``commit_len`` (B,) int32 is
+        required: outputs cover ALL T draft positions (each position
+        attends exactly the keys a sequential decode would have seen), but
+        the state — LLN ``(s, z, c_k)``, diag tails, softmax KV rows,
+        ``pos``/``len`` — folds only tokens ``j < commit_len[b]``.
+        ``commit_len=0`` rows behave exactly like ``row_mask=False`` rows;
+        ``commit_len=T`` is a plain decode.  A rejected draft token is
+        therefore never popped — it simply never enters the running sums.
+        """
+        if commit_len is None:
+            raise ValueError("verify requires commit_len; use decode for "
+                             "an unconditional advance")
+        return self.decode(state, q, k, v, row_mask=row_mask,
+                           commit_len=commit_len)
+
     def evict(self, state: AttentionState, rows) -> AttentionState:
-        """Clear the given rows (freed slots) of every state leaf.
+        """Reset the given rows (freed slots) of every state leaf to their
+        ``init_state`` values.
 
         ``rows``: (k,) int32 slot indices, or a (B,) bool mask of rows to
-        clear.  Semantically optional — admission overwrites a slot's rows
-        wholesale — but zeroing freed slots keeps stale request state from
-        outliving its request (and makes the lifecycle testable).
+        clear.  Every leaf resets to zero EXCEPT the per-row calibration
+        ``alpha``/``beta``, which reset to ones (their init value) — a
+        previous request's moment-matching constants must never leak into
+        the next request admitted to that slot.  Semantically eviction is
+        belt-and-braces — admission overwrites a slot's rows wholesale —
+        but resetting freed slots keeps stale request state from outliving
+        its request (and makes the lifecycle testable).
         """
         rows = jnp.asarray(rows)
         if rows.dtype == jnp.bool_:
-            def clear(leaf):
+            def clear(path, leaf):
+                name = getattr(path[-1], "key", None)
+                fill = (jnp.ones((), leaf.dtype)
+                        if name in ("alpha", "beta")
+                        else jnp.zeros((), leaf.dtype))
                 keep = ~rows.reshape((-1,) + (1,) * (leaf.ndim - 1))
-                return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
+                return jnp.where(keep, leaf, fill)
         else:
-            def clear(leaf):
-                return leaf.at[rows].set(jnp.zeros((), leaf.dtype))
-        return jax.tree_util.tree_map(clear, state)
+            def clear(path, leaf):
+                name = getattr(path[-1], "key", None)
+                fill = (jnp.ones((), leaf.dtype)
+                        if name in ("alpha", "beta")
+                        else jnp.zeros((), leaf.dtype))
+                return leaf.at[rows].set(fill)
+        return jax.tree_util.tree_map_with_path(clear, state)
 
 
 __all__ = ["AttentionState", "AttentionEngine", "AttnSpec"]

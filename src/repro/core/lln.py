@@ -307,6 +307,18 @@ def decode_step(
     return out, LLNState(s=s, z=z, c_k=c_new)
 
 
+def commit_lengths(commit_len: jnp.ndarray,
+                   row_mask: Optional[jnp.ndarray], t: int) -> jnp.ndarray:
+    """Normalize a partial-commit vector: clip to [0, T] and zero masked
+    rows.  The ONE definition of the contract's edge handling — every
+    decode path (jnp core, kernels/ops, softmax cache) must agree on it.
+    """
+    cl = jnp.clip(commit_len.astype(jnp.int32), 0, t)
+    if row_mask is not None:
+        cl = jnp.where(row_mask, cl, 0)
+    return cl
+
+
 def decode_chunk(
     state: LLNState,
     q: jnp.ndarray,
@@ -315,6 +327,7 @@ def decode_chunk(
     alpha: jnp.ndarray,
     beta: jnp.ndarray,
     row_mask: Optional[jnp.ndarray] = None,
+    commit_len: Optional[jnp.ndarray] = None,
 ) -> tuple[jnp.ndarray, LLNState]:
     """Advance the state over T new tokens at once.  q/k/v: (B, T, H, D[v]).
 
@@ -329,19 +342,42 @@ def decode_chunk(
     ``row_mask``: optional (B,) bool — rows where it is False keep their
     old ``(s, z, c_k)`` exactly (no rescale, no accumulation); their
     outputs are garbage and must be discarded by the caller.
+    ``commit_len``: optional per-row (B,) int32 in [0, T] — the
+    speculative-decode partial-commit contract.  Outputs are still scored
+    for ALL T positions, but only tokens ``j < commit_len[b]`` fold into
+    ``(s, z, c_k)``: the reference constant advances only over committed
+    keys (exactly the constant a sequential commit of that prefix would
+    produce), uncommitted keys contribute Phi(k) = 0.  ``commit_len=0``
+    is the masked row (state bitwise preserved up to * 1.0 / + 0.0);
+    ``commit_len=T`` (or None) is today's full commit.
     """
     b, t, h, d = q.shape
     dv = v.shape[-1]
     bk = k * _bcast(beta, k)
-    c_new = jnp.maximum(state.c_k, jax.lax.stop_gradient(
-        jnp.max(bk, axis=(1, 3), keepdims=True)))       # (B,1,H,1)
-    r = jnp.exp(state.c_k - c_new)[:, 0, :, 0]          # (B,H) <= 1
-    fk = jnp.exp(bk - c_new).astype(jnp.float32)        # (B,T,H,D)
+    if commit_len is not None:
+        cl = commit_lengths(commit_len, row_mask, t)
+        cmask = jnp.arange(t)[None, :] < cl[:, None]             # (B, T)
+        bk_c = jnp.where(cmask[:, :, None, None], bk, -jnp.inf)
+        # Committed-prefix reference constant; max over an empty commit is
+        # -inf, so c_new degrades to the carried c_k exactly.
+        c_new = jnp.maximum(state.c_k, jax.lax.stop_gradient(
+            jnp.max(bk_c, axis=(1, 3), keepdims=True)))
+        # Scores over every draft position need a constant covering ALL
+        # chunk keys (no overflow); the normalized output is invariant.
+        c_out = jnp.maximum(c_new, jax.lax.stop_gradient(
+            jnp.max(bk, axis=(1, 3), keepdims=True)))
+    else:
+        bk_c = bk
+        c_new = jnp.maximum(state.c_k, jax.lax.stop_gradient(
+            jnp.max(bk, axis=(1, 3), keepdims=True)))   # (B,1,H,1)
+        c_out = c_new
+    r_out = jnp.exp(state.c_k - c_out)[:, 0, :, 0]      # (B,H) <= 1
+    fk = jnp.exp(bk - c_out).astype(jnp.float32)        # (B,T,H,D)
     vf = v.astype(jnp.float32)
     aq = q * _bcast(alpha, q)
     fq = jnp.exp(aq - _stab_const(aq, (1, 3))).astype(jnp.float32)
-    s0 = state.s * r[..., None, None]
-    z0 = state.z * r[..., None]
+    s0 = state.s * r_out[..., None, None]
+    z0 = state.z * r_out[..., None]
     causal = jnp.tril(jnp.ones((t, t), jnp.float32))
     scores = jnp.einsum("bihd,bjhd->bhij", fq, fk) * causal[None, None]
     intra = jnp.einsum("bhij,bjhv->bihv", scores, vf)
@@ -349,8 +385,15 @@ def decode_chunk(
     inter = jnp.einsum("bihd,bhdv->bihv", fq, s0)
     inter_z = jnp.einsum("bihd,bhd->bih", fq, z0)
     out = (intra + inter) / (intra_z + inter_z + EPS)[..., None]
-    s = s0 + jnp.einsum("bjhd,bjhv->bhdv", fk, vf)
-    z = z0 + jnp.sum(fk, axis=1)
+    if commit_len is not None:
+        r_c = jnp.exp(state.c_k - c_new)[:, 0, :, 0]
+        fk_c = jnp.exp(bk_c - c_new).astype(jnp.float32)  # 0 beyond commit
+        s = state.s * r_c[..., None, None] \
+            + jnp.einsum("bjhd,bjhv->bhdv", fk_c, vf)
+        z = state.z * r_c[..., None] + jnp.sum(fk_c, axis=1)
+    else:
+        s = s0 + jnp.einsum("bjhd,bjhv->bhdv", fk, vf)
+        z = z0 + jnp.sum(fk, axis=1)
     if row_mask is not None:
         keep = row_mask
         s = jnp.where(keep[:, None, None, None], s, state.s)

@@ -1,0 +1,156 @@
+"""Draft-then-verify speculative decoding: the acceptance rules.
+
+Speculative decoding (Leviathan et al., *Fast Inference from Transformers
+via Speculative Decoding*; Chen et al., *Accelerating LLM Decoding with
+Speculative Sampling*) buys tokens/step by letting a cheap draft model
+propose ``k`` tokens and the target model score the whole proposal in ONE
+chunked verify pass.  The verify chunk is ``[tok, d_1, ..., d_k]`` —
+the last committed token followed by the drafts — so the target's logits
+at input position ``i`` are its prediction for the token AFTER
+``d_i`` (position 0 predicts ``d_1``'s replacement).
+
+This module owns only the *math* of acceptance; the state side (scoring
+all T positions while folding only the accepted prefix into the LLN
+running sums / KV rows) is the ``commit_len`` partial-commit contract of
+:meth:`repro.core.engine.AttentionEngine.verify`, and the loop lives in
+``launch/steps.py:SpecSetup``.
+
+Both rules return ``(n_accept, next_token, commit_len)``:
+
+* ``n_accept`` (B,) — accepted drafts per row (0..k);
+* ``next_token`` (B,) — the target's correction at the first rejected
+  position, or its bonus extension when every draft survived.  The row
+  therefore always emits ``n_accept + 1`` tokens per verify
+  (``d_1..d_{n}, next_token``);
+* ``commit_len`` (B,) = ``n_accept + 1`` — the verify-chunk inputs whose
+  keys commit: ``tok`` plus the accepted drafts (``next_token``'s key is
+  folded when it is fed as the next chunk's first input).
+
+Greedy acceptance reproduces the target's greedy sequence token for token
+(the drafts only change how many sequential target dispatches it costs);
+residual resampling preserves the target's sampling distribution exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_TINY = 1e-30
+
+
+def greedy_verify(draft_tokens: jnp.ndarray, target_logits: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Greedy accept/reject: keep the longest draft prefix that matches the
+    target's argmax at every position.
+
+    Args:
+      draft_tokens: (B, k) int32 — the draft model's proposals.
+      target_logits: (B, k+1, V) — the target's verify-pass logits over the
+        chunk ``[tok, d_1..d_k]`` (``target_logits[:, i]`` predicts the
+        token after input ``i``).
+
+    Returns ``(n_accept (B,), next_token (B,), commit_len (B,))``.
+    """
+    k = draft_tokens.shape[1]
+    tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)  # (B, k+1)
+    match = (draft_tokens == tgt[:, :k]).astype(jnp.int32)
+    # Longest matching prefix: cumprod zeroes everything after the first
+    # mismatch; its sum is the prefix length.
+    n_accept = jnp.sum(jnp.cumprod(match, axis=1), axis=1)      # (B,)
+    next_token = jnp.take_along_axis(tgt, n_accept[:, None],
+                                     axis=1)[:, 0]
+    return n_accept, next_token, n_accept + 1
+
+
+def residual_verify(draft_tokens: jnp.ndarray, draft_logits: jnp.ndarray,
+                    target_logits: jnp.ndarray, key, temperature: float
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Speculative sampling with residual resampling (Chen et al. 2023).
+
+    Draft ``d_i ~ q_i`` is accepted with probability
+    ``min(1, p_i(d_i) / q_i(d_i))`` (``p`` the target's distribution at
+    that position); at the first rejection the replacement is drawn from
+    the residual ``(p_i - q_i)^+`` (renormalized), and on full acceptance
+    the bonus token is drawn from ``p_{k+1}``.  This preserves the
+    target's sampling distribution exactly.
+
+    Args:
+      draft_tokens: (B, k) int32 proposals.
+      draft_logits: (B, k, V) — the draft logits each ``d_i`` was sampled
+        from.
+      target_logits: (B, k+1, V) verify-pass logits.
+      key: PRNG key for the accept coins and the resample/bonus draws.
+      temperature: shared sampling temperature (> 0; ``greedy_verify`` is
+        the temperature-0 rule).
+
+    Returns ``(n_accept (B,), next_token (B,), commit_len (B,))``.
+    """
+    if temperature <= 0:
+        raise ValueError("residual_verify requires temperature > 0; "
+                         "use greedy_verify for greedy decoding")
+    b, k = draft_tokens.shape
+    ka, kr = jax.random.split(key)
+    p = jax.nn.softmax(target_logits[:, :k].astype(jnp.float32)
+                       / temperature, axis=-1)                  # (B, k, V)
+    q = jax.nn.softmax(draft_logits.astype(jnp.float32)
+                       / temperature, axis=-1)                  # (B, k, V)
+    idx = draft_tokens[:, :, None]
+    p_d = jnp.take_along_axis(p, idx, axis=2)[..., 0]           # (B, k)
+    q_d = jnp.take_along_axis(q, idx, axis=2)[..., 0]
+    u = jax.random.uniform(ka, (b, k))
+    accept = (u < jnp.minimum(1.0, p_d / jnp.maximum(q_d, _TINY)))
+    n_accept = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1),
+                       axis=1)                                  # (B,)
+    # Residual distribution at the first rejected position (row-gathered;
+    # clamped to k-1 — unused when every draft survived).
+    j = jnp.minimum(n_accept, k - 1)[:, None, None]
+    p_j = jnp.take_along_axis(p, j, axis=1)[:, 0]               # (B, V)
+    q_j = jnp.take_along_axis(q, j, axis=1)[:, 0]
+    residual = jnp.maximum(p_j - q_j, 0.0)
+    norm = jnp.sum(residual, axis=-1, keepdims=True)
+    # Degenerate residual (p == q): fall back to sampling from p itself.
+    residual = jnp.where(norm > _TINY, residual / jnp.maximum(norm, _TINY),
+                         p_j)
+    resampled = jax.random.categorical(
+        kr, jnp.log(residual + _TINY), axis=-1).astype(jnp.int32)
+    bonus = jax.random.categorical(
+        kr, target_logits[:, k].astype(jnp.float32) / temperature,
+        axis=-1).astype(jnp.int32)
+    next_token = jnp.where(n_accept == k, bonus, resampled)
+    return n_accept, next_token, n_accept + 1
+
+
+def verify_tokens(draft_tokens: jnp.ndarray, target_logits: jnp.ndarray,
+                  temperature: float, key=None,
+                  draft_logits: Optional[jnp.ndarray] = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The one acceptance entry point: greedy at ``temperature == 0``,
+    residual resampling otherwise (``draft_logits``/``key`` then
+    required)."""
+    if temperature <= 0:
+        return greedy_verify(draft_tokens, target_logits)
+    if draft_logits is None or key is None:
+        raise ValueError("temperature sampling requires draft_logits and "
+                         "a PRNG key")
+    return residual_verify(draft_tokens, draft_logits, target_logits, key,
+                           temperature)
+
+
+def emit_tokens(draft_tokens: jnp.ndarray, n_accept: jnp.ndarray,
+                next_token: jnp.ndarray) -> jnp.ndarray:
+    """Pack one verify step's emitted tokens into a fixed-shape (B, k+1)
+    buffer: the accepted drafts, then ``next_token``; slots past
+    ``n_accept + 1`` are padding the caller must mask with the emit count.
+    """
+    b, k = draft_tokens.shape
+    slots = jnp.arange(k + 1)[None, :]
+    padded = jnp.concatenate(
+        [draft_tokens, jnp.zeros((b, 1), draft_tokens.dtype)], axis=1)
+    out = jnp.where(slots < n_accept[:, None], padded, 0)
+    return jnp.where(slots == n_accept[:, None], next_token[:, None], out)
+
+
+__all__ = ["greedy_verify", "residual_verify", "verify_tokens",
+           "emit_tokens"]

@@ -416,7 +416,8 @@ def _block_diag_twin(q, k, v, block, causal):
 def lln_decode_chunk(state, q, k, v, alpha, beta,
                      interpret: Optional[bool] = None,
                      row_mask: Optional[jnp.ndarray] = None,
-                     backend: str = "auto"):
+                     backend: str = "auto",
+                     commit_len: Optional[jnp.ndarray] = None):
     """Advance an ``LLNState`` over T new tokens in one dispatch.
 
     Args:
@@ -433,6 +434,13 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
       row_mask: optional (B,) bool — rows where it is False keep their old
         ``(s, z, c_k)`` exactly (masked rows must not advance state; their
         outputs are garbage and must be discarded by the caller).
+      commit_len: optional per-row (B,) int32 in [0, T] — the speculative
+        partial-commit contract: all T positions are scored, but only
+        tokens ``j < commit_len[b]`` fold into ``(s, z, c_k)`` (the
+        reference constant advances over committed keys only;
+        ``commit_len=0`` ≡ ``row_mask=False``, ``commit_len=T`` ≡ a plain
+        decode).  On the Pallas path the kernel still scores the full
+        chunk; the committed fold is the cheap O(T d^2) jnp einsum below.
 
     Returns ``(out (B,T,H,Dv) in v.dtype, new LLNState)``.
 
@@ -463,7 +471,8 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
         vf = v if g == h else jnp.repeat(v, h // g, axis=2)
         beta_h = jnp.repeat(beta_b, h // g, axis=-1) if g != h else beta_b
         return core_lln.decode_chunk(state, q, kf, vf, alpha, beta_h,
-                                     row_mask=row_mask)
+                                     row_mask=row_mask,
+                                     commit_len=commit_len)
     alpha_b = _bcast_heads(alpha, h)
     aq = q.astype(jnp.float32) * _row_head_bcast(alpha_b)
     bk = k.astype(jnp.float32) * _row_head_bcast(beta_b)
@@ -492,8 +501,29 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
     out_k, s1, z1 = lln_decode_pallas(qs, ks, vk, s0, z0, r=r,
                                       interpret=ip)
     out = _from_kernel(out_k[:, :t], b)
-    s_new = s1.reshape(b, h, d, -1)
-    z_new = z1.reshape(b, h, d)
+    if commit_len is not None:
+        # Partial commit: the kernel scored the full chunk (and its s1/z1
+        # folded every key — discarded); refold only the accepted prefix,
+        # with the reference constant advanced over committed keys only.
+        cl = core_lln.commit_lengths(commit_len, row_mask, t)
+        cmask = jnp.arange(t)[None, :] < cl[:, None]             # (B, T)
+        bk_c = jnp.where(cmask[:, :, None, None], bk, -jnp.inf)
+        c_com_g = jnp.maximum(c_old_g, jax.lax.stop_gradient(
+            jnp.max(bk_c, axis=(1, 3), keepdims=True)))          # (B,1,G,1)
+        c_com_h = jnp.repeat(c_com_g, r, axis=2) if r != 1 else c_com_g
+        resc = jnp.exp(state.c_k - c_com_h)[:, 0, :, 0]          # (B,H)
+        fk_c = jnp.exp(bk_c - c_com_g)                # (B,T,G,D), 0 beyond
+        add_s = jnp.einsum("bjgd,bjgv->bgdv", fk_c, v.astype(jnp.float32))
+        add_z = jnp.sum(fk_c, axis=1)                            # (B,G,D)
+        if r != 1:
+            add_s = jnp.repeat(add_s, r, axis=1)
+            add_z = jnp.repeat(add_z, r, axis=1)
+        s_new = state.s * resc[..., None, None] + add_s
+        z_new = state.z * resc[..., None] + add_z
+        c_new_h = c_com_h
+    else:
+        s_new = s1.reshape(b, h, d, -1)
+        z_new = z1.reshape(b, h, d)
     if row_mask is not None:
         keep = row_mask
         s_new = jnp.where(keep[:, None, None, None], s_new, state.s)

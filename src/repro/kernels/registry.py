@@ -226,11 +226,14 @@ def prefill(spec: AttnSpec, q, k, v, alpha, beta):
 
 
 def decode_chunk(spec: AttnSpec, state, q, k, v, alpha, beta,
-                 row_mask=None):
-    """Advance an ``LLNState`` over T tokens under ``spec.backend``."""
+                 row_mask=None, commit_len=None):
+    """Advance an ``LLNState`` over T tokens under ``spec.backend``.
+    ``commit_len`` (B,) folds only the accepted prefix (speculative
+    verify — see ``ops.lln_decode_chunk``)."""
     from . import ops
     return ops.lln_decode_chunk(state, q, k, v, alpha, beta,
-                                row_mask=row_mask, backend=spec.backend)
+                                row_mask=row_mask, backend=spec.backend,
+                                commit_len=commit_len)
 
 
 def diag_fwd(spec: AttnSpec, q, k, v):

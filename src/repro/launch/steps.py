@@ -13,11 +13,13 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core import speculative
 from repro.distributed import sharding as shd
-from repro.models import Model, build_model
+from repro.models import (Model, build_model, draft_config, draft_params)
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
 
 
@@ -303,6 +305,185 @@ def make_serve_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding: draft-then-verify over the partial-commit contract.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpecSetup:
+    """Jitted speculative-decode entry points for one (cfg, mesh, shape).
+
+    The loop is draft-then-verify (Leviathan et al. / Chen et al.) over
+    the engine's partial-commit contract: each iteration the tied
+    first-``draft_layers`` draft proposes ``spec_k`` tokens sequentially,
+    the target scores the whole chunk ``[tok, d_1..d_k]`` in ONE
+    ``commit_len=0`` pass (state untouched), the acceptance rule
+    (``core/speculative.py``) turns the logits into a per-row
+    ``commit_len``, and one verify-commit pass per model folds exactly the
+    accepted prefix into the LLN ``(s, z, c_k)`` / diag tails / KV rows —
+    a rejected draft never enters the running sums, so nothing is ever
+    popped.  Rows of one batch accept different counts: positions, emit
+    counts and commits are per-row throughout.
+
+    * ``prefill_fn(params, batch) -> (last logits, tgt_caches,
+      draft_caches)`` — both models prefill the prompt (the draft is a
+      zero-copy first-k slice of the target's stacked layer params).
+    * ``make_generate(steps, temperature=0.0, iters=None)`` — ONE jitted
+      ``lax.scan`` whose carry holds BOTH decode states; each scan step is
+      one draft+verify iteration emitting 1..k+1 tokens per row.  Returns
+      ``(toks (B, iters, k+1), n_emit (B, iters), n_accept (B, iters),
+      live (B, iters), tgt_caches, draft_caches)``; rows stop emitting
+      once they reach ``steps`` tokens (``commit_len`` drops to 0 — the
+      masked-row machinery).  ``iters`` defaults to ``steps`` (the worst
+      case: every verify emits exactly one token).
+      :func:`flatten_spec_tokens` flattens the per-iteration buffers into
+      (B, steps) sequences on the host.
+
+    Greedy (``temperature == 0``) speculative decode is token-for-token
+    the plain greedy scanned loop (``tests/test_speculative.py``); the
+    win is sequential target dispatches per token, reported by
+    ``benchmarks/bench_spec.py``.
+    """
+    cfg: Any
+    draft_cfg: Any
+    model: Any
+    draft_model: Any
+    mesh: Any
+    rules: dict
+    spec_k: int
+    draft_layers: int
+    max_len: int
+    prefill_fn: Any
+    make_generate: Any = None
+
+
+def make_spec_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+                    spec_k: int, draft_layers: int,
+                    multi_pod: bool = False) -> SpecSetup:
+    """Build the speculative-decode loop for a dense/MoE decoder.
+
+    ``shape.seq_len`` is the cache budget: it must cover the prompt plus
+    the generation budget plus one verify chunk of overshoot
+    (``prompt + steps + spec_k + 1``).
+    """
+    if spec_k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    dcfg = draft_config(cfg, draft_layers)   # validates k and the family
+    model = build_model(cfg)
+    dmodel = build_model(dcfg)
+    rules = shd.make_rules(cfg, multi_pod=multi_pod, serve=True)
+    max_len = shape.seq_len
+    k = spec_k
+
+    def _prefill(params, batch):
+        with shd.logical_rules(mesh, rules):
+            logits, tgt = model.prefill(params, batch, max_len)
+            _, dr = dmodel.prefill(draft_params(params, cfg, draft_layers),
+                                   batch, max_len)
+        return logits, tgt, dr
+
+    prefill_fn = jax.jit(_prefill)
+
+    def make_generate(steps: int, temperature: float = 0.0,
+                      iters: Optional[int] = None):
+        n_iters = steps if iters is None else iters
+
+        def gen(params, tgt_caches, dr_caches, tok, pos0, key):
+            b = tok.shape[0]
+            dparams = draft_params(params, cfg, draft_layers)
+            pos0 = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32), (b,))
+
+            def body(carry, i):
+                tgt_caches, dr_caches, tok, pos, count = carry
+                it_key = jax.random.fold_in(key, i)
+
+                # Draft k tokens sequentially; the scratch state the
+                # drafting accumulates is DISCARDED — the committed draft
+                # state is refolded below through the same partial-commit
+                # contract as the target.
+                def dstep(dc, j):
+                    dcache, cur = dc
+                    lg, dcache = dmodel.decode(dparams, dcache, cur,
+                                               pos + j)
+                    nxt = sample_token(lg, temperature,
+                                       jax.random.fold_in(it_key, j))
+                    return (dcache, nxt), (nxt, lg)
+
+                _, (drafts, dlogits) = jax.lax.scan(
+                    dstep, (dr_caches, tok),
+                    jnp.arange(k, dtype=jnp.int32))
+                drafts = drafts.T                          # (B, k)
+                dlogits = dlogits.transpose(1, 0, 2)       # (B, k, V)
+
+                # Verify: score ALL k+1 positions, commit nothing yet
+                # (commit_len=0 leaves every cache leaf untouched).
+                chunk = jnp.concatenate([tok[:, None], drafts], axis=1)
+                tlogits, _ = model.decode(
+                    params, tgt_caches, chunk, pos,
+                    commit_len=jnp.zeros((b,), jnp.int32))
+                n_acc, nxt, commit = speculative.verify_tokens(
+                    drafts, tlogits, temperature,
+                    key=jax.random.fold_in(it_key, k + 1),
+                    draft_logits=dlogits)
+                live = count < steps
+                commit = jnp.where(live, commit, 0)
+
+                # Commit the accepted prefix into BOTH decode states.
+                _, tgt_caches = model.decode(params, tgt_caches, chunk,
+                                             pos, commit_len=commit)
+                _, dr_caches = dmodel.decode(dparams, dr_caches, chunk,
+                                             pos, commit_len=commit)
+
+                n_emit = jnp.where(live, n_acc + 1, 0)
+                toks_out = speculative.emit_tokens(drafts, n_acc, nxt)
+                tok = jnp.where(live, nxt, tok)
+                pos = pos + commit
+                count = count + n_emit
+                return ((tgt_caches, dr_caches, tok, pos, count),
+                        (toks_out, n_emit, jnp.where(live, n_acc, 0),
+                         live))
+
+            init = (tgt_caches, dr_caches, tok, pos0,
+                    jnp.zeros((b,), jnp.int32))
+            with shd.logical_rules(mesh, rules):
+                (tgt_caches, dr_caches, *_), ys = jax.lax.scan(
+                    body, init, jnp.arange(n_iters, dtype=jnp.int32))
+            toks, n_emit, n_acc, live = ys
+            return (toks.transpose(1, 0, 2), n_emit.T, n_acc.T, live.T,
+                    tgt_caches, dr_caches)
+
+        return jax.jit(gen, donate_argnums=(1, 2))
+
+    return SpecSetup(cfg=cfg, draft_cfg=dcfg, model=model,
+                     draft_model=dmodel, mesh=mesh, rules=rules,
+                     spec_k=spec_k, draft_layers=draft_layers or
+                     cfg.draft_layers, max_len=max_len,
+                     prefill_fn=prefill_fn, make_generate=make_generate)
+
+
+def flatten_spec_tokens(toks, n_emit, steps: int) -> np.ndarray:
+    """Host-side flatten of one speculative run: per-iteration emit
+    buffers ``toks (B, iters, k+1)`` + counts ``n_emit (B, iters)`` ->
+    (B, steps) token sequences (each row concatenates its emitted
+    prefixes; overshoot past ``steps`` is dropped)."""
+    toks = np.asarray(toks)
+    n_emit = np.asarray(n_emit)
+    b = toks.shape[0]
+    out = np.zeros((b, steps), np.int32)
+    for r in range(b):
+        seq: list[int] = []
+        for it in range(toks.shape[1]):
+            n = int(n_emit[r, it])
+            seq.extend(int(x) for x in toks[r, it, :n])
+            if len(seq) >= steps:
+                break
+        if len(seq) < steps:
+            raise ValueError(f"row {r} emitted {len(seq)} < {steps} tokens"
+                             " — increase iters")
+        out[r] = np.asarray(seq[:steps], np.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Continuous batching: slotted request pool over per-row caches.
 # ---------------------------------------------------------------------------
 
@@ -419,15 +600,23 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
     admit_fn = jax.jit(_admit, donate_argnums=(0,))
 
     def _evict(pooled, row_mask):
-        """AttentionEngine.evict lifted over the stacked layer tree: zero
+        """AttentionEngine.evict lifted over the stacked layer tree: reset
         the rows where ``row_mask`` ((slots,) bool) is True, on every leaf
-        (slot axis at position 1, after the stacked-layer axis).  A fixed
-        (slots,) mask keeps this ONE compiled executable regardless of how
-        many slots free per segment."""
-        def clear(leaf):
+        (slot axis at position 1, after the stacked-layer axis), to their
+        ``init_state`` values — zeros everywhere EXCEPT the per-row
+        calibration ``alpha``/``beta``, which reset to ones.  Zeroing the
+        calibration would leave a freed slot carrying an out-of-contract
+        value (init is ones), and a stale previous-request alpha/beta must
+        never survive into the next request admitted to that slot.  A
+        fixed (slots,) mask keeps this ONE compiled executable regardless
+        of how many slots free per segment."""
+        def clear(path, leaf):
+            name = getattr(path[-1], "key", None)
+            fill = (jnp.ones((), leaf.dtype) if name in ("alpha", "beta")
+                    else jnp.zeros((), leaf.dtype))
             keep = ~row_mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
-            return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
-        return jax.tree_util.tree_map(clear, pooled)
+            return jnp.where(keep, leaf, fill)
+        return jax.tree_util.tree_map_with_path(clear, pooled)
 
     evict_fn = jax.jit(_evict, donate_argnums=(0,))
 
@@ -436,6 +625,10 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
             caches, tok, pos, remaining, active = carry
             logits, caches = model.decode(params, caches, tok, pos,
                                           row_mask=active)
+            # Masked rows' logits are garbage by the decode contract (they
+            # may even be NaN from a freshly evicted slot); neutralize them
+            # BEFORE sampling so garbage never reaches sample_token.
+            logits = jnp.where(active[:, None], logits, 0.0)
             nxt = sample_token(logits, temperature,
                                jax.random.fold_in(key, i))
             tok = jnp.where(active, nxt, tok)

@@ -1,4 +1,6 @@
 """Model zoo: composable model definitions for all assigned architectures."""
-from .model_zoo import Model, build_model, synthetic_batch
+from .model_zoo import (Model, build_model, draft_config, draft_params,
+                        synthetic_batch)
 
-__all__ = ["Model", "build_model", "synthetic_batch"]
+__all__ = ["Model", "build_model", "draft_config", "draft_params",
+           "synthetic_batch"]

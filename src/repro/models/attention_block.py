@@ -136,7 +136,8 @@ def serve_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
     return dense(p["o_w"], out, cfg.cdtype), state
 
 
-def serve_decode(p, x, state, cfg, position, *, row_mask=None):
+def serve_decode(p, x, state, cfg, position, *, row_mask=None,
+                 commit_len=None):
     """Decode over T >= 1 new tokens.  x: (B, T, d).
 
     ``position``: absolute index of the first new token — a scalar (static
@@ -146,6 +147,9 @@ def serve_decode(p, x, state, cfg, position, *, row_mask=None):
     ``row_mask``: optional (B,) bool — rows where it is False write nothing
     (KV cache / LLN state / tails / positions all keep their old values);
     their outputs are garbage and must be discarded by the caller.
+    ``commit_len``: optional per-row (B,) int32 in [0, T] — speculative
+    partial commit: all T positions are scored, only the accepted prefix
+    folds into the state (``AttentionEngine.verify``).
     """
     b, n, _ = x.shape
     hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
@@ -164,7 +168,8 @@ def serve_decode(p, x, state, cfg, position, *, row_mask=None):
         pos = position
     q = rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
     k = rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
-    out, state = attn_engine(cfg).decode(state, q, k, v, row_mask=row_mask)
+    out, state = attn_engine(cfg).decode(state, q, k, v, row_mask=row_mask,
+                                         commit_len=commit_len)
     out = out.reshape(b, n, h * hd)
     return dense(p["o_w"], out, cfg.cdtype), state
 

@@ -69,8 +69,10 @@ def build_model(cfg: ArchConfig) -> Model:
 
         return Model(cfg=cfg, init=lambda key: tr.lm_init(key, cfg),
                      loss=loss, hidden=hidden, prefill=prefill,
-                     decode=lambda p, c, t, pos, row_mask=None: tr.lm_decode(
-                         p, c, t, cfg, pos, row_mask=row_mask),
+                     decode=lambda p, c, t, pos, row_mask=None,
+                     commit_len=None: tr.lm_decode(
+                         p, c, t, cfg, pos, row_mask=row_mask,
+                         commit_len=commit_len),
                      cache_init=lambda p, b, n, per_row=False:
                          tr.lm_cache_init(p, cfg, b, n, per_row=per_row),
                      param_count=_count)
@@ -152,6 +154,44 @@ def build_model(cfg: ArchConfig) -> Model:
                      param_count=_count)
 
     raise ValueError(f"unknown family: {fam}")
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: the tied first-k-layers draft model.
+# ---------------------------------------------------------------------------
+
+def draft_config(cfg: ArchConfig, draft_layers: int = 0) -> ArchConfig:
+    """The draft model's config: the target truncated to its first
+    ``draft_layers`` blocks (embedding, final norm and LM head shared) —
+    the standard early-exit draft for draft-then-verify decoding.
+    ``draft_layers`` defaults to ``cfg.draft_layers``; equal to
+    ``cfg.n_layers`` it is the tied full model (acceptance -> 1, the
+    machinery-proving configuration)."""
+    k = draft_layers or cfg.draft_layers
+    if not 1 <= k <= cfg.n_layers:
+        raise ValueError(f"draft_layers must be in [1, {cfg.n_layers}], "
+                         f"got {k}")
+    if cfg.family not in ("dense", "moe") or cfg.first_dense_layers:
+        raise NotImplementedError(
+            "first-k-layers draft supports dense/moe decoders without "
+            f"first_dense_layers (family={cfg.family})")
+    return cfg.replace(name=f"{cfg.name}-draft{k}", n_layers=k)
+
+
+def draft_params(params, cfg: ArchConfig, draft_layers: int = 0):
+    """Slice the target's stacked layer params to the draft's first-k view.
+
+    Zero-copy under jit (a static slice of the stacked (L, ...) leaves);
+    everything else (embed / final_norm / lm_head) is shared by reference —
+    the draft is TIED to the target, there are no extra weights to train
+    or checkpoint."""
+    k = draft_layers or cfg.draft_layers
+    dcfg = draft_config(cfg, k)            # validates k and the family
+    del dcfg
+    out = {n: p for n, p in params.items() if n != "layers"}
+    out["layers"] = jax.tree_util.tree_map(lambda a: a[:k],
+                                           params["layers"])
+    return out
 
 
 def synthetic_batch(cfg: ArchConfig, batch: int, seq: int, key=None,

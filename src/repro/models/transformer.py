@@ -92,16 +92,18 @@ def block_prefill(p, x, cfg, positions, *, use_moe: bool, prefix_len: int = 0,
 
 
 def block_decode(p, x, cache, cfg, position, *, use_moe: bool,
-                 row_mask=None):
+                 row_mask=None, commit_len=None):
     h = apply_norm(p["ln1"], x, cfg.norm)
     if _use_mla(cfg):
-        if row_mask is not None:
-            raise NotImplementedError("row-masked decode is not wired for MLA")
+        if row_mask is not None or commit_len is not None:
+            raise NotImplementedError(
+                "row-masked / partial-commit decode is not wired for MLA")
         attn_out, cache = mla_mod.mla_decode(p["attn"], h, cache, cfg,
                                              position)
     else:
         attn_out, cache = serve_decode(p["attn"], h, cache, cfg, position,
-                                       row_mask=row_mask)
+                                       row_mask=row_mask,
+                                       commit_len=commit_len)
     x = x + attn_out.astype(x.dtype)
     h = apply_norm(p["ln2"], x, cfg.norm)
     ffn_out = (moe_apply(p["moe"], h, cfg)[0] if use_moe
@@ -239,14 +241,19 @@ def lm_prefill(p, tokens, cfg, max_len: int,
     return logits, caches
 
 
-def lm_decode(p, caches, token, cfg, position, row_mask=None):
+def lm_decode(p, caches, token, cfg, position, row_mask=None,
+              commit_len=None):
     """Decode step.  token: (B,) or (B, T) int32 — T > 1 advances the caches
     over a whole chunk in one dispatch (multi-token/speculative scoring);
     position: scalar int32 index of the first new token, or a per-row (B,)
     vector when the caches were allocated ``per_row`` (continuous
     batching).  ``row_mask``: optional (B,) bool — masked-off rows leave
-    every cache leaf untouched and their logits are garbage.  Returns
-    logits (B, V) for (B,) input, (B, T, V) for chunked input."""
+    every cache leaf untouched and their logits are garbage.
+    ``commit_len``: optional per-row (B,) int32 in [0, T] — the
+    speculative verify pass: logits cover all T draft positions, every
+    layer's cache folds only the accepted prefix (``commit_len=0`` rows
+    behave like masked rows).  Returns logits (B, V) for (B,) input,
+    (B, T, V) for chunked input."""
     single = token.ndim == 1
     first, n_main, is_moe = _layer_groups(cfg)
     toks = token[:, None] if single else token
@@ -257,7 +264,8 @@ def lm_decode(p, caches, token, cfg, position, row_mask=None):
         def fn(x, xs):
             lp, cache = xs
             x, cache = block_decode(lp, x, cache, cfg, position,
-                                    use_moe=use_moe, row_mask=row_mask)
+                                    use_moe=use_moe, row_mask=row_mask,
+                                    commit_len=commit_len)
             return x, cache
         return fn
 

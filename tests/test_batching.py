@@ -219,6 +219,119 @@ class TestMaskedRows:
                                   np.asarray(st.lln.s)[1])
 
 
+class TestMaskedLogits:
+    @pytest.mark.parametrize("impl", ["softmax", "lln_diag"])
+    def test_masked_row_logits_never_reach_sampling(self, impl):
+        """The masked-row contract says an inactive slot's logits are
+        garbage — segment_fn must neutralize them before sample_token.
+        Regression: poison a free slot's cache state with NaN (the worst
+        legal garbage) and assert the active rows' harvested tokens are
+        bitwise identical to a clean-pool run, with no NaN anywhere in
+        the emitted stream."""
+        cfg = _tiny_cfg(impl, 2)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(4))
+        mesh = compat_mesh((1, 1), ("data", "model"))
+        with mesh:
+            setup = make_pool_setup(cfg, mesh, slots=2, max_len=32,
+                                    segment=4, temperature=0.7)
+            prompt = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0,
+                                        cfg.vocab, jnp.int32)
+            _, slot_caches = setup.prefill_fn(8)(params, prompt)
+
+            def run_segment(pool):
+                tok = jnp.zeros((2,), jnp.int32).at[0].set(7)
+                pos = jnp.zeros((2,), jnp.int32).at[0].set(8)
+                remaining = jnp.zeros((2,), jnp.int32).at[0].set(4)
+                active = jnp.asarray([True, False])
+                out = setup.segment_fn(params, pool, tok, pos, remaining,
+                                       active, jax.random.PRNGKey(6))
+                _, tok2, _, _, _, toks, emitted = out
+                return np.asarray(toks), np.asarray(emitted), \
+                    np.asarray(tok2)
+
+            clean = setup.admit_fn(setup.cache_init(), slot_caches,
+                                   jnp.asarray([0], jnp.int32))
+            toks_clean, em_clean, tok_clean = run_segment(clean)
+
+            poisoned = setup.admit_fn(setup.cache_init(), slot_caches,
+                                      jnp.asarray([0], jnp.int32))
+            poisoned = jax.tree_util.tree_map(
+                lambda a: a.at[:, 1].set(jnp.nan)
+                if jnp.issubdtype(a.dtype, jnp.floating) else a, poisoned)
+            toks_poi, em_poi, tok_poi = run_segment(poisoned)
+
+        np.testing.assert_array_equal(em_clean, em_poi)
+        np.testing.assert_array_equal(toks_clean[:, 0], toks_poi[:, 0])
+        assert tok_clean[0] == tok_poi[0]
+        # Nothing NaN-shaped leaked into the emitted token stream.
+        assert (toks_poi[em_poi] >= 0).all()
+
+
+class TestEvictCalibration:
+    def test_evict_resets_alpha_beta_to_init(self):
+        """evict_fn resets a freed slot to its init_state values: zeros
+        everywhere EXCEPT alpha/beta, which reset to ONES — a previous
+        request's moment-matching constants must not survive in the
+        pool."""
+        cfg = _tiny_cfg("lln_diag", 2, fixed_ab=False)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(7))
+        mesh = compat_mesh((1, 1), ("data", "model"))
+        with mesh:
+            setup = make_pool_setup(cfg, mesh, slots=2, max_len=32,
+                                    segment=2)
+            pooled = setup.cache_init()
+            prompt = jax.random.randint(jax.random.PRNGKey(8), (1, 8), 0,
+                                        cfg.vocab, jnp.int32)
+            _, sc = setup.prefill_fn(8)(params, prompt)
+            pooled = setup.admit_fn(pooled, sc,
+                                    jnp.asarray([1], jnp.int32))
+            # The admitted row carries genuine prompt calibration != 1.
+            a1 = np.asarray(pooled["layers"]["alpha"])[:, 1]
+            assert not np.allclose(a1, 1.0)
+            mask = np.zeros((2,), np.bool_)
+            mask[1] = True
+            pooled = setup.evict_fn(pooled, jnp.asarray(mask))
+        for kp, leaf in jax.tree_util.tree_leaves_with_path(pooled):
+            name = jax.tree_util.keystr(kp)
+            row = np.asarray(leaf)[:, 1]
+            want = 1.0 if ("alpha" in name or "beta" in name) else 0.0
+            np.testing.assert_array_equal(
+                row, np.full_like(row, want),
+                err_msg=f"evict left {name} at non-init values")
+
+    def test_readmit_into_evicted_slot_matches_solo(self):
+        """Re-admission regression: serve request A in a slot, evict it,
+        then admit request B — whose prompt statistics (and therefore
+        per-row dynamic alpha/beta) genuinely differ — into the SAME
+        slot.  B must decode token-for-token like a solo run; any stale
+        calibration or state surviving eviction would break this."""
+        cfg = _tiny_cfg("lln_diag", 2, fixed_ab=False)
+        assert cfg.lln_fixed_ab == 0     # dynamic moment matching
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(9))
+        max_len = 32
+        # Different prompt lengths => different lengths AND statistics.
+        reqs = synthetic_traffic(2, cfg.vocab, prompt_lens=[8, 11],
+                                 gen_lens=[3, 5], seed=11)
+        mesh = compat_mesh((1, 1), ("data", "model"))
+        with mesh:
+            setup = make_pool_setup(cfg, mesh, slots=1, max_len=max_len,
+                                    segment=2)
+            eng = ContinuousBatcher(setup, params)
+            # ONE slot: request B can only run through the evicted slot A
+            # used, so stale-state leakage would be on the critical path.
+            stats = eng.run(reqs)
+            gen_cache: dict = {}
+            for req in reqs:
+                ref = _solo_tokens(cfg, model, params, mesh, req, max_len,
+                                   gen_cache)
+                np.testing.assert_array_equal(
+                    stats.outputs[req.rid], ref,
+                    err_msg=f"rid {req.rid} diverged after re-admission")
+
+
 class TestPerRowPositions:
     def test_vector_pos_matches_scalar_pos(self):
         """All rows at the same depth: the per-row (B,) position path and

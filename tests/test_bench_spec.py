@@ -1,0 +1,21 @@
+"""Smoke test: the speculative-decode bench runs end-to-end."""
+import json
+
+from benchmarks.bench_spec import run
+
+
+def test_bench_spec_smoke(tmp_path):
+    out = tmp_path / "BENCH_spec.json"
+    rows = run(str(out), smoke=True, verbose=False)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert len(on_disk["rows"]) == len(rows) == 2
+    for row in on_disk["rows"]:
+        assert row["us_per_call"] > 0
+        assert 0.0 <= row["acceptance_rate"] <= 1.0
+        # >= 1 by construction (every verify step commits at least one
+        # token); > 1 whenever any draft survives.
+        assert row["tokens_per_step"] >= 1.0
+        assert row["greedy_parity"] is True
+    # The gated claim: the bench demonstrates tokens/step > 1 somewhere.
+    assert any(r["tokens_per_step"] > 1.0 for r in on_disk["rows"])

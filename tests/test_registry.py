@@ -235,13 +235,16 @@ class TestEngineLifecycle:
             np.testing.assert_array_equal(np.asarray(st2.pos),
                                           np.asarray(lst.pos))
 
-        # evict clears exactly the named rows, bitwise-zero, others intact.
+        # evict resets exactly the named rows to their init values (zeros;
+        # calibration alpha/beta back to ONES), others intact.
         st3 = eng.evict(st2, jnp.asarray([0], jnp.int32))
         for kp, leaf in jax.tree_util.tree_leaves_with_path(st3):
             path = jax.tree_util.keystr(kp)
+            fill = 1.0 if ("alpha" in path or "beta" in path) else 0.0
             np.testing.assert_array_equal(
-                np.asarray(leaf)[0], np.zeros_like(np.asarray(leaf)[0]),
-                err_msg=f"evicted row not cleared: {path}")
+                np.asarray(leaf)[0],
+                np.full_like(np.asarray(leaf)[0], fill),
+                err_msg=f"evicted row not reset to init: {path}")
         for kp, leaf in jax.tree_util.tree_leaves_with_path(st2):
             after = st3
             for kk in kp:

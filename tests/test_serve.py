@@ -165,6 +165,38 @@ class TestDecodeChunk:
         np.testing.assert_allclose(np.asarray(st_pal.c_k),
                                    np.asarray(st_twin.c_k), atol=1e-6)
 
+    @pytest.mark.parametrize("t", [1, 3, 5, 7, 12])
+    def test_chunk_backends_agree_non_sublane_t(self, t):
+        """lln_decode_chunk parity across explicit pallas/scan/ref backends
+        for T that is NOT a sublane multiple (the Pallas path pads T with
+        NEG_INF keys => Phi(k) = 0).  The speculative verify pass calls
+        T = k+1 with arbitrary k, so odd chunk lengths are routine."""
+        b, g, r, d = 2, 2, 2, 8
+        h = g * r
+        st, alpha, beta_h = self._state(b, h, g, d, 24, seed=t)
+        qn, kn, vn = _qkv(17 + t, b, t, h, g, d)
+        results = {}
+        for backend in ("pallas", "scan", "ref"):
+            results[backend] = kops.lln_decode_chunk(
+                st, qn, kn, vn, alpha, beta_h, backend=backend)
+        o_ref, st_ref = results["ref"]
+        for backend in ("pallas", "scan"):
+            o, stb = results[backend]
+            np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=backend)
+            np.testing.assert_allclose(np.asarray(stb.s),
+                                       np.asarray(st_ref.s),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=backend)
+            np.testing.assert_allclose(np.asarray(stb.z),
+                                       np.asarray(st_ref.z),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=backend)
+            np.testing.assert_allclose(np.asarray(stb.c_k),
+                                       np.asarray(st_ref.c_k),
+                                       atol=1e-6, err_msg=backend)
+
     @pytest.mark.parametrize("t", [7, 19])
     def test_full_decode_chunk_crosses_block_boundary(self, t):
         """decode_lln_chunk (LLN + tail-softmax diag) over a chunk straddling
