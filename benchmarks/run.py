@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
   bench_spec           speculative decode: acceptance rate + tokens per
                        verify step across k x impl x r (writes
                        BENCH_spec.json when run standalone)
+  bench_robustness     health-sentinel overhead: serving tok/s with the
+                       per-row state-health reduction on vs off, gated at
+                       <=2% (writes BENCH_robustness.json)
 
 Roofline terms (EXPERIMENTS.md §Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
@@ -28,8 +31,8 @@ import time
 
 def main() -> None:
     from . import (bench_batching, bench_concentration, bench_convergence,
-                   bench_dispatch, bench_distribution, bench_scaling,
-                   bench_serve, bench_spec)
+                   bench_dispatch, bench_distribution, bench_robustness,
+                   bench_scaling, bench_serve, bench_spec)
 
     class _ServeAdapter:
         run = staticmethod(bench_serve.run_rows)
@@ -43,6 +46,9 @@ def main() -> None:
     class _SpecAdapter:
         run = staticmethod(bench_spec.run_rows)
 
+    class _RobustnessAdapter:
+        run = staticmethod(bench_robustness.run_rows)
+
     modules = [("distribution", bench_distribution),
                ("concentration", bench_concentration),
                ("convergence", bench_convergence),
@@ -50,7 +56,8 @@ def main() -> None:
                ("serve", _ServeAdapter),
                ("batching", _BatchingAdapter),
                ("dispatch", _DispatchAdapter),
-               ("spec", _SpecAdapter)]
+               ("spec", _SpecAdapter),
+               ("robustness", _RobustnessAdapter)]
     all_rows = []
     for name, mod in modules:
         print(f"== {name} ==", file=sys.stderr, flush=True)

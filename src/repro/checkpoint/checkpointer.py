@@ -3,13 +3,20 @@
 Layout:   <dir>/step_<N>/
               index.json          pytree structure, leaf shapes/dtypes, CRCs
               shard_<p>.npz       this process's leaves (host-local data)
+              <extra files>       opaque sidecar payloads (e.g. batcher meta)
               _COMMITTED          sentinel written last (atomic completion)
 
 Guarantees:
-* atomicity — writers stage into ``step_<N>.tmp`` and rename; a crash mid-
-  write never corrupts the latest checkpoint (restore ignores uncommitted
-  dirs);
-* integrity — per-leaf CRC32 verified on restore;
+* atomicity — every file is staged to ``<name>.tmp``, fsynced and
+  ``os.replace``d; the whole step dir is staged as ``step_<N>.tmp`` and
+  renamed into place only after ``_COMMITTED`` lands and the dir is
+  fsynced, so a crash at ANY point never leaves a half-written dir that
+  restore would pick up;
+* integrity — ``_COMMITTED`` carries a manifest of per-file byte sizes
+  (truncation detection without a full read) and ``index.json`` carries
+  per-leaf CRC32s verified on restore; :func:`is_valid` checks the
+  manifest, :func:`valid_steps` filters to fully-intact steps (a legacy
+  ``_COMMITTED`` containing just ``"ok"`` falls back to existence checks);
 * elasticity — leaves are saved as *full* (process-gathered) arrays with
   their logical path; restore re-shards onto any mesh/topology via
   ``jax.device_put`` with the target sharding (tested: save on mesh A,
@@ -19,6 +26,7 @@ Guarantees:
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
@@ -27,6 +35,7 @@ import zlib
 from typing import Any, Optional
 
 import jax
+import ml_dtypes
 import numpy as np
 
 
@@ -37,8 +46,33 @@ def _flatten(tree):
     return paths, [leaf for _, leaf in leaves], treedef
 
 
-def save(directory: str, step: int, tree: Any) -> str:
-    """Synchronous checkpoint write (single-process data path)."""
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_atomic(path: str, data: bytes) -> None:
+    """tmp + fsync + ``os.replace``: the file is either absent or complete,
+    never truncated, even across a crash mid-write."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def save(directory: str, step: int, tree: Any,
+         extra: Optional[dict] = None) -> str:
+    """Synchronous checkpoint write (single-process data path).
+
+    ``extra`` maps file names to ``str``/``bytes`` sidecar payloads saved
+    alongside the shards inside the same atomic commit (read back with
+    :func:`read_extra`) — e.g. the serving batcher's queue/metadata JSON.
+    """
     paths, leaves, treedef = _flatten(tree)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -55,14 +89,27 @@ def save(directory: str, step: int, tree: Any) -> str:
         meta[key] = {"path": p, "shape": list(arr.shape),
                      "dtype": str(arr.dtype),
                      "crc": zlib.crc32(np.ascontiguousarray(arr).tobytes())}
-    np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
-    with open(os.path.join(tmp, "index.json"), "w") as f:
-        json.dump({"step": step, "treedef": str(treedef), "leaves": meta}, f)
-    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
-        f.write("ok")
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    _write_atomic(os.path.join(tmp, "shard_0.npz"), buf.getvalue())
+    index = {"step": step, "treedef": str(treedef), "leaves": meta}
+    _write_atomic(os.path.join(tmp, "index.json"),
+                  json.dumps(index).encode())
+    for name, payload in (extra or {}).items():
+        if isinstance(payload, str):
+            payload = payload.encode()
+        _write_atomic(os.path.join(tmp, name), payload)
+    # Manifest of byte sizes goes INTO the commit sentinel: a reader can
+    # detect truncation of any file without parsing it.
+    manifest = {name: os.path.getsize(os.path.join(tmp, name))
+                for name in os.listdir(tmp)}
+    _write_atomic(os.path.join(tmp, "_COMMITTED"),
+                  json.dumps({"files": manifest}).encode())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
-    os.rename(tmp, final)
+    os.replace(tmp, final)
+    _fsync_dir(directory)
     return final
 
 
@@ -75,6 +122,42 @@ def committed_steps(directory: str) -> list[int]:
             if os.path.exists(os.path.join(directory, name, "_COMMITTED")):
                 steps.append(int(name.split("_")[1]))
     return sorted(steps)
+
+
+def is_valid(directory: str, step: int) -> bool:
+    """True iff the committed step dir passes its manifest (every file
+    present at its recorded size).  Legacy checkpoints whose sentinel is
+    the bare ``"ok"`` string fall back to index/shard existence checks."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    sentinel = os.path.join(d, "_COMMITTED")
+    if not os.path.exists(sentinel):
+        return False
+    try:
+        with open(sentinel, "rb") as f:
+            raw = f.read()
+        manifest = json.loads(raw).get("files", {})
+    except (ValueError, OSError):
+        # Legacy "ok" sentinel (or unreadable): existence-only check.
+        return (os.path.exists(os.path.join(d, "index.json"))
+                and os.path.exists(os.path.join(d, "shard_0.npz")))
+    for name, size in manifest.items():
+        if name == "_COMMITTED":
+            continue
+        p = os.path.join(d, name)
+        if not os.path.exists(p) or os.path.getsize(p) != size:
+            return False
+    return True
+
+
+def valid_steps(directory: str) -> list[int]:
+    """Committed steps that also pass :func:`is_valid` (restorable)."""
+    return [s for s in committed_steps(directory) if is_valid(directory, s)]
+
+
+def read_extra(directory: str, step: int, name: str) -> bytes:
+    """Read back a sidecar file written via ``save(..., extra=...)``."""
+    with open(os.path.join(directory, f"step_{step:08d}", name), "rb") as f:
+        return f.read()
 
 
 def restore(directory: str, step: int, target_tree: Any,
@@ -93,6 +176,10 @@ def restore(directory: str, step: int, target_tree: Any,
         crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
         if crc != m["crc"]:
             raise IOError(f"checkpoint corruption at {m['path']}")
+        if arr.dtype.kind == "V":
+            # npz round-trips non-native dtypes (bfloat16/float8) as raw
+            # void bytes; the index records the real dtype — view it back.
+            arr = arr.view(np.dtype(getattr(ml_dtypes, m["dtype"])))
         by_path[m["path"]] = arr
 
     paths, leaves, treedef = _flatten(target_tree)
@@ -120,7 +207,8 @@ class AsyncCheckpointer:
         self._pending: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
-    def save_async(self, step: int, tree: Any):
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[dict] = None):
         self.wait()
         # Materialize on host before handing to the writer thread so the
         # training step can donate/overwrite device buffers immediately.
@@ -129,7 +217,7 @@ class AsyncCheckpointer:
 
         def work():
             try:
-                save(self.directory, step, host_tree)
+                save(self.directory, step, host_tree, extra=extra)
                 self._gc()
             except BaseException as e:  # pragma: no cover
                 self._error = e

@@ -6,12 +6,25 @@ Train loops interact only with this class:
     ...
     mgr.maybe_save(step, state)     # async, interval-gated
     mgr.finalize(step, state)       # sync flush at exit/preemption
+
+The serving stack (``launch/batcher.py`` pool snapshots) uses the sync
+``save_now``/``read_extra`` pair: snapshots must be durable before the
+segment that follows them, and they carry a JSON sidecar (queue + per-row
+metadata) next to the device-state shards.
+
+``latest_step`` only ever returns a checkpoint that passes the integrity
+manifest (``checkpointer.is_valid``) — a crash during a save can leave a
+committed-but-truncated dir, which is skipped AND garbage-collected here
+so it can never shadow an older restorable step.
 """
 from __future__ import annotations
 
+import os
+import shutil
 from typing import Any, Callable, Optional
 
-from .checkpointer import (AsyncCheckpointer, committed_steps, restore)
+from .checkpointer import (AsyncCheckpointer, committed_steps, is_valid,
+                           read_extra, restore, save)
 
 
 class CheckpointManager:
@@ -22,8 +35,17 @@ class CheckpointManager:
         self.async_ckpt = AsyncCheckpointer(directory, keep_n=keep_n)
 
     def latest_step(self) -> Optional[int]:
-        steps = committed_steps(self.directory)
-        return steps[-1] if steps else None
+        """Newest *restorable* step: corrupt/truncated committed dirs are
+        skipped and removed (they would fail restore anyway)."""
+        latest = None
+        for step in committed_steps(self.directory):
+            if is_valid(self.directory, step):
+                latest = step
+            else:
+                shutil.rmtree(
+                    os.path.join(self.directory, f"step_{step:08d}"),
+                    ignore_errors=True)
+        return latest
 
     def restore_or_init(self, init_fn: Callable[[], Any],
                         shardings: Any = None) -> tuple[Any, int]:
@@ -39,6 +61,16 @@ class CheckpointManager:
     def maybe_save(self, step: int, state: Any):
         if self.interval and step % self.interval == 0 and step > 0:
             self.async_ckpt.save_async(step, state)
+
+    def save_now(self, step: int, state: Any,
+                 extra: Optional[dict] = None) -> str:
+        """Synchronous save (serving snapshots: durability before the next
+        segment matters more than hiding the write)."""
+        self.async_ckpt.wait()
+        return save(self.directory, step, state, extra=extra)
+
+    def read_extra(self, step: int, name: str) -> bytes:
+        return read_extra(self.directory, step, name)
 
     def finalize(self, step: int, state: Any):
         self.async_ckpt.wait()

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from . import attention as ca
+from . import health as health_mod
 from .attention import KVCache, LLNDecodeState, batch_alpha_beta
 from .lln import LLNState
 from repro.kernels import registry as kreg
@@ -325,6 +326,23 @@ class AttentionEngine:
                              "an unconditional advance")
         return self.decode(state, q, k, v, row_mask=row_mask,
                            commit_len=commit_len)
+
+    def check_health(self, state: AttentionState, *,
+                     config: Optional["health_mod.HealthConfig"] = None
+                     ) -> dict:
+        """Per-row state-health flags (the serving sentinel hook).
+
+        Returns ``{"unhealthy", "nonfinite", "magnitude", "calib"}``,
+        each a (B,) bool over the state's row axis: non-finite or
+        magnitude-exploding ``(s, z, c_k)``/KV/tail leaves, and per-row
+        ``alpha``/``beta`` outside the calibration bounds
+        (``core/health.py:HealthConfig``).  Pure jnp — callers fold it
+        into their own jitted step (``PoolSetup.segment_fn`` runs it on
+        the post-segment pool caches in the same dispatch).  A freshly
+        evicted row (zeros, alpha/beta = 1) is healthy by construction.
+        """
+        cfg = config if config is not None else health_mod.HealthConfig()
+        return health_mod.row_health(state, row_axis=0, config=cfg)
 
     def evict(self, state: AttentionState, rows) -> AttentionState:
         """Reset the given rows (freed slots) of every state leaf to their

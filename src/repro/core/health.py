@@ -1,0 +1,122 @@
+"""State-health sentinel: cheap per-row checks over attention decode state.
+
+Linear-attention decode states are exactly where length pathologies
+accumulate: the LLN ``(s, z, c_k)`` recurrence is a running sum, so a
+single non-finite value — a poisoned activation, an overflowed feature, a
+bad cache write — persists forever and silently corrupts every token the
+row emits from then on ("The Devil in Linear Transformer" diagnoses the
+unbounded-growth/dilution failure modes; "Critical attention scaling"
+shows calibration drifts with context).  The serving stack therefore
+checks state health PER ROW and quarantines only the poisoned slot
+(``launch/batcher.py``) instead of letting one row take down the pool.
+
+Checks (each yields a per-row bool, all OR-ed into ``unhealthy``):
+
+* ``nonfinite`` — any NaN/Inf in any float leaf of the row;
+* ``magnitude`` — any float state leaf with ``|x| > max_abs`` (running
+  sums exploding long before they reach Inf);
+* ``calib``     — per-row ``alpha``/``beta`` moment-matching constants
+  outside ``(0, max_calib]`` (drifted or corrupted calibration).
+
+The functions are pure jnp reductions (jit-safe, no host sync) designed
+to be folded into an existing jitted step — ``PoolSetup.segment_fn``
+computes them on the post-segment caches inside the same dispatch, so
+the sentinel costs one fused reduction, not an extra round trip.  A free
+(evicted) slot is all zeros with ``alpha = beta = 1`` and is healthy by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_CALIB_NAMES = ("alpha", "beta")
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Sentinel thresholds.  ``max_abs`` bounds every float state leaf
+    (LLN ``s``/``z``/``c_k``, KV rows, diag tails); ``max_calib`` bounds
+    the per-row moment-matching constants.  Both are generous by design:
+    the sentinel exists to catch corruption (NaN, Inf, runaway sums), not
+    to second-guess healthy numerics."""
+    max_abs: float = 1e6
+    max_calib: float = 1e3
+    check_nonfinite: bool = True
+    check_magnitude: bool = True
+    check_calib: bool = True
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def _row_reduce(leaf: jnp.ndarray, row_axis: int, bad) -> jnp.ndarray:
+    """OR-reduce ``bad(leaf)`` over every axis except ``row_axis`` ->
+    (B,) bool."""
+    axes = tuple(a for a in range(leaf.ndim) if a != row_axis)
+    return jnp.any(bad, axis=axes)
+
+
+def row_health(tree, *, row_axis: int = 0,
+               config: HealthConfig = HealthConfig()) -> dict:
+    """Per-row health flags for an attention-state pytree.
+
+    ``tree``: any pytree of arrays whose float leaves carry the row
+    (slot) axis at position ``row_axis`` — an ``AttentionState`` (row
+    axis 0) or the pool's stacked-layer cache tree (layer axis first, row
+    axis 1).  Integer leaves and leaves too small to carry the row axis
+    are skipped.
+
+    Returns ``{"unhealthy", "nonfinite", "magnitude", "calib"}``, each a
+    (B,) bool array (``unhealthy`` is the OR of the enabled checks).
+    Pure jnp; safe to call inside jit.
+    """
+    nonfinite = magnitude = calib = None
+
+    def acc(cur, new):
+        return new if cur is None else cur | new
+
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        if not hasattr(leaf, "dtype") or not hasattr(leaf, "ndim"):
+            continue
+        if leaf.ndim <= row_axis or not jnp.issubdtype(leaf.dtype,
+                                                       jnp.floating):
+            continue
+        name = _leaf_name(path)
+        if name in _CALIB_NAMES:
+            if config.check_calib:
+                bad = (~jnp.isfinite(leaf) | (leaf <= 0.0)
+                       | (leaf > config.max_calib))
+                calib = acc(calib, _row_reduce(leaf, row_axis, bad))
+            continue
+        if config.check_nonfinite:
+            nonfinite = acc(nonfinite,
+                            _row_reduce(leaf, row_axis, ~jnp.isfinite(leaf)))
+        if config.check_magnitude:
+            bad = jnp.abs(leaf) > jnp.asarray(config.max_abs, leaf.dtype)
+            magnitude = acc(magnitude, _row_reduce(leaf, row_axis, bad))
+
+    if nonfinite is None and magnitude is None and calib is None:
+        raise ValueError("state tree has no float leaves with a row axis "
+                         f"at position {row_axis}")
+    some = next(f for f in (nonfinite, magnitude, calib) if f is not None)
+    zero = jnp.zeros_like(some)
+    flags = {"nonfinite": nonfinite if nonfinite is not None else zero,
+             "magnitude": magnitude if magnitude is not None else zero,
+             "calib": calib if calib is not None else zero}
+    flags["unhealthy"] = (flags["nonfinite"] | flags["magnitude"]
+                          | flags["calib"])
+    return flags
+
+
+def unhealthy_rows(tree, *, row_axis: int = 0,
+                   config: HealthConfig = HealthConfig()) -> jnp.ndarray:
+    """(B,) bool: rows whose state fails any enabled health check."""
+    return row_health(tree, row_axis=row_axis, config=config)["unhealthy"]
+
+
+__all__ = ["HealthConfig", "row_health", "unhealthy_rows"]

@@ -1,0 +1,139 @@
+"""Fault-injection harness for the continuous-batching serving engine.
+
+A :class:`FaultPlan` is a deterministic, seedable script of failures the
+``ContinuousBatcher`` applies at segment boundaries — the only way to
+*prove* the recovery paths (sentinel → quarantine → re-prefill, deadline
+timeouts, snapshot/restore) actually work end to end, and to reproduce a
+production failure offline from its plan.
+
+Event kinds (``FaultEvent.kind``):
+
+* ``"nan"``   — poison every float cache leaf of pool row ``row`` with
+  NaN before segment ``segment`` runs (``row = -1`` picks a seeded
+  pseudo-random row).  Exercises the state-health sentinel and the
+  quarantine → re-prefill recovery path.
+* ``"drop"``  — drop request ``rid`` (client-cancel): evicted from its
+  slot or removed from the queue; terminates with status ``failed``.
+* ``"delay"`` — sleep ``seconds`` inside the segment's timed window:
+  trips per-request deadlines and the straggler watchdog.
+* ``"kill"``  — simulate a process crash at the boundary by raising
+  :class:`SimulatedCrash`; the driver restores from the last pool
+  snapshot (``serve.py --restore``) and every in-flight request must
+  resume to the same final tokens.
+
+Plans serialize to/from JSON (``--fault-plan`` accepts a path or an
+inline JSON literal)::
+
+    {"seed": 0, "events": [{"kind": "nan", "segment": 2, "row": 1},
+                           {"kind": "kill", "segment": 4}]}
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_KINDS = ("nan", "drop", "delay", "kill")
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by a ``kill`` fault event: the serving loop 'crashed' at a
+    segment boundary.  ``segment`` is the boundary index; the driver
+    resumes from the last snapshot (``ContinuousBatcher.run(resume=...)``)."""
+
+    def __init__(self, segment: int):
+        super().__init__(f"simulated crash at segment boundary {segment}")
+        self.segment = segment
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted failure, fired at the boundary BEFORE segment
+    ``segment`` runs (0-based: ``segment=0`` fires before any decode)."""
+    kind: str
+    segment: int
+    row: int = -1          # nan: pool row (-1 = seeded random active row)
+    rid: int = -1          # drop: request id
+    seconds: float = 0.0   # delay: sleep duration
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.segment < 0:
+            raise ValueError("fault segment must be >= 0")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A deterministic schedule of :class:`FaultEvent`\\ s.  ``seed``
+    drives any randomized choices (e.g. ``row = -1`` NaN targets) so a
+    plan replays identically run over run."""
+    events: list = dataclasses.field(default_factory=list)
+    seed: int = 0
+
+    def __post_init__(self):
+        self.events = [e if isinstance(e, FaultEvent) else FaultEvent(**e)
+                       for e in self.events]
+        self._rng = np.random.RandomState(self.seed)
+
+    def at(self, segment: int) -> list:
+        """Events scheduled for the given segment boundary, in order."""
+        return [e for e in self.events if e.segment == segment]
+
+    def pick_row(self, event: FaultEvent, slots: int,
+                 active: Optional[np.ndarray] = None) -> int:
+        """Resolve an event's target row; ``row = -1`` draws a seeded
+        pseudo-random row (preferring currently active ones)."""
+        if event.row >= 0:
+            return event.row
+        if active is not None and active.any():
+            cand = np.nonzero(active)[0]
+        else:
+            cand = np.arange(slots)
+        return int(cand[self._rng.randint(len(cand))])
+
+    def to_json(self) -> str:
+        return json.dumps({"seed": self.seed,
+                           "events": [dataclasses.asdict(e)
+                                      for e in self.events]})
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        obj = json.loads(text)
+        return cls(events=obj.get("events", []), seed=obj.get("seed", 0))
+
+    @classmethod
+    def load(cls, spec: str) -> "FaultPlan":
+        """Parse a CLI ``--fault-plan`` argument: a JSON file path or an
+        inline JSON literal."""
+        if os.path.exists(spec):
+            with open(spec) as f:
+                return cls.from_json(f.read())
+        return cls.from_json(spec)
+
+
+def poison_rows(caches, rows) -> object:
+    """Set every float leaf of the given pool rows to NaN.
+
+    ``caches`` is the pooled stacked-layer cache tree (row axis at
+    position 1, after the layer axis); ``rows`` is a sequence of slot
+    indices.  This is the worst legal corruption a row can suffer — the
+    sentinel must detect it and the quarantine machinery must contain it.
+    """
+    idx = jnp.asarray(list(rows), jnp.int32)
+
+    def leaf(a):
+        if not jnp.issubdtype(a.dtype, jnp.floating) or a.ndim < 2:
+            return a
+        return a.at[:, idx].set(jnp.nan)
+    return jax.tree_util.tree_map(leaf, caches)
+
+
+__all__ = ["FaultEvent", "FaultPlan", "SimulatedCrash", "poison_rows",
+           "FAULT_KINDS"]

@@ -23,6 +23,20 @@ freed slots mid-stream (per-row positions, masked rows), e.g.
       --continuous --requests 16 --batch 4 --gen-lens 4,4,4,24
 
 and reports goodput (completed tok/s) instead of lockstep tok/s.
+
+The continuous pool carries the robustness layer (docs/serving.md
+"Failure handling"): ``--deadline`` puts a wall-clock budget on every
+request, ``--queue-cap`` bounds admission, ``--no-health`` disables the
+state-health sentinel, ``--fault-plan`` injects a scripted
+``launch/faults.py:FaultPlan`` (JSON path or inline literal), and
+``--snapshot-dir``/``--snapshot-every``/``--restore`` snapshot the pool
+at segment boundaries and resume it after a crash:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+      --continuous --requests 8 --snapshot-dir /tmp/pool --snapshot-every 2 \
+      --fault-plan '{"events": [{"kind": "kill", "segment": 4}]}'
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+      --continuous --requests 0 --snapshot-dir /tmp/pool --restore
 """
 from __future__ import annotations
 
@@ -81,6 +95,22 @@ def main(argv=None):
                          "(skewed by default)")
     ap.add_argument("--prompt-lens", default=None,
                     help="[--continuous] comma list of prompt lengths")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="[--continuous] per-request wall-clock budget (s)")
+    ap.add_argument("--queue-cap", type=int, default=1024,
+                    help="[--continuous] admission-queue bound")
+    ap.add_argument("--no-health", dest="health", action="store_false",
+                    default=True,
+                    help="[--continuous] disable the state-health sentinel")
+    ap.add_argument("--fault-plan", default=None,
+                    help="[--continuous] FaultPlan JSON (path or inline)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="[--continuous] pool snapshot directory")
+    ap.add_argument("--snapshot-every", type=int, default=4,
+                    help="[--continuous] segments between snapshots")
+    ap.add_argument("--restore", action="store_true",
+                    help="[--continuous] resume from the latest snapshot "
+                         "in --snapshot-dir before serving new requests")
     args = ap.parse_args(argv)
 
     overrides = {}
@@ -234,37 +264,69 @@ def _run_speculative(cfg, model, mesh, args):
 
 def _run_continuous(cfg, model, mesh, args):
     """Continuous-batching pool over mixed-length synthetic traffic."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.health import HealthConfig
     from repro.launch.batcher import ContinuousBatcher, synthetic_traffic
+    from repro.launch.faults import FaultPlan, SimulatedCrash
 
     gen_lens = ([int(x) for x in args.gen_lens.split(",")]
                 if args.gen_lens else [args.gen // 4 or 1] * 3 + [args.gen])
     prompt_lens = ([int(x) for x in args.prompt_lens.split(",")]
                    if args.prompt_lens else [args.prompt_len])
     max_len = max(prompt_lens) + max(gen_lens)
+    plan = FaultPlan.load(args.fault_plan) if args.fault_plan else None
+    mgr = (CheckpointManager(args.snapshot_dir, keep_n=3, interval=1)
+           if args.snapshot_dir else None)
 
     with mesh:
         setup = make_pool_setup(cfg, mesh, slots=args.batch,
                                 max_len=max_len, segment=args.segment,
-                                temperature=args.temperature)
+                                temperature=args.temperature,
+                                health=HealthConfig() if args.health
+                                else None)
         params = jax.device_put(model.init(jax.random.PRNGKey(args.seed)))
-        eng = ContinuousBatcher(setup, params)
+        eng = ContinuousBatcher(setup, params, queue_cap=args.queue_cap,
+                                snapshot_mgr=mgr,
+                                snapshot_every=(args.snapshot_every
+                                                if mgr else 0))
         reqs = synthetic_traffic(args.requests, cfg.vocab, prompt_lens,
                                  gen_lens, seed=args.seed)
+        if args.deadline is not None:
+            for r in reqs:
+                r.deadline_s = args.deadline
         eng.warmup(prompt_lens)
-        stats = eng.run(reqs, key=jax.random.PRNGKey(args.seed + 1))
+        try:
+            stats = eng.run(reqs, key=jax.random.PRNGKey(args.seed + 1),
+                            fault_plan=plan, resume=args.restore)
+        except SimulatedCrash as e:
+            print(f"simulated crash at segment boundary {e.segment}; "
+                  f"resume with --restore --snapshot-dir "
+                  f"{args.snapshot_dir}")
+            return None
 
     # Same definition as benchmarks/bench_batching.py: useful tokens over
     # dispatched row-steps (+1 prefill-emitted token per request).
     util = stats.completed_tokens / max(
-        stats.decode_steps * args.batch + args.requests, 1)
+        stats.decode_steps * args.batch + max(stats.admitted, 1), 1)
     print(f"continuous: {args.requests} requests over {args.batch} slots, "
           f"segment={args.segment}, gen_lens={gen_lens}")
     print(f"  {stats.completed_tokens} tokens in {stats.wall_s:.3f}s "
           f"({stats.completed_tokens / max(stats.wall_s, 1e-9):.1f} tok/s "
           f"goodput), {stats.segments} segments, "
           f"slot utilization {util:.2f}")
-    first = stats.outputs[0]
-    print("request 0 tokens:", first[:16].tolist())
+    by = {}
+    for v in stats.statuses.values():
+        by[v] = by.get(v, 0) + 1
+    print(f"  statuses: {by}; recoveries={stats.recoveries}, "
+          f"snapshots={stats.snapshots}, "
+          f"stragglers={len(stats.stragglers)}, "
+          f"segment EWMA {stats.segment_ewma_s * 1e3:.1f}ms"
+          + (f" (restored from step {stats.restored_step})"
+             if stats.restored_step is not None else ""))
+    if stats.outputs:
+        rid0 = min(stats.outputs)
+        print(f"request {rid0} tokens:",
+              stats.outputs[rid0][:16].tolist())
     return stats
 
 

@@ -18,6 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core import speculative
+from repro.core.health import HealthConfig, unhealthy_rows
 from repro.distributed import sharding as shd
 from repro.models import (Model, build_model, draft_config, draft_params)
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
@@ -510,14 +511,28 @@ class PoolSetup:
       a slot-local cache into pool rows ``slot_idx`` ((k,) int32) via one
       fused per-leaf scatter (donated pooled carry, no host copies).
     * ``segment_fn(params, caches, tok, pos, remaining, active, key) ->
-      (caches, tok, pos, remaining, active, tokens (S, B), emitted (S, B))``
-      — ``segment`` decode steps folded into ONE jitted ``lax.scan`` with
-      donated cache carry.  Each step decodes every slot, samples only
-      active rows, advances per-row positions, and retires rows whose
-      ``remaining`` hits zero (in-scan evict: the row's mask drops, so by
-      the masked-row contract nothing it does from then on can mutate
-      state).  Steady-state throughput therefore matches the static
+      (caches, tok, pos, remaining, active, tokens (S, B), emitted (S, B),
+      unhealthy (B,))`` — ``segment`` decode steps folded into ONE jitted
+      ``lax.scan`` with donated cache carry.  Each step decodes every
+      slot, samples only active rows, advances per-row positions, and
+      retires rows whose ``remaining`` hits zero (in-scan evict: the
+      row's mask drops, so by the masked-row contract nothing it does
+      from then on can mutate state).  ``unhealthy`` is the state-health
+      sentinel (``core/health.py``) evaluated on the post-segment caches
+      INSIDE the same dispatch — one fused reduction, no extra round
+      trip; all-False when the pool was built with ``health=None``.
+      Steady-state throughput therefore matches the static
       ``make_generate`` loop — admits/evicts never leave the scan.
+    * ``replay_fn(params, caches, chunk (B, R), pos (B,), commit (B,))``
+      — advance per-row state over already-committed tokens WITHOUT
+      emitting: one partial-commit chunked decode (``commit_len``
+      contract; rows with ``commit = 0`` are bitwise untouched).  The
+      quarantine → re-prefill recovery path uses it to rebuild a row's
+      state from its committed tokens (re-prefill the prompt, then
+      replay the emitted tokens in ``R``-sized pieces) — exact under
+      every calibration mode, because the replayed trajectory IS the
+      original decode trajectory.  Fixed ``R = replay_chunk`` keeps this
+      one compile total.
     * ``evict_fn(caches, row_mask)`` — the engine's ``evict`` lifted over
       the stacked layer tree: zeroes the masked rows ((slots,) bool, a
       fixed shape so eviction costs ONE compile total) of every cache
@@ -538,17 +553,31 @@ class PoolSetup:
     admit_fn: Any
     segment_fn: Any
     evict_fn: Any = None
+    replay_fn: Any = None
+    health: Any = None
+    replay_chunk: int = 8
+
+
+_HEALTH_DEFAULT = HealthConfig()
 
 
 def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
                     slots: int, max_len: int, segment: int = 8,
                     temperature: float = 0.0,
-                    multi_pod: bool = False) -> PoolSetup:
+                    multi_pod: bool = False,
+                    health: Optional[HealthConfig] = _HEALTH_DEFAULT,
+                    replay_chunk: int = 8) -> PoolSetup:
     """Build the jitted pieces of the continuous-batching pool.
 
     Supports the dense/MoE decoder families with standard attention
     (softmax / lln / lln_diag KV-state caches); MLA caches are not wired
     for per-row decode yet.
+
+    ``health``: a ``core/health.py:HealthConfig`` (the default) folds the
+    per-row state-health sentinel into ``segment_fn``'s jitted dispatch;
+    ``health=None`` disables it (the ``unhealthy`` output is then all
+    False).  ``replay_chunk``: token-chunk width of ``replay_fn`` (the
+    quarantine-recovery replay path) — fixed so replay costs one compile.
 
     The pool's model calibrates moment matching PER ROW
     (``lln_per_row_calib=True``: each request's alpha/beta come from its
@@ -644,12 +673,32 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
                 body, (caches, tok, pos, remaining, active),
                 jnp.arange(segment, dtype=jnp.int32))
         caches, tok, pos, remaining, active = carry
-        return caches, tok, pos, remaining, active, toks, emitted
+        # State-health sentinel on the post-segment caches, fused into the
+        # same dispatch (core/health.py): one per-leaf reduction, no extra
+        # round trip.  Row axis is 1 (after the stacked-layer axis).
+        if health is not None:
+            unhealthy = unhealthy_rows(caches, row_axis=1, config=health)
+        else:
+            unhealthy = jnp.zeros((slots,), jnp.bool_)
+        return caches, tok, pos, remaining, active, toks, emitted, unhealthy
 
     segment_fn = jax.jit(_segment, donate_argnums=(1,))
+
+    def _replay(params, caches, chunk, pos, commit):
+        """Advance per-row state over already-committed tokens without
+        emitting: one chunked decode under the partial-commit contract
+        (rows with ``commit = 0`` are bitwise untouched)."""
+        with shd.logical_rules(mesh, rules):
+            _, caches = model.decode(params, caches, chunk, pos,
+                                     commit_len=commit)
+        return caches
+
+    replay_fn = jax.jit(_replay, donate_argnums=(1,))
 
     return PoolSetup(cfg=cfg, model=model, mesh=mesh, rules=rules,
                      slots=slots, max_len=max_len, segment=segment,
                      temperature=temperature, cache_init=cache_init,
                      prefill_fn=prefill_fn, admit_fn=admit_fn,
-                     segment_fn=segment_fn, evict_fn=evict_fn)
+                     segment_fn=segment_fn, evict_fn=evict_fn,
+                     replay_fn=replay_fn, health=health,
+                     replay_chunk=replay_chunk)

@@ -1,0 +1,22 @@
+"""Smoke test: the robustness benchmark runs end-to-end (interpret mode)."""
+import json
+
+from benchmarks.bench_robustness import run
+
+
+def test_bench_robustness_smoke(tmp_path):
+    out = tmp_path / "BENCH_robustness.json"
+    report = run(str(out), smoke=True, repeats=1, verbose=False)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk["modes"].keys() == {"sentinel_off", "sentinel_on"}
+    assert len(on_disk["results"]) == len(report["results"]) == 1
+    for row in on_disk["results"]:
+        assert row["tok_s"]["sentinel_off"] > 0
+        assert row["tok_s"]["sentinel_on"] > 0
+        assert row["gate_pct"] == 2.0
+        # Smoke cells are too noisy to hard-gate, but the measurement
+        # itself must be well-formed.
+        assert isinstance(row["overhead_pct"], float)
+        assert row["traffic"]["useful_tokens"] == sum(
+            [3, 3, 9, 3][:row["traffic"]["requests"]])

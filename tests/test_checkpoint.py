@@ -1,5 +1,5 @@
 """Checkpointing: atomic roundtrip, CRC corruption detection, keep-N GC,
-async writer, resume semantics, elastic resharding."""
+async writer, resume semantics, elastic resharding, truncation manifests."""
 import glob
 import json
 import os
@@ -10,7 +10,9 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import (AsyncCheckpointer,
-                                           committed_steps, restore, save)
+                                           committed_steps, is_valid,
+                                           read_extra, restore, save,
+                                           valid_steps)
 from repro.checkpoint.manager import CheckpointManager
 
 
@@ -85,3 +87,57 @@ def test_missing_leaf_raises(tmp_path):
     with pytest.raises(KeyError):
         restore(str(tmp_path), 1, {"w": jnp.zeros((4,)),
                                    "extra": jnp.zeros((2,))})
+
+
+def test_truncated_checkpoint_skipped_and_gced(tmp_path):
+    """Regression: a committed-but-truncated step (crash between the shard
+    write and the sentinel landing on old kernels, or disk-full
+    truncation) must never become ``latest_step`` — the size manifest in
+    ``_COMMITTED`` catches it, and the corrupt dir is GC'd so it cannot
+    shadow the older restorable step."""
+    mgr = CheckpointManager(str(tmp_path), interval=1)
+    save(str(tmp_path), 1, _tree(1))
+    save(str(tmp_path), 2, _tree(2))
+    shard = tmp_path / "step_00000002" / "shard_0.npz"
+    data = shard.read_bytes()
+    shard.write_bytes(data[: len(data) // 2])
+    assert committed_steps(str(tmp_path)) == [1, 2]  # sentinel-only view
+    assert valid_steps(str(tmp_path)) == [1]         # manifest view
+    assert mgr.latest_step() == 1
+    assert not (tmp_path / "step_00000002").exists()  # corrupt dir GC'd
+    state, start = mgr.restore_or_init(lambda: _tree(0))
+    assert start == 1
+    np.testing.assert_allclose(np.asarray(state["params"]["w"]),
+                               np.asarray(_tree(1)["params"]["w"]))
+
+
+def test_legacy_ok_sentinel_still_restorable(tmp_path):
+    """Pre-manifest checkpoints (sentinel == "ok") stay restorable via the
+    existence-only fallback."""
+    save(str(tmp_path), 4, _tree(4))
+    (tmp_path / "step_00000004" / "_COMMITTED").write_text("ok")
+    assert is_valid(str(tmp_path), 4)
+    assert CheckpointManager(str(tmp_path), interval=1).latest_step() == 4
+
+
+def test_extra_sidecar_roundtrip_and_manifest(tmp_path):
+    """``extra`` sidecar files land in the same atomic commit, read back
+    via ``read_extra``, and are covered by the truncation manifest."""
+    save(str(tmp_path), 1, _tree(),
+         extra={"meta.json": json.dumps({"queue": [3, 4]})})
+    back = json.loads(read_extra(str(tmp_path), 1, "meta.json"))
+    assert back == {"queue": [3, 4]}
+    (tmp_path / "step_00000001" / "meta.json").write_text("x")
+    assert not is_valid(str(tmp_path), 1)
+
+
+def test_non_native_dtype_roundtrip(tmp_path):
+    """bfloat16 leaves (npz stores them as raw void bytes) round-trip —
+    the serving-pool snapshot path saves bf16 caches."""
+    t = {"x": jnp.arange(8, dtype=jnp.float32).astype(jnp.bfloat16)}
+    save(str(tmp_path), 1, t)
+    out = restore(str(tmp_path), 1,
+                  {"x": jnp.zeros((8,), jnp.bfloat16)})
+    assert out["x"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["x"], np.float32),
+                               np.arange(8, dtype=np.float32))

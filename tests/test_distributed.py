@@ -119,6 +119,70 @@ class TestElastic:
         """)
         assert "RESHARD_OK" in out
 
+    def test_reshard_serving_pool_decode_parity_subprocess(self):
+        """Elastic-serving path: a live continuous-batching pool
+        (``AttentionState`` caches with row axis 1) built on a (2,4) mesh
+        survives losing devices — ``make_degraded_mesh`` on the surviving
+        prefix + ``reshard_state`` of params AND pool caches onto the
+        smaller mesh, then a full decode segment emits token-for-token
+        the same stream as the healthy mesh would have."""
+        out = _run_subprocess("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs.base import ArchConfig
+            from repro.distributed.elastic import (make_degraded_mesh,
+                                                   reshard_state)
+            from repro.launch.mesh import compat_mesh
+            from repro.launch.steps import make_pool_setup
+            from repro.models import build_model
+
+            cfg = ArchConfig(
+                name="elastic-pool", family="dense", n_layers=2,
+                d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                head_dim=16, attn_impl="lln_diag", diag_block=8,
+                lln_chunk=8, softmax_chunk=16, lln_fixed_ab=2.1,
+                compute_dtype="float32", param_dtype="float32",
+                remat="none", tie_embeddings=True)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                        cfg.vocab, jnp.int32)
+            tok = jnp.zeros((2,), jnp.int32).at[0].set(7)
+            pos = jnp.zeros((2,), jnp.int32).at[0].set(8)
+            remaining = jnp.zeros((2,), jnp.int32).at[0].set(4)
+            active = jnp.asarray([True, False])
+            key = jax.random.PRNGKey(2)
+
+            mesh1 = compat_mesh((2, 4), ("data", "model"))
+            with mesh1:
+                setup1 = make_pool_setup(cfg, mesh1, slots=2, max_len=32,
+                                         segment=4)
+                def build(setup):
+                    _, sc = setup.prefill_fn(8)(params, prompt)
+                    return setup.admit_fn(setup.cache_init(), sc,
+                                          jnp.asarray([0], jnp.int32))
+                # Reference segment on the healthy mesh (donates caches).
+                out1 = setup1.segment_fn(params, build(setup1), tok, pos,
+                                         remaining, active, key)
+                toks_ref, em_ref = np.asarray(out1[5]), np.asarray(out1[6])
+                caches = build(setup1)          # fresh copy to carry over
+
+            # 3 of 8 devices die -> largest pow-2 prefix of 5 is 4.
+            mesh2 = make_degraded_mesh(jax.devices()[:5], prefer_model=2)
+            assert mesh2.devices.size == 4, mesh2
+            params2 = reshard_state(params, mesh2)
+            caches2 = reshard_state(caches, mesh2)
+            with mesh2:
+                setup2 = make_pool_setup(cfg, mesh2, slots=2, max_len=32,
+                                         segment=4)
+                out2 = setup2.segment_fn(params2, caches2, tok, pos,
+                                         remaining, active, key)
+            np.testing.assert_array_equal(em_ref, np.asarray(out2[6]))
+            np.testing.assert_array_equal(toks_ref[:, 0],
+                                          np.asarray(out2[5])[:, 0])
+            print("ELASTIC_POOL_OK", mesh2.shape)
+        """)
+        assert "ELASTIC_POOL_OK" in out
+
     def test_degraded_mesh_subprocess(self):
         out = _run_subprocess("""
             import jax
