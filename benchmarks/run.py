@@ -19,6 +19,10 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
   bench_robustness     health-sentinel overhead: serving tok/s with the
                        per-row state-health reduction on vs off, gated at
                        <=2% (writes BENCH_robustness.json)
+  bench_longctx        long-horizon soak: 500k-token decode with renorm +
+                       beta(n) on, gated on z pinned / fp32-safe state /
+                       renorm invariance / flat concentration telemetry
+                       (writes BENCH_longctx.json)
 
 Roofline terms (EXPERIMENTS.md §Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
@@ -31,8 +35,8 @@ import time
 
 def main() -> None:
     from . import (bench_batching, bench_concentration, bench_convergence,
-                   bench_dispatch, bench_distribution, bench_robustness,
-                   bench_scaling, bench_serve, bench_spec)
+                   bench_dispatch, bench_distribution, bench_longctx,
+                   bench_robustness, bench_scaling, bench_serve, bench_spec)
 
     class _ServeAdapter:
         run = staticmethod(bench_serve.run_rows)
@@ -49,6 +53,9 @@ def main() -> None:
     class _RobustnessAdapter:
         run = staticmethod(bench_robustness.run_rows)
 
+    class _LongctxAdapter:
+        run = staticmethod(bench_longctx.run_rows)
+
     modules = [("distribution", bench_distribution),
                ("concentration", bench_concentration),
                ("convergence", bench_convergence),
@@ -57,7 +64,8 @@ def main() -> None:
                ("batching", _BatchingAdapter),
                ("dispatch", _DispatchAdapter),
                ("spec", _SpecAdapter),
-               ("robustness", _RobustnessAdapter)]
+               ("robustness", _RobustnessAdapter),
+               ("longctx", _LongctxAdapter)]
     all_rows = []
     for name, mod in modules:
         print(f"== {name} ==", file=sys.stderr, flush=True)

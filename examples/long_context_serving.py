@@ -22,10 +22,10 @@ def cache_bytes(tree):
     return sum(np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(tree))
 
 
-def main():
+def main(prompts=(256, 1024, 4096), steps: int = 8):
     rows = []
     for impl in ("softmax", "lln_diag"):
-        for prompt in (256, 1024, 4096):
+        for prompt in prompts:
             cfg = get_config("chatglm3-6b", smoke=True, attn_impl=impl,
                              lln_fixed_ab=2.1)
             model = build_model(cfg)
@@ -43,19 +43,22 @@ def main():
             lg, caches = decode(params, caches, tok,
                                 jnp.asarray(prompt, jnp.int32))
             t0 = time.time()
-            for i in range(8):
+            for i in range(steps):
                 lg, caches = decode(params, caches, tok,
                                     jnp.asarray(prompt + 1 + i, jnp.int32))
             jax.block_until_ready(lg)
-            ms = (time.time() - t0) / 8 * 1e3
+            ms = (time.time() - t0) / steps * 1e3
             rows.append((impl, prompt, nbytes / 1e6, ms))
             print(f"{impl:9s} prompt={prompt:6d}  cache={nbytes / 1e6:8.2f}MB"
                   f"  decode={ms:7.2f}ms/tok")
     sm = [r for r in rows if r[0] == "softmax"]
     ln = [r for r in rows if r[0] == "lln_diag"]
-    print(f"\ncache growth 256->4096: softmax {sm[-1][2] / sm[0][2]:.1f}x, "
+    lo, hi = prompts[0], prompts[-1]
+    print(f"\ncache growth {lo}->{hi}: softmax "
+          f"{sm[-1][2] / sm[0][2]:.1f}x, "
           f"lln_diag {ln[-1][2] / ln[0][2]:.2f}x (state is context-length-"
           f"independent — what makes the long_500k cell serveable)")
+    return rows
 
 
 if __name__ == "__main__":

@@ -43,6 +43,18 @@ class ArchConfig:
     rotary_pct: float = 1.0          # stablelm 0.25; chatglm 0.5 ("2d" RoPE)
     softmax_chunk: int = 1024
 
+    # --- long-context robustness (length-aware LLN serving) -----------------
+    lln_beta_n: float = 0.0          # beta(n) log-length temperature schedule
+                                     # coefficient: alpha/beta gain
+                                     # sqrt(1 + beta_n*ln(n/calib_len)) past
+                                     # the calibration length (0 = off)
+    lln_calib_len: int = 1024        # reference length n0 the schedule is
+                                     # anchored at (identity for n <= n0)
+    lln_renorm: float = 0.0          # drift renorm threshold on the carried
+                                     # |z| magnitude: rescale (s, z) against
+                                     # the per-row log-scale when max|z|
+                                     # exceeds it (0 = off)
+
     # --- speculative decoding ------------------------------------------------
     draft_layers: int = 0            # tied first-k-layers draft (0 = off;
                                      # n_layers = tied full model)

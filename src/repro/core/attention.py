@@ -25,7 +25,8 @@ from . import lln as lln_mod
 from .numerics import einsum_f32
 from .diag import block_diag_attn
 from .lln import LLNState, lln_bidir, lln_causal
-from .moment_matching import constants_for_dim, solve_alpha_beta
+from .moment_matching import (constants_for_dim, length_gain,
+                              solve_alpha_beta)
 
 NEG_INF = -1e30
 
@@ -56,7 +57,7 @@ def _repeat_kv(t: jnp.ndarray, h: int) -> jnp.ndarray:
 
 
 def batch_alpha_beta(q: jnp.ndarray, k: jnp.ndarray, cfg: AttnConfig,
-                     per_row: bool = False
+                     per_row: bool = False, n: int | None = None
                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Moment-matched (alpha, beta) from current-batch statistics.
 
@@ -75,8 +76,20 @@ def batch_alpha_beta(q: jnp.ndarray, k: jnp.ndarray, cfg: AttnConfig,
     even under dynamic moment matching.  ``cfg`` may be any object with
     ``fixed_ab`` / ``mm_a`` / ``mm_b`` attributes (``AttnConfig`` or
     ``kernels.registry.AttnSpec``).
+
+    ``n`` (optional, static int) is the sequence length the calibration is
+    for.  When the config carries a beta(n) schedule (``beta_n > 0``,
+    ``AttnSpec`` from a config with ``lln_beta_n`` set) the (a, b)
+    constants come from the length-aware grid (``constants_for_dim(d, n)``
+    — the legacy fit at or below the calibration length, the nearest-N
+    fit beyond it); with the schedule off (the default) ``n`` is ignored
+    and the result is bit-identical to the legacy calibration.  The
+    beta(n) *gain* itself is a use-time modifier applied by the engine
+    (prefill at the prompt length, decode per row from ``state.pos``),
+    never baked into the calibration this returns.
     """
     bsz, h, g = q.shape[0], q.shape[2], k.shape[2]
+    length_aware = getattr(cfg, "beta_n", 0.0) > 0.0 and n is not None
     if cfg.fixed_ab:
         if per_row:
             return (jnp.full((bsz, h), cfg.fixed_ab, jnp.float32),
@@ -85,7 +98,7 @@ def batch_alpha_beta(q: jnp.ndarray, k: jnp.ndarray, cfg: AttnConfig,
                 jnp.full((g,), cfg.fixed_ab, jnp.float32))
     a, b = (cfg.mm_a, cfg.mm_b)
     if a is None or b is None:
-        a, b = constants_for_dim(q.shape[-1])
+        a, b = constants_for_dim(q.shape[-1], n=n if length_aware else None)
     r = h // g
     axes = (1, 3) if per_row else (0, 1, 3)   # row-local vs batch-pooled
     sq = jnp.sqrt(jnp.mean(jnp.square(q.astype(jnp.float32)), axis=axes))
@@ -456,7 +469,8 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
                      use_kernel: bool = True,
                      row_mask: Optional[jnp.ndarray] = None,
                      backend: Optional[str] = None,
-                     commit_len: Optional[jnp.ndarray] = None
+                     commit_len: Optional[jnp.ndarray] = None,
+                     renorm: Optional[float] = None
                      ) -> tuple[jnp.ndarray, LLNDecodeState]:
     """LLN(+Diag) decode of T >= 1 tokens.  q: (B,T,H,D); k/v_new: (B,T,G,D[v]).
 
@@ -484,6 +498,9 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
     prefix folds into the LLN state, the diag tail and ``pos``
     (``commit_len=0`` ≡ ``row_mask=False``; ``commit_len=T`` ≡ a plain
     decode).  Requires per-row ``pos``.
+    ``renorm``: optional drift-renormalization threshold on the carried
+    ``z`` magnitude (``core.lln.decode_chunk``); semantics-preserving,
+    applied uniformly by every backend.
     """
     b, t, h, d = q.shape
     if backend is None:
@@ -494,7 +511,8 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
                                                    v_new, alpha, beta,
                                                    row_mask=row_mask,
                                                    backend=backend,
-                                                   commit_len=commit_len)
+                                                   commit_len=commit_len,
+                                                   renorm=renorm)
     else:
         beta_h = jnp.asarray(beta, jnp.float32)
         g = k_new.shape[2]
@@ -502,7 +520,8 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
             beta_h = jnp.repeat(beta_h, h // g, axis=-1)
         lln_out, lln_state = lln_mod.decode_chunk(
             state.lln, q, _repeat_kv(k_new, h), _repeat_kv(v_new, h),
-            alpha, beta_h, row_mask=row_mask, commit_len=commit_len)
+            alpha, beta_h, row_mask=row_mask, commit_len=commit_len,
+            renorm=renorm)
 
     # --- rolling tail update, vectorized: for each slot i the last
     # *committed* chunk token writing it is j_i = j0 + block*((c-1-j0)//block),

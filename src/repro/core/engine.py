@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from . import attention as ca
 from . import health as health_mod
+from . import moment_matching as mm
 from .attention import KVCache, LLNDecodeState, batch_alpha_beta
 from .lln import LLNState
 from repro.kernels import registry as kreg
@@ -52,7 +53,8 @@ class AttentionState:
     softmax     ``k``/``v`` (B, S, G, D[v]) KV cache, ``len`` (B,)
     lln(+diag)  ``s`` (B,H,D,Dv) fp32, ``z`` (B,H,D) fp32, ``c_k``
                 (B,1,H,1) fp32, ``tail_k``/``tail_v`` (B,BLK,G,D[v]),
-                ``pos`` (B,), ``alpha``/``beta`` (B,H) fp32
+                ``pos`` (B,), ``alpha``/``beta`` (B,H) fp32,
+                ``log_scale`` (B,H) fp32 accumulated drift-renorm shift
     MLA latent  ``ckv`` (B,S,kv_lora), ``kr`` (B,S,rd), ``len`` (B,)
     ==========  =======================================================
 
@@ -74,6 +76,7 @@ class AttentionState:
     pos: Optional[jnp.ndarray] = None
     alpha: Optional[jnp.ndarray] = None
     beta: Optional[jnp.ndarray] = None
+    log_scale: Optional[jnp.ndarray] = None
     ckv: Optional[jnp.ndarray] = None
     kr: Optional[jnp.ndarray] = None
 
@@ -189,14 +192,25 @@ class AttentionEngine:
             tail_v=jnp.zeros((batch, blk, g, dv), self.state_dtype),
             pos=jnp.zeros((batch,), jnp.int32),
             alpha=jnp.ones((batch, h), jnp.float32),
-            beta=jnp.ones((batch, h), jnp.float32))
+            beta=jnp.ones((batch, h), jnp.float32),
+            log_scale=jnp.zeros((batch, h), jnp.float32))
 
-    def calibrate(self, q, k):
+    def calibrate(self, q, k, n: Optional[int] = None):
         """Moment-matched (alpha, beta) per ``spec.calibration`` —
         ``batch`` pools statistics (training semantics), ``per_row``
-        measures each row alone ((B, H)/(B, G); admission semantics)."""
+        measures each row alone ((B, H)/(B, G); admission semantics).
+        ``n`` (static) selects length-aware (a, b) constants when the
+        beta(n) schedule is on; ignored otherwise."""
         return batch_alpha_beta(q, k, self.spec,
-                                per_row=self.spec.calibration == "per_row")
+                                per_row=self.spec.calibration == "per_row",
+                                n=n)
+
+    def _length_gain(self, n):
+        """beta(n) schedule gain for a depth ``n`` (static int or traced
+        per-row (B,) positions); None when the schedule is off."""
+        if self.spec.beta_n <= 0.0 or self.spec.impl == "softmax":
+            return None
+        return mm.length_gain(n, self.spec.beta_n, self.spec.calib_len)
 
     def attention(self, q, k, v, *, mask=None, alpha=None, beta=None,
                   prefix_len: int = 0):
@@ -216,7 +230,11 @@ class AttentionEngine:
             # Calibrate HERE so spec.calibration="per_row" applies to the
             # full-sequence forward too (multi_head_attention's internal
             # batch_alpha_beta only knows the batch-pooled mode).
-            alpha, beta = self.calibrate(q, k)
+            alpha, beta = self.calibrate(q, k, n=q.shape[1])
+            gain = self._length_gain(q.shape[1])
+            if gain is not None:
+                alpha = jnp.asarray(alpha, jnp.float32) * gain
+                beta = jnp.asarray(beta, jnp.float32) * gain
         acfg = ca.AttnConfig(
             impl=spec.impl, causal=spec.causal, diag_block=spec.diag_block,
             lln_chunk=spec.lln_chunk, softmax_chunk=spec.softmax_chunk,
@@ -254,8 +272,18 @@ class AttentionEngine:
                 v=jnp.pad(v.astype(self.state_dtype), pad),
                 len=jnp.full((b,), n, jnp.int32))
         if alpha is None or beta is None:
-            alpha, beta = self.calibrate(q, k)
-        lln_out, s, z, c_k = kreg.prefill(spec, q, k, v, alpha, beta)
+            alpha, beta = self.calibrate(q, k, n=n)
+        # beta(n) schedule: the prefill forward runs at the prompt-length
+        # temperature, but the state stores the BASE calibration — decode
+        # re-derives each row's effective temperature from its own pos, so
+        # the gain is never baked in twice.
+        gain = self._length_gain(n)
+        use_alpha, use_beta = alpha, beta
+        if gain is not None:
+            use_alpha = jnp.asarray(alpha, jnp.float32) * gain
+            use_beta = jnp.asarray(beta, jnp.float32) * gain
+        lln_out, s, z, c_k = kreg.prefill(spec, q, k, v, use_alpha,
+                                          use_beta)
         if spec.impl == "lln_diag":
             diag_out = kreg.diag_fwd(spec, q, k, v)
             out = (0.5 * (lln_out.astype(jnp.float32)
@@ -273,7 +301,8 @@ class AttentionEngine:
             pos=jnp.full((b,), n, jnp.int32),
             alpha=jnp.broadcast_to(jnp.asarray(alpha, jnp.float32),
                                    (b, h)).astype(jnp.float32),
-            beta=jnp.broadcast_to(beta_h, (b, h)).astype(jnp.float32))
+            beta=jnp.broadcast_to(beta_h, (b, h)).astype(jnp.float32),
+            log_scale=jnp.zeros((b, h), jnp.float32))
         return out, state
 
     def decode(self, state: AttentionState, q, k, v, *,
@@ -297,14 +326,27 @@ class AttentionEngine:
                 commit_len=commit_len)
             return out, state.replace(k=kv2.k, v=kv2.v, len=kv2.length)
         st = LLNDecodeState(
-            lln=LLNState(s=state.s, z=state.z, c_k=state.c_k),
+            lln=LLNState(s=state.s, z=state.z, c_k=state.c_k,
+                         log_scale=state.log_scale),
             tail_k=state.tail_k, tail_v=state.tail_v, pos=state.pos)
-        out, st2 = ca.decode_lln_chunk(st, q, k, v, state.alpha, state.beta,
+        # beta(n) schedule: each row's effective calibration keys off its
+        # OWN depth (state.pos) — a 400k-context row and a 2k row in the
+        # same pool decode at different temperatures.  The stored
+        # alpha/beta stay base; the gain is recomputed every chunk.
+        alpha_d, beta_d = state.alpha, state.beta
+        gain = self._length_gain(state.pos)
+        if gain is not None:
+            gain = gain[..., None] if gain.ndim else gain    # (B,1) / ()
+            alpha_d = state.alpha * gain
+            beta_d = state.beta * gain
+        out, st2 = ca.decode_lln_chunk(st, q, k, v, alpha_d, beta_d,
                                        impl=spec.impl, row_mask=row_mask,
                                        backend=spec.backend,
-                                       commit_len=commit_len)
+                                       commit_len=commit_len,
+                                       renorm=spec.renorm or None)
         return out, state.replace(
             s=st2.lln.s, z=st2.lln.z, c_k=st2.lln.c_k,
+            log_scale=st2.lln.log_scale,
             tail_k=st2.tail_k, tail_v=st2.tail_v, pos=st2.pos)
 
     def verify(self, state: AttentionState, q, k, v, *, commit_len,

@@ -41,12 +41,22 @@ class HealthConfig:
     (LLN ``s``/``z``/``c_k``, KV rows, diag tails); ``max_calib`` bounds
     the per-row moment-matching constants.  Both are generous by design:
     the sentinel exists to catch corruption (NaN, Inf, runaway sums), not
-    to second-guess healthy numerics."""
+    to second-guess healthy numerics.
+
+    Concentration-drift thresholds (``check_drift``): the streaming
+    telemetry (``core/metrics.py:streaming_concentration_tree``) runs in
+    the same fused segment; a row whose ``|conc_drift|`` (log key mass
+    per committed token) exceeds ``max_conc_drift`` is quarantined through
+    the same re-prefill/replay recovery path as a corrupted row — drift
+    is corruption in slow motion.  Off by default: enable for
+    long-horizon serving (``launch/serve.py --drift``)."""
     max_abs: float = 1e6
     max_calib: float = 1e3
     check_nonfinite: bool = True
     check_magnitude: bool = True
     check_calib: bool = True
+    check_drift: bool = False
+    max_conc_drift: float = 20.0
 
 
 def _leaf_name(path) -> str:

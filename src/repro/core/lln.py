@@ -244,10 +244,15 @@ class LLNState:
     s:  (B, H, D, Dv)  accumulated Phi(k)^T v  (fp32)
     z:  (B, H, D)      accumulated Phi(k)      (fp32)
     c_k: (B, 1, H, 1)  reference stabilization constant the state was built with
+    log_scale: (B, H)  accumulated drift-renorm shift — how far c_k has been
+        raised ABOVE the pure running max by :func:`decode_chunk`'s renorm
+        (bookkeeping for telemetry; None on paths that don't carry it).
+        The true key-feature mass is ``z * exp(log_scale)``.
     """
     s: jnp.ndarray
     z: jnp.ndarray
     c_k: jnp.ndarray
+    log_scale: Optional[jnp.ndarray] = None
 
     @staticmethod
     def init(batch: int, heads: int, d: int, dv: int) -> "LLNState":
@@ -255,6 +260,7 @@ class LLNState:
             s=jnp.zeros((batch, heads, d, dv), jnp.float32),
             z=jnp.zeros((batch, heads, d), jnp.float32),
             c_k=jnp.zeros((batch, 1, heads, 1), jnp.float32),
+            log_scale=jnp.zeros((batch, heads), jnp.float32),
         )
 
 
@@ -304,7 +310,7 @@ def decode_step(
     num = jnp.einsum("bhd,bhdv->bhv", fq, s)
     den = jnp.einsum("bhd,bhd->bh", fq, z)
     out = (num / (den[..., None] + EPS)).astype(v.dtype)[:, None]  # (B,1,H,Dv)
-    return out, LLNState(s=s, z=z, c_k=c_new)
+    return out, LLNState(s=s, z=z, c_k=c_new, log_scale=state.log_scale)
 
 
 def commit_lengths(commit_len: jnp.ndarray,
@@ -328,6 +334,7 @@ def decode_chunk(
     beta: jnp.ndarray,
     row_mask: Optional[jnp.ndarray] = None,
     commit_len: Optional[jnp.ndarray] = None,
+    renorm: Optional[float] = None,
 ) -> tuple[jnp.ndarray, LLNState]:
     """Advance the state over T new tokens at once.  q/k/v: (B, T, H, D[v]).
 
@@ -350,6 +357,16 @@ def decode_chunk(
     produce), uncommitted keys contribute Phi(k) = 0.  ``commit_len=0``
     is the masked row (state bitwise preserved up to * 1.0 / + 0.0);
     ``commit_len=T`` (or None) is today's full commit.
+    ``renorm``: optional drift-renormalization threshold.  After the fold,
+    any row whose per-head ``max_d z`` exceeds it has its reference
+    constant raised by ``delta = ln(max_d z)`` and ``(s, z)`` scaled by
+    ``exp(-delta)`` — the normalized output is exactly invariant to the
+    reference constant, so this is semantics-preserving; it only bounds
+    the carried magnitudes (``max_d z`` returns to ~1) so state never
+    drifts out of fp32 range at long horizon.  The shift accumulates
+    into ``state.log_scale`` when carried.  Renorm never fires for rows
+    that committed nothing this call (masked rows and ``commit_len=0``
+    rows stay bitwise inert).
     """
     b, t, h, d = q.shape
     dv = v.shape[-1]
@@ -394,9 +411,33 @@ def decode_chunk(
     else:
         s = s0 + jnp.einsum("bjhd,bjhv->bhdv", fk, vf)
         z = z0 + jnp.sum(fk, axis=1)
+    log_scale = state.log_scale
+    if renorm is not None and renorm > 0.0:
+        # Drift renorm: shifting the reference constant up by delta and
+        # scaling (s, z) by exp(-delta) is exactly the max-rescale identity
+        # the normalized output is invariant to.  Gate on rows that folded
+        # at least one token so frozen/uncommitted rows stay bitwise inert.
+        zmax = jax.lax.stop_gradient(jnp.max(z, axis=-1))        # (B, H)
+        if commit_len is not None:
+            folded = (cl > 0)[:, None]
+        elif row_mask is not None:
+            folded = row_mask[:, None]
+        else:
+            folded = jnp.ones((b, 1), bool)
+        delta = jnp.where(folded & (zmax > renorm),
+                          jnp.log(jnp.maximum(zmax, EPS)), 0.0)
+        scale = jnp.exp(-delta)
+        s = s * scale[..., None, None]
+        z = z * scale[..., None]
+        c_new = c_new + delta[:, None, :, None]
+        if log_scale is not None:
+            log_scale = log_scale + delta
     if row_mask is not None:
         keep = row_mask
         s = jnp.where(keep[:, None, None, None], s, state.s)
         z = jnp.where(keep[:, None, None], z, state.z)
         c_new = jnp.where(keep[:, None, None, None], c_new, state.c_k)
-    return out.astype(v.dtype), LLNState(s=s, z=z, c_k=c_new)
+        if log_scale is not None:
+            log_scale = jnp.where(keep[:, None], log_scale, state.log_scale)
+    return out.astype(v.dtype), LLNState(s=s, z=z, c_k=c_new,
+                                         log_scale=log_scale)

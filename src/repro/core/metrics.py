@@ -33,6 +33,41 @@ def spectral_gap(p: np.ndarray) -> float:
     return float(1.0 - lam2)
 
 
+def spectral_gap_power(p: np.ndarray, iters: int = 200,
+                       seed: int = 0) -> float:
+    """gamma = 1 - |lambda_2| via deflated power iteration (O(iters * N^2)).
+
+    The dense :func:`spectral_gap` is O(N^3) eigvals — unusable at analysis
+    N >= 8k.  A right-stochastic P has known dominant pair (lambda_1 = 1,
+    right eigenvector 1); power-iterate P^T for the stationary left vector
+    pi, deflate B = P - 1 pi^T (eigenvalues {0} ∪ {lambda_2, ...}), then
+    estimate |lambda_2| from the norm-growth rate of B^m x — robust to a
+    complex dominant pair, where a plain Rayleigh quotient oscillates.
+    """
+    p = np.asarray(p, np.float64)
+    n = p.shape[-1]
+    rng = np.random.default_rng(seed)
+    pi = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        pi = pi @ p
+        pi /= pi.sum()
+    x = rng.standard_normal(n)
+    x -= np.ones(n) * (pi @ x)          # deflate: remove the lambda_1 mode
+    x /= np.linalg.norm(x) + 1e-300
+    burn = iters // 2
+    log_rates = []
+    for i in range(iters):
+        x = p @ x - np.ones(n) * (pi @ x)
+        nrm = np.linalg.norm(x)
+        if nrm < 1e-300:
+            return 1.0
+        x /= nrm
+        if i >= burn:                   # geometric mean of late growth rates
+            log_rates.append(np.log(nrm))
+    lam = float(np.exp(np.mean(log_rates)))
+    return float(1.0 - lam)
+
+
 def variance_along_pc(p: np.ndarray) -> float:
     """sigma^2 along the major principal component of the centered matrix
     (Thm. 3.3 asserts this equals lambda_2^2)."""
@@ -54,6 +89,121 @@ def temperature_lln(alpha: float, beta: float, sigma_q: float, sigma_k: float,
     """tau_lln = 1 / sqrt(a (alpha^2 s_q^2 + beta^2 s_k^2) + b)   (eq. 11)."""
     s2 = a * (alpha ** 2 * sigma_q ** 2 + beta ** 2 * sigma_k ** 2) + b
     return float(1.0 / np.sqrt(max(s2, 1e-12)))
+
+
+# ---------------------------------------------------------------------------
+# Streaming concentration instruments (serving telemetry).
+#
+# The analysis tools above need the explicit (N, N) attention matrix; a
+# serving row at 500k context never materializes one.  These estimators read
+# the carried O(d^2) LLN decode state directly — jnp, jit-safe, O(H d) per
+# row — and are fused into the continuous-batching segment next to the
+# health sentinel (launch/steps.py).
+# ---------------------------------------------------------------------------
+
+def streaming_concentration(z: jnp.ndarray, log_scale=None, c=None,
+                            pos=None, a: float = DEFAULT_A,
+                            b: float = DEFAULT_B) -> dict:
+    """Per-row concentration instruments from the carried LLN state.
+
+    z: (..., B, H, D) accumulated key features Phi(k) = exp(beta k - c_k);
+    c: (..., B, H) per-head reference constant ``c_k`` (squeezed);
+    log_scale: (..., B, H) accumulated drift-renorm shift (None = zeros);
+    pos: (B,) per-row committed depth.  Leading axes (a layer stack) are
+    averaged out.  Returns (B,)-shaped instruments:
+
+    * ``log_mass``  — ln sum_d z + c, the reference-free log key mass
+      ``ln sum_t exp(beta k_t)``.  Exactly invariant to renormalization
+      AND to reference-constant rebinding (both fold their shift into
+      ``c_k``), so renorm-on and renorm-off runs agree to rounding.  When
+      ``c`` is unavailable, ``log_scale`` (the cumulative renorm shift)
+      corrects within-run renorm jumps instead.
+    * ``conc_drift`` — log_mass - ln(pos): log mass *per committed token*.
+      Flat over horizon ⇔ stationary concentration; a drifting value is
+      the dilution / explosion pathology ("The Devil in Linear
+      Transformer").  Only with ``pos``.
+    * ``log_mass_var`` — Var_d[ln z_d], the across-dim dispersion of key
+      log-features — a proxy for the key half of the matched log-variance
+      sigma_tilde^2 (Prop. 4.1).
+    * ``tau_hat`` — eq.-11-shaped temperature proxy
+      1/sqrt(a * 2 * log_mass_var + b): its *flatness* over horizon is the
+      health signal (the absolute value is a proxy, not eq. 11 itself).
+    """
+    lz = jnp.log(jnp.clip(z.astype(jnp.float32), 1e-30, None))
+    log_mass = jax.scipy.special.logsumexp(lz, axis=-1)        # (...,B,H)
+    if c is not None:
+        log_mass = log_mass + c.astype(jnp.float32)
+    elif log_scale is not None:
+        log_mass = log_mass + log_scale.astype(jnp.float32)
+    logvar = jnp.var(lz, axis=-1)                              # (...,B,H)
+    # Average heads and any leading (layer) axes; row axis is -2 of z's
+    # (..., B, H, D) layout after the D reduction.
+    reduce_axes = tuple(i for i in range(log_mass.ndim) if i != log_mass.ndim - 2)
+    lm = jnp.mean(log_mass, axis=reduce_axes)                  # (B,)
+    lv = jnp.mean(logvar, axis=reduce_axes)                    # (B,)
+    # Clamp the eq.-11 argument: small accumulated log-variance can push
+    # a * 2 lv + b below zero (b < 0), where the proxy saturates.  The
+    # floor bounds tau_hat at 10 — flatness over horizon is the signal,
+    # not the absolute level.
+    out = {"log_mass": lm, "log_mass_var": lv,
+           "tau_hat": 1.0 / jnp.sqrt(jnp.maximum(a * 2.0 * lv + b, 1e-2))}
+    if pos is not None:
+        npos = jnp.maximum(jnp.asarray(pos, jnp.float32), 1.0)
+        out["conc_drift"] = lm - jnp.log(npos)
+    return out
+
+
+def streaming_concentration_tree(tree, *, row_axis: int = 0) -> dict | None:
+    """:func:`streaming_concentration` over a whole (possibly layer-stacked)
+    decode-state pytree.
+
+    Collects every ``z`` / ``c_k`` / ``log_scale`` / ``pos`` leaf by name
+    (the ``AttentionState`` field names the sharding rules and the health
+    sentinel already key off), moves ``row_axis`` first and averages
+    instruments across layers.  Returns None when the tree carries no LLN
+    state (softmax pools have no ``z``).
+    """
+    from jax.tree_util import tree_leaves_with_path
+    from .health import _leaf_name
+    zs, cs, lss, poss = [], [], [], []
+    for path, leaf in tree_leaves_with_path(tree):
+        name = _leaf_name(path)
+        if name == "z":
+            zs.append(leaf)
+        elif name == "c_k":
+            cs.append(leaf)
+        elif name == "log_scale":
+            lss.append(leaf)
+        elif name == "pos":
+            poss.append(leaf)
+    if not zs:
+        return None
+    rows = zs[0].shape[row_axis]
+    if len(cs) != len(zs):
+        cs = [None] * len(zs)
+    if len(lss) != len(zs):
+        lss = [None] * len(zs)
+
+    def _rows_last3(x):
+        # (..., B, H, D) layout: move the row axis to -3 (z is (L?, B, H, D)).
+        return jnp.moveaxis(x, row_axis, -3)
+
+    def _rows_last2(x):
+        return None if x is None else jnp.moveaxis(x, row_axis, -2)
+
+    per_leaf = [streaming_concentration(
+        _rows_last3(z),
+        c=_rows_last2(None if c is None
+                      else jnp.squeeze(c, axis=(-1, -3))),
+        log_scale=_rows_last2(ls))
+        for z, c, ls in zip(zs, cs, lss)]
+    out = {k: sum(d[k] for d in per_leaf) / len(per_leaf)
+           for k in per_leaf[0]}
+    if poss:
+        pos = jnp.moveaxis(poss[0], row_axis, 0).reshape(rows, -1)[:, 0]
+        npos = jnp.maximum(pos.astype(jnp.float32), 1.0)
+        out["conc_drift"] = out["log_mass"] - jnp.log(npos)
+    return out
 
 
 def attention_log_moments(p: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

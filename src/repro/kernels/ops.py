@@ -417,7 +417,8 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
                      interpret: Optional[bool] = None,
                      row_mask: Optional[jnp.ndarray] = None,
                      backend: str = "auto",
-                     commit_len: Optional[jnp.ndarray] = None):
+                     commit_len: Optional[jnp.ndarray] = None,
+                     renorm: Optional[float] = None):
     """Advance an ``LLNState`` over T new tokens in one dispatch.
 
     Args:
@@ -441,6 +442,12 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
         ``commit_len=0`` ≡ ``row_mask=False``, ``commit_len=T`` ≡ a plain
         decode).  On the Pallas path the kernel still scores the full
         chunk; the committed fold is the cheap O(T d^2) jnp einsum below.
+      renorm: optional drift-renormalization threshold on the carried
+        ``max_d z`` magnitude (``core.lln.decode_chunk``).  Applied with
+        identical semantics on every backend: the non-Pallas twins get it
+        from the core, the Pallas path applies the same group-level shift
+        to its folded state below.  Never fires for masked or
+        ``commit_len=0`` rows.
 
     Returns ``(out (B,T,H,Dv) in v.dtype, new LLNState)``.
 
@@ -472,7 +479,8 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
         beta_h = jnp.repeat(beta_b, h // g, axis=-1) if g != h else beta_b
         return core_lln.decode_chunk(state, q, kf, vf, alpha, beta_h,
                                      row_mask=row_mask,
-                                     commit_len=commit_len)
+                                     commit_len=commit_len,
+                                     renorm=renorm)
     alpha_b = _bcast_heads(alpha, h)
     aq = q.astype(jnp.float32) * _row_head_bcast(alpha_b)
     bk = k.astype(jnp.float32) * _row_head_bcast(beta_b)
@@ -524,12 +532,35 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
     else:
         s_new = s1.reshape(b, h, d, -1)
         z_new = z1.reshape(b, h, d)
+    log_scale = state.log_scale
+    if renorm is not None and renorm > 0.0:
+        # Same drift renorm as core.lln.decode_chunk: raise the reference
+        # constant by delta = ln(max_d z) past the threshold, scale (s, z)
+        # by exp(-delta).  Gated on rows that folded at least one token.
+        zmax = jax.lax.stop_gradient(jnp.max(z_new, axis=-1))    # (B,H)
+        if commit_len is not None:
+            folded = (cl > 0)[:, None]
+        elif row_mask is not None:
+            folded = row_mask[:, None]
+        else:
+            folded = jnp.ones((b, 1), bool)
+        delta = jnp.where(folded & (zmax > renorm),
+                          jnp.log(jnp.maximum(zmax, 1e-6)), 0.0)
+        scale = jnp.exp(-delta)
+        s_new = s_new * scale[..., None, None]
+        z_new = z_new * scale[..., None]
+        c_new_h = c_new_h + delta[:, None, :, None]
+        if log_scale is not None:
+            log_scale = log_scale + delta
     if row_mask is not None:
         keep = row_mask
         s_new = jnp.where(keep[:, None, None, None], s_new, state.s)
         z_new = jnp.where(keep[:, None, None], z_new, state.z)
         c_new_h = jnp.where(keep[:, None, None, None], c_new_h, state.c_k)
-    return out, LLNState(s=s_new, z=z_new, c_k=c_new_h)
+        if log_scale is not None:
+            log_scale = jnp.where(keep[:, None], log_scale, state.log_scale)
+    return out, LLNState(s=s_new, z=z_new, c_k=c_new_h,
+                         log_scale=log_scale)
 
 
 # ---------------------------------------------------------------------------

@@ -78,6 +78,16 @@ class AttnSpec:
         moment matching.
       mm_a / mm_b: moment-matching constants; None = calibrated defaults
         for the head dim.
+      beta_n: beta(n) log-length temperature schedule coefficient — the
+        effective (alpha, beta) of a row at depth n are scaled by
+        ``sqrt(1 + beta_n * ln(n / calib_len))`` past the calibration
+        length (0 = off; see ``core/moment_matching.py:length_gain``).
+      calib_len: reference length n0 the schedule is anchored at; the
+        schedule is the identity for n <= calib_len.
+      renorm: drift renormalization threshold on the carried LLN ``z``
+        magnitude — decode rescales (s, z) against the per-row log-scale
+        when ``max|z|`` crosses it (0 = off; semantics-preserving, see
+        ``core/lln.py:decode_chunk``).
     """
     impl: str = "softmax"
     causal: bool = True
@@ -91,6 +101,9 @@ class AttnSpec:
     fixed_ab: float = 0.0
     mm_a: Optional[float] = None
     mm_b: Optional[float] = None
+    beta_n: float = 0.0
+    calib_len: int = 1024
+    renorm: float = 0.0
 
     def __post_init__(self):
         if self.impl not in IMPLS:
@@ -120,6 +133,12 @@ class AttnSpec:
                 raise ValueError(f"AttnSpec.{name} must be positive")
         if self.fixed_ab < 0:
             raise ValueError("AttnSpec.fixed_ab must be >= 0")
+        if self.beta_n < 0:
+            raise ValueError("AttnSpec.beta_n must be >= 0")
+        if self.renorm < 0:
+            raise ValueError("AttnSpec.renorm must be >= 0")
+        if self.calib_len < 1:
+            raise ValueError("AttnSpec.calib_len must be positive")
 
     @classmethod
     def from_cfg(cls, cfg, causal: bool = True,
@@ -142,7 +161,10 @@ class AttnSpec:
                        cfg, "lln_per_row_calib", False) else "batch"),
                    lln_chunk=cfg.lln_chunk, diag_block=cfg.diag_block,
                    softmax_chunk=cfg.softmax_chunk,
-                   fixed_ab=cfg.lln_fixed_ab)
+                   fixed_ab=cfg.lln_fixed_ab,
+                   beta_n=getattr(cfg, "lln_beta_n", 0.0),
+                   calib_len=getattr(cfg, "lln_calib_len", 1024),
+                   renorm=getattr(cfg, "lln_renorm", 0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -233,7 +255,8 @@ def decode_chunk(spec: AttnSpec, state, q, k, v, alpha, beta,
     from . import ops
     return ops.lln_decode_chunk(state, q, k, v, alpha, beta,
                                 row_mask=row_mask, backend=spec.backend,
-                                commit_len=commit_len)
+                                commit_len=commit_len,
+                                renorm=spec.renorm or None)
 
 
 def diag_fwd(spec: AttnSpec, q, k, v):

@@ -52,6 +52,14 @@ diagram; ``tests/test_robustness.py`` proves each path end to end):
   then replay the already-emitted tokens through
   ``PoolSetup.replay_fn`` (the partial-commit contract) — so one poisoned
   row costs one slot re-prefill, never the pool;
+* **streaming concentration telemetry** — ``segment_fn`` also returns the
+  per-row concentration instruments
+  (``core/metrics.py:streaming_concentration_tree``: log key mass, its
+  per-token drift, log-variance, temperature proxy) computed from the
+  carried O(d^2) LLN state inside the same jit; the last segment's
+  summary lands in ``BatchingStats.telemetry``, and with
+  ``HealthConfig.check_drift`` a drifting row is quarantined through the
+  sentinel path above;
 * **snapshot/restore** — with a ``snapshot_mgr``
   (``checkpoint/manager.py:CheckpointManager``), the full serving carry
   (pooled caches + tok/pos/remaining/active + the loop PRNG key) plus the
@@ -132,7 +140,11 @@ class BatchingStats:
     ``decode_steps`` counts scan steps actually dispatched (segments *
     segment length).  ``statuses`` maps every rid to its terminal status
     (one of :data:`REQUEST_STATUSES`); ``reject_reasons`` carries the
-    typed-error message for rejected/failed rids."""
+    typed-error message for rejected/failed rids.  ``telemetry`` is the
+    LAST segment's streaming-concentration summary over live rows
+    (``conc_drift_max``/``log_mass_mean``/``log_mass_var_mean``/
+    ``tau_hat_mean``) — empty for softmax pools or ``telemetry=False``
+    setups."""
     outputs: dict
     completed_tokens: int
     decode_steps: int
@@ -151,6 +163,7 @@ class BatchingStats:
     segment_ewma_s: float = 0.0
     snapshots: int = 0
     restored_step: Optional[int] = None
+    telemetry: dict = dataclasses.field(default_factory=dict)
 
 
 def synthetic_traffic(n_requests: int, vocab: int, prompt_lens,
@@ -201,6 +214,7 @@ class _RunState:
     rejected: int = 0
     snapshots: int = 0
     restored_step: Optional[int] = None
+    telemetry: dict = dataclasses.field(default_factory=dict)
 
 
 class ContinuousBatcher:
@@ -718,7 +732,7 @@ class ContinuousBatcher:
             self._fire_faults(st, fault_plan, fired, ("delay", "nan"))
             st.key, seg_key = jax.random.split(st.key)
             (st.caches, st.tok, st.pos, st.remaining, st.active,
-             toks, emitted, unhealthy) = s.segment_fn(
+             toks, emitted, unhealthy, metrics) = s.segment_fn(
                 self.params, st.caches, st.tok, st.pos, st.remaining,
                 st.active, seg_key)
             # Host syncs land inside the watchdog window so the EWMA sees
@@ -730,6 +744,16 @@ class ContinuousBatcher:
             wd.stop(st.segments)
             st.segments += 1
             st.decode_steps += s.segment
+            live = emitted_h.any(axis=0)          # rows that decoded here
+            if metrics is not None and live.any():
+                m = {k: np.asarray(v) for k, v in metrics.items()}
+                st.telemetry = {
+                    "conc_drift_max": float(
+                        np.max(np.abs(m["conc_drift"][live]))),
+                    "log_mass_mean": float(np.mean(m["log_mass"][live])),
+                    "log_mass_var_mean": float(
+                        np.mean(m["log_mass_var"][live])),
+                    "tau_hat_mean": float(np.mean(m["tau_hat"][live]))}
 
             # --- harvest / quarantine / deadlines / snapshot ------------
             self._harvest(st, toks_h, emitted_h, active_h, unhealthy_h)
@@ -757,7 +781,8 @@ class ContinuousBatcher:
             health_events=list(st.health_events),
             stragglers=list(wd.anomalies),
             segment_ewma_s=wd.ewma or 0.0,
-            snapshots=st.snapshots, restored_step=st.restored_step)
+            snapshots=st.snapshots, restored_step=st.restored_step,
+            telemetry=dict(st.telemetry))
 
 
 __all__ = ["Request", "BatchingStats", "ContinuousBatcher",

@@ -99,6 +99,10 @@ def main(argv=None):
                     help="[--continuous] per-request wall-clock budget (s)")
     ap.add_argument("--queue-cap", type=int, default=1024,
                     help="[--continuous] admission-queue bound")
+    ap.add_argument("--drift", action="store_true",
+                    help="[--continuous] quarantine rows whose streaming "
+                         "concentration drift exceeds the HealthConfig "
+                         "threshold (long-horizon serving)")
     ap.add_argument("--no-health", dest="health", action="store_false",
                     default=True,
                     help="[--continuous] disable the state-health sentinel")
@@ -282,8 +286,9 @@ def _run_continuous(cfg, model, mesh, args):
         setup = make_pool_setup(cfg, mesh, slots=args.batch,
                                 max_len=max_len, segment=args.segment,
                                 temperature=args.temperature,
-                                health=HealthConfig() if args.health
-                                else None)
+                                health=HealthConfig(
+                                    check_drift=bool(args.drift))
+                                if args.health else None)
         params = jax.device_put(model.init(jax.random.PRNGKey(args.seed)))
         eng = ContinuousBatcher(setup, params, queue_cap=args.queue_cap,
                                 snapshot_mgr=mgr,
@@ -323,6 +328,13 @@ def _run_continuous(cfg, model, mesh, args):
           f"segment EWMA {stats.segment_ewma_s * 1e3:.1f}ms"
           + (f" (restored from step {stats.restored_step})"
              if stats.restored_step is not None else ""))
+    if stats.telemetry:
+        t = stats.telemetry
+        print(f"  concentration: drift_max {t['conc_drift_max']:.2f}, "
+              f"log_mass {t['log_mass_mean']:.2f}, "
+              f"log_var {t['log_mass_var_mean']:.3f}, "
+              f"tau_hat {t['tau_hat_mean']:.3f}"
+              + (" [drift quarantine ON]" if args.drift else ""))
     if stats.outputs:
         rid0 = min(stats.outputs)
         print(f"request {rid0} tokens:",

@@ -19,6 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core import speculative
 from repro.core.health import HealthConfig, unhealthy_rows
+from repro.core.metrics import streaming_concentration_tree
 from repro.distributed import sharding as shd
 from repro.models import (Model, build_model, draft_config, draft_params)
 from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
@@ -77,7 +78,7 @@ def cache_shardings(cache_tree, cfg, mesh, rules):
     b_ax = rules["act_batch"]
 
     per_name = [
-        (r"(^|/)(len|pos|alpha|beta)$", ()),
+        (r"(^|/)(len|pos|alpha|beta|log_scale)$", ()),
         # LLN tails carry G kv-heads on the kernelized serve path (H on the
         # seed path / MLA); fit_spec drops non-divisible axes either way.
         (r"(^|/)(tail_k|tail_v)$", (b_ax, None, kv_ax, kv_fd)),
@@ -512,8 +513,8 @@ class PoolSetup:
       fused per-leaf scatter (donated pooled carry, no host copies).
     * ``segment_fn(params, caches, tok, pos, remaining, active, key) ->
       (caches, tok, pos, remaining, active, tokens (S, B), emitted (S, B),
-      unhealthy (B,))`` — ``segment`` decode steps folded into ONE jitted
-      ``lax.scan`` with donated cache carry.  Each step decodes every
+      unhealthy (B,), metrics)`` — ``segment`` decode steps folded into
+      ONE jitted ``lax.scan`` with donated cache carry.  Each step decodes every
       slot, samples only active rows, advances per-row positions, and
       retires rows whose ``remaining`` hits zero (in-scan evict: the
       row's mask drops, so by the masked-row contract nothing it does
@@ -521,6 +522,15 @@ class PoolSetup:
       sentinel (``core/health.py``) evaluated on the post-segment caches
       INSIDE the same dispatch — one fused reduction, no extra round
       trip; all-False when the pool was built with ``health=None``.
+      ``metrics`` is the streaming concentration telemetry
+      (``core/metrics.py:streaming_concentration_tree``), a dict of (B,)
+      instruments (``conc_drift``/``log_mass``/``log_mass_var``/
+      ``tau_hat``) computed from the carried O(d^2) LLN state in the
+      SAME jit (None when ``telemetry=False`` or the pool carries no
+      LLN state — decided at trace time, so the structure is stable).  With ``health.check_drift`` set, rows whose
+      ``|conc_drift|`` exceeds ``health.max_conc_drift`` are OR-ed into
+      ``unhealthy`` — concentration drift rides the same quarantine /
+      re-prefill / replay recovery as corruption.
       Steady-state throughput therefore matches the static
       ``make_generate`` loop — admits/evicts never leave the scan.
     * ``replay_fn(params, caches, chunk (B, R), pos (B,), commit (B,))``
@@ -556,6 +566,7 @@ class PoolSetup:
     replay_fn: Any = None
     health: Any = None
     replay_chunk: int = 8
+    telemetry: bool = True
 
 
 _HEALTH_DEFAULT = HealthConfig()
@@ -566,7 +577,8 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
                     temperature: float = 0.0,
                     multi_pod: bool = False,
                     health: Optional[HealthConfig] = _HEALTH_DEFAULT,
-                    replay_chunk: int = 8) -> PoolSetup:
+                    replay_chunk: int = 8,
+                    telemetry: bool = True) -> PoolSetup:
     """Build the jitted pieces of the continuous-batching pool.
 
     Supports the dense/MoE decoder families with standard attention
@@ -680,7 +692,31 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
             unhealthy = unhealthy_rows(caches, row_axis=1, config=health)
         else:
             unhealthy = jnp.zeros((slots,), jnp.bool_)
-        return caches, tok, pos, remaining, active, toks, emitted, unhealthy
+        # Streaming concentration telemetry on the same post-segment caches
+        # (core/metrics.py): O(H d) per row off the carried (s, z, c_k)
+        # state, in the SAME jit.  Whether the metrics dict exists is
+        # decided at trace time (the cache tree either carries LLN ``z``
+        # leaves or it doesn't), so the output pytree is stable per
+        # compiled executable: a dict of fixed (B,) keys, or None for
+        # ``telemetry=False`` / softmax-only pools.
+        metrics = None
+        conc = streaming_concentration_tree(caches, row_axis=1) \
+            if telemetry else None
+        if conc is not None:
+            zero = jnp.zeros((slots,), jnp.float32)
+            metrics = {k: conc.get(k, zero).astype(jnp.float32)
+                       for k in ("log_mass", "log_mass_var",
+                                 "tau_hat", "conc_drift")}
+            if health is not None and health.check_drift:
+                # Concentration drift -> quarantine: rides the same
+                # re-prefill/replay recovery as a corrupted row.  Gated on
+                # ``active``: a freed slot's zero state has meaningless
+                # (hugely negative) log mass.
+                drift_bad = active & (jnp.abs(metrics["conc_drift"])
+                                      > health.max_conc_drift)
+                unhealthy = unhealthy | drift_bad
+        return (caches, tok, pos, remaining, active, toks, emitted,
+                unhealthy, metrics)
 
     segment_fn = jax.jit(_segment, donate_argnums=(1,))
 
@@ -701,4 +737,4 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
                      prefill_fn=prefill_fn, admit_fn=admit_fn,
                      segment_fn=segment_fn, evict_fn=evict_fn,
                      replay_fn=replay_fn, health=health,
-                     replay_chunk=replay_chunk)
+                     replay_chunk=replay_chunk, telemetry=telemetry)

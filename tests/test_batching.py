@@ -246,7 +246,7 @@ class TestMaskedLogits:
                 active = jnp.asarray([True, False])
                 out = setup.segment_fn(params, pool, tok, pos, remaining,
                                        active, jax.random.PRNGKey(6))
-                _, tok2, _, _, _, toks, emitted, _ = out
+                _, tok2, _, _, _, toks, emitted, _, _ = out
                 return np.asarray(toks), np.asarray(emitted), \
                     np.asarray(tok2)
 

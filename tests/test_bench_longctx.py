@@ -1,0 +1,42 @@
+"""Smoke test: the long-context soak benchmark runs end-to-end.
+
+Runs the 8k-token smoke horizon.  The deterministic soak gates
+(z growth/pinning, fp32 safety, renorm invariance, telemetry flatness)
+must PASS even at smoke scale — they measure math, not wall clock.  The
+telemetry-overhead cell is wall-clock and too noisy to hard-gate here;
+only its shape is checked.
+"""
+import json
+
+from benchmarks.bench_longctx import run
+
+
+def test_bench_longctx_smoke(tmp_path):
+    out = tmp_path / "BENCH_longctx.json"
+    report = run(str(out), smoke=True, verbose=False)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    assert on_disk["modes"].keys() == {"baseline", "renorm", "robust"}
+    names = [r["name"] for r in on_disk["results"]]
+    assert names == ["z_growth", "fp32_safe", "renorm_invariance",
+                     "telemetry_flat", "telemetry_overhead"]
+    assert len(report["results"]) == len(on_disk["results"])
+
+    rows = {r["name"]: r for r in on_disk["results"]}
+    # Deterministic soak gates hold at any horizon.
+    for name in ("z_growth", "fp32_safe", "renorm_invariance",
+                 "telemetry_flat"):
+        assert rows[name]["pass"], rows[name]
+    assert rows["z_growth"]["baseline_ratio"] >= rows["z_growth"][
+        "baseline_min"]
+    assert rows["z_growth"]["renorm_z_max"] <= on_disk["soak"]["renorm"] * (
+        1 + 1e-3)
+    assert rows["renorm_invariance"]["final_out_err"] <= 1e-3
+
+    # Smoke overhead cells are too noisy to hard-gate, but the
+    # measurement itself must be well-formed.
+    over = rows["telemetry_overhead"]
+    assert over["tok_s"]["telemetry_off"] > 0
+    assert over["tok_s"]["telemetry_on"] > 0
+    assert over["gate_pct"] == 2.0
+    assert isinstance(over["overhead_pct"], float)

@@ -80,3 +80,18 @@ def test_readme_quickstart_example_exists():
     text = (ROOT / "README.md").read_text()
     for script in re.findall(r"python\s+(examples/[\w.]+\.py)", text):
         assert (ROOT / script).exists(), script
+
+
+@pytest.mark.parametrize(
+    "script", sorted((ROOT / "examples").glob("*.py")),
+    ids=lambda p: p.stem)
+def test_example_imports_resolve(script):
+    """Every example's first-party imports must keep resolving — the
+    examples are runnable docs and rot the same way (the heavyweight
+    end-to-end smokes live in tests/test_examples.py)."""
+    pat = re.compile(r"^\s*(?:from\s+([\w.]+)\s+import\b|import\s+([\w.]+))",
+                     re.M)
+    for m in pat.finditer(script.read_text()):
+        mod = m.group(1) or m.group(2)
+        if mod.split(".")[0] in FIRST_PARTY:
+            importlib.import_module(mod)

@@ -286,8 +286,8 @@ class TestEngineLifecycle:
         st = _engine("lln_diag", 2).init_state(2, 16)
         leaves = jax.tree_util.tree_leaves_with_path(st)
         names = {kp[-1].key for kp, _ in leaves}
-        assert {"s", "z", "c_k", "tail_k", "tail_v", "pos", "alpha",
-                "beta"} == names
+        assert {"s", "z", "c_k", "log_scale", "tail_k", "tail_v", "pos",
+                "alpha", "beta"} == names
         assert st["pos"].shape == (2,)
         with pytest.raises(KeyError):
             st["nope"]
