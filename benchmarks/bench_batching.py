@@ -13,6 +13,13 @@ per second of wall clock, compiles excluded:
   positions and masks let a freed slot admit the next queued request
   mid-stream, so short requests stop paying for the straggler.
 
+Each cell additionally serves the same stream through the **pooled
+speculative** engine (``make_pool_setup(spec_k=..., draft_layers=...)``:
+paired target+draft row states, draft-k/verify/accept per segment step,
+single-pass verify) and reports its goodput plus acceptance and committed
+tokens per verify iteration — the sequential-dependency win on top of
+continuous admission.
+
 Traffic is deterministic and skewed (most requests want a few tokens, a
 minority want many — the shape that hurts static batching in production).
 Both engines serve identical Request streams and both are warmed first.
@@ -115,12 +122,13 @@ class _StaticWaves:
 
 
 def bench_one(r: int, impl: str, *, slots, n_requests, prompt_len,
-              gen_lens, segment, blk, repeats, mesh, verbose) -> dict:
+              gen_lens, segment, blk, repeats, mesh, verbose,
+              spec_k=2, draft_layers=1) -> dict:
     from repro.models import build_model
     cfg = _cfg(r, impl, blk=blk)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    max_len = prompt_len + max(gen_lens) + 1
+    max_len = prompt_len + max(gen_lens) + 1 + spec_k
     reqs = synthetic_traffic(n_requests, cfg.vocab, [prompt_len], gen_lens,
                              seed=r)
     useful = sum(rq.gen_len for rq in reqs)
@@ -130,36 +138,57 @@ def bench_one(r: int, impl: str, *, slots, n_requests, prompt_len,
     pool = make_pool_setup(cfg, mesh, slots=slots, max_len=max_len,
                            segment=segment)
     eng = ContinuousBatcher(pool, params)
+    spec_pool = make_pool_setup(cfg, mesh, slots=slots, max_len=max_len,
+                                segment=segment, spec_k=spec_k,
+                                draft_layers=draft_layers)
+    spec_eng = ContinuousBatcher(spec_pool, params)
 
     # Warm every compile: static prefill + each distinct wave length, and
-    # the pool's prefill/admit/segment.
+    # each pool's prefill/admit/segment.
     static.serve(reqs)
     eng.warmup([prompt_len])
     eng.run(reqs)
+    spec_eng.warmup([prompt_len])
+    spec_eng.run(reqs)
 
-    st_ts, ct_ts, ct_steps = [], [], 0
+    st_ts, ct_ts, sp_ts, ct_steps = [], [], [], 0
+    spec_stats = None
     for it in range(repeats):
-        order = (("static", "cont") if it % 2 == 0 else ("cont", "static"))
+        order = (("static", "cont", "spec") if it % 2 == 0
+                 else ("spec", "cont", "static"))
         for mode in order:
             if mode == "static":
                 t0 = time.perf_counter()
                 static.serve(reqs)
                 st_ts.append(time.perf_counter() - t0)
-            else:
+            elif mode == "cont":
                 stats = eng.run(reqs)
                 assert stats.completed_tokens == useful
                 ct_ts.append(stats.wall_s)
                 ct_steps = stats.decode_steps
-    st_s, ct_s = min(st_ts), min(ct_ts)
+            else:
+                spec_stats = spec_eng.run(reqs)
+                assert spec_stats.completed_tokens == useful
+                sp_ts.append(spec_stats.wall_s)
+    st_s, ct_s, sp_s = min(st_ts), min(ct_ts), min(sp_ts)
     row = {
         "name": f"r{r}_{impl}", "r": r, "impl": impl,
         "traffic": {"requests": n_requests, "slots": slots,
                     "prompt_len": prompt_len, "gen_lens": gen_lens,
                     "segment": segment, "useful_tokens": useful},
         "goodput_tok_s": {"static": useful / st_s,
-                          "continuous": useful / ct_s},
-        "wall_s": {"static": st_s, "continuous": ct_s},
+                          "continuous": useful / ct_s,
+                          "continuous_spec": useful / sp_s},
+        "wall_s": {"static": st_s, "continuous": ct_s,
+                   "continuous_spec": sp_s},
         "speedup": st_s / ct_s,
+        "continuous_spec": {
+            "spec_k": spec_k, "draft_layers": draft_layers,
+            "acceptance_rate": spec_stats.acceptance_rate,
+            "goodput_tokens_per_iter":
+                spec_stats.goodput_tokens_per_iter,
+            "verify_iters": spec_stats.verify_iters,
+        },
         "slot_utilization": {
             "static": useful / max(static.wave_steps(reqs) + n_requests, 1),
             "continuous": useful / max(ct_steps * slots + n_requests, 1),
@@ -168,9 +197,13 @@ def bench_one(r: int, impl: str, *, slots, n_requests, prompt_len,
     if verbose:
         g = row["goodput_tok_s"]
         u = row["slot_utilization"]
+        sp = row["continuous_spec"]
         print(f"  static {g['static']:7.1f} tok/s (util {u['static']:.2f})"
               f" -> continuous {g['continuous']:7.1f} tok/s "
-              f"(util {u['continuous']:.2f})  speedup {row['speedup']:.2f}x",
+              f"(util {u['continuous']:.2f})  speedup {row['speedup']:.2f}x"
+              f"  | spec {g['continuous_spec']:7.1f} tok/s "
+              f"(acc {sp['acceptance_rate']:.2f}, "
+              f"{sp['goodput_tokens_per_iter']:.2f} tok/iter)",
               flush=True)
     return row
 
@@ -214,6 +247,11 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False,
                           "positions + masked rows; freed slots admit the "
                           "next queued request mid-stream via "
                           "dynamic-slice state writes",
+            "continuous_spec": "the same slotted pool with speculative "
+                               "rows (make_pool_setup spec_k/draft_layers):"
+                               " paired target+draft states, one "
+                               "draft-k/verify/accept iteration per "
+                               "segment step, single-pass verify",
         },
         "gate": "continuous goodput >= 1.3x static on at least one cell "
                 "under the skewed traffic",

@@ -10,6 +10,13 @@ row and reports:
 * ``tokens_per_step`` — committed tokens per verify iteration (the
   sequential-dependency win; 1.0 is the non-speculative loop, k+1 the
   ceiling).  This is the gated figure: > 1 whenever any draft survives;
+* ``target_passes_per_iter`` — FULL target-transformer passes traced per
+  verify iteration (``models/transformer.py:DECODE_PASS_COUNTS``; the
+  jitted loop's scan body traces exactly once, so the trace count IS the
+  per-iteration dispatch count).  Single-pass verify holds this at 1:
+  the score pass returns per-layer k/v residuals and the accepted prefix
+  is folded with the O(T d^2) ``lm_commit`` einsum instead of a second
+  pass.  Gated <= 1.25 by tests/test_bench_spec.py;
 * ``spec_tok_s`` / ``base_tok_s`` — wall-clock tokens/s of the
   speculative loop vs the non-speculative scanned loop on the same
   shape (AOT-compiled, compile excluded; the timed scan is right-sized
@@ -44,6 +51,7 @@ from repro.launch.mesh import compat_mesh
 from repro.launch.steps import (flatten_spec_tokens, make_serve_setup,
                                 make_spec_setup)
 from repro.models import build_model, synthetic_batch
+from repro.models.transformer import DECODE_PASS_COUNTS
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(ROOT, "BENCH_spec.json")
@@ -104,7 +112,15 @@ def _cell(impl: str, r: int, k: int, draft_layers: int, *, batch: int,
                       for b_ in range(batch)]
         lg, tc, dc = spec.prefill_fn(params, batch_in)   # fresh caches
         gen = spec.make_generate(steps, iters=max(iters_used))
-        gen = gen.lower(params, tc, dc, tok0s, pos0, key).compile()
+        # Trace-time dispatch audit: lowering traces the scan body once,
+        # so the counter delta is full target passes PER verify iteration
+        # (score counts; the O(T d^2) residual commit does not).
+        DECODE_PASS_COUNTS.clear()
+        lowered = gen.lower(params, tc, dc, tok0s, pos0, key)
+        target_passes = DECODE_PASS_COUNTS.get(cfg.name, 0)
+        draft_passes = DECODE_PASS_COUNTS.get(f"{cfg.name}-draft"
+                                              f"{draft_layers}", 0)
+        gen = lowered.compile()
         t0 = time.perf_counter()
         toks, n_emit, n_acc, live, *_ = gen(params, tc, dc, tok0s, pos0,
                                             key)
@@ -123,6 +139,8 @@ def _cell(impl: str, r: int, k: int, draft_layers: int, *, batch: int,
         "us_per_call": t_spec * 1e6 / total,
         "acceptance_rate": acc_rate,
         "tokens_per_step": tokens_per_step,
+        "target_passes_per_iter": float(target_passes),
+        "draft_passes_per_iter": float(draft_passes),
         "spec_tok_s": total / max(t_spec, 1e-9),
         "base_tok_s": total / max(t_base, 1e-9),
         "speedup_vs_base": t_base / max(t_spec, 1e-9),
@@ -150,6 +168,7 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False,
             c = rows[-1]
             print(f"  {c['name']:32s} acc {c['acceptance_rate']:.2f}  "
                   f"tok/step {c['tokens_per_step']:.2f}  "
+                  f"tgt-passes/iter {c['target_passes_per_iter']:.0f}  "
                   f"parity {c['greedy_parity']}")
     report = {
         "host_backend": jax.default_backend(),

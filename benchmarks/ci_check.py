@@ -1,0 +1,184 @@
+"""One-shot CI gate: tier-1 tests + bench smokes + BENCH gate-field diffs.
+
+Three stages, each skippable, all on by default:
+
+1. **tier-1** — ``python -m pytest -x -q`` (the repo's correctness floor;
+   ``tests/conftest.py`` auto-deselects the ``slow``/``soak`` markers, so
+   this is exactly the default developer run).
+2. **bench smokes** — every gated benchmark module in ``--smoke`` mode,
+   writing JSON to a scratch directory (the checked-in ``BENCH_*.json``
+   at the repo root are never touched).
+3. **gate diffs** — the gate fields of the checked-in ``BENCH_*.json``
+   are (a) re-validated against their hard gates and (b) printed next to
+   the fresh smoke values so a drifting figure is visible in the CI log
+   before it rots.  Smoke shapes are smaller than the committed full
+   runs, so the diff is informational; the PASS/FAIL verdict comes from
+   the gates on the committed files:
+
+   * ``BENCH_spec.json`` — every row ``greedy_parity`` true,
+     ``tokens_per_step >= 1`` (> 1 somewhere), and single-pass verify:
+     ``target_passes_per_iter <= 1.25`` on every row;
+   * ``BENCH_batching.json`` — continuous goodput >= 1.3x static on at
+     least one cell, and every pooled-speculative cell commits
+     ``goodput_tokens_per_iter`` in [1, spec_k + 1].
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.ci_check [--no-tier1] \
+        [--no-smoke] [--no-gates] [--keep PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Gated bench modules run in --smoke mode (module name, output file).
+SMOKES = (
+    ("benchmarks.bench_spec", "BENCH_spec.json"),
+    ("benchmarks.bench_batching", "BENCH_batching.json"),
+    ("benchmarks.bench_serve", "BENCH_serve.json"),
+    ("benchmarks.bench_dispatch", "BENCH_dispatch.json"),
+    ("benchmarks.bench_robustness", "BENCH_robustness.json"),
+    ("benchmarks.bench_longctx", "BENCH_longctx.json"),
+)
+
+
+def _env():
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def run_tier1() -> bool:
+    print("== tier-1: python -m pytest -x -q ==", flush=True)
+    proc = subprocess.run([sys.executable, "-m", "pytest", "-x", "-q"],
+                          cwd=ROOT, env=_env())
+    return proc.returncode == 0
+
+
+def run_smokes(out_dir: str) -> bool:
+    ok = True
+    for mod, fname in SMOKES:
+        out = os.path.join(out_dir, fname)
+        print(f"== smoke: python -m {mod} --smoke ==", flush=True)
+        proc = subprocess.run(
+            [sys.executable, "-m", mod, "--smoke", "--out", out],
+            cwd=ROOT, env=_env())
+        if proc.returncode != 0 or not os.path.exists(out):
+            print(f"FAIL: {mod} (rc={proc.returncode})", flush=True)
+            ok = False
+    return ok
+
+
+def _load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _spec_gates(report) -> list:
+    fails = []
+    rows = report.get("rows", [])
+    for row in rows:
+        if row.get("greedy_parity") is not True:
+            fails.append(f"{row['name']}: greedy_parity != true")
+        if not row.get("tokens_per_step", 0) >= 1.0:
+            fails.append(f"{row['name']}: tokens_per_step < 1")
+        tp = row.get("target_passes_per_iter")
+        if tp is not None and not 1.0 <= tp <= 1.25:
+            fails.append(f"{row['name']}: target_passes_per_iter {tp} "
+                         "outside [1, 1.25]")
+    if not any(r.get("tokens_per_step", 0) > 1.0 for r in rows):
+        fails.append("no row with tokens_per_step > 1")
+    return fails
+
+
+def _batching_gates(report) -> list:
+    fails = []
+    rows = report.get("results", [])
+    if not any(r.get("speedup", 0) >= 1.3 for r in rows):
+        fails.append("no cell with continuous >= 1.3x static goodput")
+    for row in rows:
+        sp = row.get("continuous_spec")
+        if not sp:
+            continue
+        g = sp.get("goodput_tokens_per_iter", 0)
+        if not 1.0 <= g <= sp.get("spec_k", 0) + 1:
+            fails.append(f"{row['name']}: spec goodput/iter {g} outside "
+                         f"[1, spec_k + 1]")
+    return fails
+
+
+def _gate_fields(fname, report) -> dict:
+    """The gate-relevant scalars of a report, flattened for the diff."""
+    out = {}
+    if report is None:
+        return out
+    if fname == "BENCH_spec.json":
+        for r in report.get("rows", []):
+            out[f"{r['name']}.tokens_per_step"] = r.get("tokens_per_step")
+            out[f"{r['name']}.target_passes_per_iter"] = \
+                r.get("target_passes_per_iter")
+    elif fname == "BENCH_batching.json":
+        for r in report.get("results", []):
+            out[f"{r['name']}.speedup"] = r.get("speedup")
+            sp = r.get("continuous_spec") or {}
+            out[f"{r['name']}.spec_goodput_per_iter"] = \
+                sp.get("goodput_tokens_per_iter")
+    return out
+
+
+def diff_gates(out_dir: str) -> bool:
+    ok = True
+    for fname, checker in (("BENCH_spec.json", _spec_gates),
+                           ("BENCH_batching.json", _batching_gates)):
+        committed = _load(os.path.join(ROOT, fname))
+        if committed is None:
+            print(f"FAIL: missing/unreadable {fname}", flush=True)
+            ok = False
+            continue
+        fails = checker(committed)
+        verdict = "PASS" if not fails else "FAIL"
+        print(f"== gates: {fname}: {verdict} ==", flush=True)
+        for msg in fails:
+            print(f"  GATE FAIL: {msg}", flush=True)
+        ok = ok and not fails
+        smoke = _gate_fields(fname, _load(os.path.join(out_dir, fname)))
+        for key, val in _gate_fields(fname, committed).items():
+            sv = smoke.get(key)
+            extra = "" if sv is None else f"   smoke {sv:.3g} (diff shape)"
+            print(f"  {key:48s} committed {val:.3g}{extra}", flush=True)
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--no-tier1", action="store_true")
+    ap.add_argument("--no-smoke", action="store_true")
+    ap.add_argument("--no-gates", action="store_true")
+    ap.add_argument("--keep", default=None,
+                    help="directory for smoke JSON (default: tempdir)")
+    args = ap.parse_args(argv)
+    out_dir = args.keep or tempfile.mkdtemp(prefix="bench_smoke_")
+    ok = True
+    if not args.no_tier1:
+        ok = run_tier1() and ok
+    if not args.no_smoke:
+        os.makedirs(out_dir, exist_ok=True)
+        ok = run_smokes(out_dir) and ok
+    if not args.no_gates:
+        ok = diff_gates(out_dir) and ok
+    print("ci_check:", "PASS" if ok else "FAIL", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

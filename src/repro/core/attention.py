@@ -593,6 +593,94 @@ def decode_lln_chunk(state: LLNDecodeState, q: jnp.ndarray,
     return out.astype(v_new.dtype), new_state
 
 
+def commit_softmax(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                   *, commit_len: jnp.ndarray,
+                   row_mask: Optional[jnp.ndarray] = None) -> KVCache:
+    """Commit half of :func:`decode_softmax` — append the accepted prefix
+    of a previously *scored* chunk, no scoring.
+
+    Single-pass speculative verify: a ``commit_len=0`` verify pass scores
+    the draft and rolls the cache back bitwise; this re-appends the
+    chunk's (k, v) residuals and advances ``length`` by the final
+    ``commit_len``, identical to re-running :func:`decode_softmax` with
+    it.  Requires per-row ``length``.
+    """
+    if jnp.ndim(cache.length) != 1:
+        raise ValueError("commit_softmax requires a per-row (B,) cache "
+                         "length")
+    t = k_new.shape[1]
+    upd = lambda c, u, l: jax.lax.dynamic_update_slice_in_dim(
+        c, u, l, axis=0)
+    kc = jax.vmap(upd)(cache.k, k_new.astype(cache.k.dtype), cache.length)
+    vc = jax.vmap(upd)(cache.v, v_new.astype(cache.v.dtype), cache.length)
+    cl = lln_mod.commit_lengths(commit_len, row_mask, t)
+    keep = (cl > 0)[:, None, None, None]
+    return KVCache(k=jnp.where(keep, kc, cache.k),
+                   v=jnp.where(keep, vc, cache.v),
+                   length=cache.length + cl)
+
+
+def commit_lln_chunk(state: LLNDecodeState, k_new: jnp.ndarray,
+                     v_new: jnp.ndarray, beta: jnp.ndarray,
+                     *, impl: str = "lln_diag",
+                     commit_len: jnp.ndarray,
+                     row_mask: Optional[jnp.ndarray] = None,
+                     backend: Optional[str] = None,
+                     renorm: Optional[float] = None) -> LLNDecodeState:
+    """Commit half of :func:`decode_lln_chunk` — fold the accepted prefix
+    of a previously scored chunk into the LLN state, the diag tail and
+    ``pos``, without scoring.
+
+    k/v_new: (B,T,G,D[v]) — the post-RoPE residuals the verify pass
+    returned.  Bit-identical per backend to re-running
+    :func:`decode_lln_chunk` with the final ``commit_len`` (the state
+    advance of the two paths shares the same per-backend fold).  Requires
+    per-row ``pos``.
+    """
+    b, t = k_new.shape[0], k_new.shape[1]
+    if backend is None:
+        backend = "auto"
+    if backend not in ("scan", "ref"):
+        from repro.kernels import ops as kops
+        lln_state = kops.lln_commit_chunk(state.lln, k_new, v_new, beta,
+                                          row_mask=row_mask,
+                                          backend=backend,
+                                          commit_len=commit_len,
+                                          renorm=renorm)
+    else:
+        h = state.lln.s.shape[1]
+        g = k_new.shape[2]
+        beta_h = jnp.asarray(beta, jnp.float32)
+        if beta_h.ndim and beta_h.shape[-1] == g and g != h:
+            beta_h = jnp.repeat(beta_h, h // g, axis=-1)
+        lln_state = lln_mod.commit_chunk(
+            state.lln, _repeat_kv(k_new, h), _repeat_kv(v_new, h), beta_h,
+            row_mask=row_mask, commit_len=commit_len, renorm=renorm)
+
+    # Rolling diag-tail update — same per-slot last-committed-writer gather
+    # as decode_lln_chunk.
+    block = state.tail_k.shape[1]
+    gt = state.tail_k.shape[2]
+    k_t = _repeat_kv(k_new, gt) if k_new.shape[2] != gt else k_new
+    v_t = _repeat_kv(v_new, gt) if v_new.shape[2] != gt else v_new
+    posb = jnp.broadcast_to(jnp.asarray(state.pos, jnp.int32), (b,))
+    cl = lln_mod.commit_lengths(commit_len, row_mask, t)
+    idx = jnp.arange(block)
+    j0 = jnp.mod(idx[None, :] - posb[:, None], block)             # (B, BLK)
+    j_last = jnp.clip(j0 + block * ((cl[:, None] - 1 - j0) // block),
+                      0, t - 1)
+    wrote = (j0 < cl[:, None])[:, :, None, None]
+    gather = j_last[:, :, None, None]
+    tail_k = jnp.where(wrote, jnp.take_along_axis(k_t, gather, axis=1
+                                                  ).astype(state.tail_k.dtype),
+                       state.tail_k)
+    tail_v = jnp.where(wrote, jnp.take_along_axis(v_t, gather, axis=1
+                                                  ).astype(state.tail_v.dtype),
+                       state.tail_v)
+    return LLNDecodeState(lln=lln_state, tail_k=tail_k, tail_v=tail_v,
+                          pos=posb + cl)
+
+
 def decode_lln(state: LLNDecodeState, q: jnp.ndarray, k_new: jnp.ndarray,
                v_new: jnp.ndarray, alpha: jnp.ndarray, beta: jnp.ndarray,
                *, impl: str = "lln_diag") -> tuple[jnp.ndarray, LLNDecodeState]:

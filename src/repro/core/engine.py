@@ -350,7 +350,8 @@ class AttentionEngine:
             tail_k=st2.tail_k, tail_v=st2.tail_v, pos=st2.pos)
 
     def verify(self, state: AttentionState, q, k, v, *, commit_len,
-               row_mask: Optional[jnp.ndarray] = None):
+               row_mask: Optional[jnp.ndarray] = None,
+               return_residuals: bool = False):
         """Speculative verify: score a T-token draft chunk, commit only the
         accepted prefix.
 
@@ -362,12 +363,63 @@ class AttentionEngine:
         ``commit_len=0`` rows behave exactly like ``row_mask=False`` rows;
         ``commit_len=T`` is a plain decode.  A rejected draft token is
         therefore never popped — it simply never enters the running sums.
+
+        ``return_residuals=True`` additionally returns the layer's commit
+        residuals ``{"k", "v"}`` — the post-RoPE (B,T,G,D[v]) chunk keys
+        and values — as a third element.  A ``commit_len=0`` score pass
+        leaves the state bitwise unchanged, so the single-pass verify flow
+        is: score once with ``commit_len=0`` + ``return_residuals=True``,
+        run the acceptance rule on the logits, then fold the accepted
+        prefix with the cheap O(T d^2) :meth:`commit` — no second full
+        pass over the model.
         """
         if commit_len is None:
             raise ValueError("verify requires commit_len; use decode for "
                              "an unconditional advance")
-        return self.decode(state, q, k, v, row_mask=row_mask,
-                           commit_len=commit_len)
+        out, st = self.decode(state, q, k, v, row_mask=row_mask,
+                              commit_len=commit_len)
+        if return_residuals:
+            return out, st, {"k": k, "v": v}
+        return out, st
+
+    def commit(self, state: AttentionState, residual: dict, *, commit_len,
+               row_mask: Optional[jnp.ndarray] = None) -> AttentionState:
+        """Fold a scored chunk's accepted prefix into ``state`` — the
+        cheap second half of single-pass speculative verify.
+
+        ``residual``: the ``{"k", "v"}`` dict a ``commit_len=0``
+        :meth:`verify` returned (post-RoPE, (B,T,G,D[v])).  ``state`` must
+        be the state that verify pass ran against (a ``commit_len=0``
+        score leaves it bitwise unchanged).  Per backend this is
+        bit-identical to re-running :meth:`verify` with the final
+        ``commit_len`` — O(T d^2) per layer instead of a full transformer
+        pass.  The beta(n) gain is re-derived from ``state.pos`` exactly
+        as the score pass derived it (``pos`` did not advance).
+        """
+        k, v = residual["k"], residual["v"]
+        spec = self.spec
+        if spec.impl == "softmax":
+            kv2 = ca.commit_softmax(
+                KVCache(k=state.k, v=state.v, length=state.len), k, v,
+                commit_len=commit_len, row_mask=row_mask)
+            return state.replace(k=kv2.k, v=kv2.v, len=kv2.length)
+        st = LLNDecodeState(
+            lln=LLNState(s=state.s, z=state.z, c_k=state.c_k,
+                         log_scale=state.log_scale),
+            tail_k=state.tail_k, tail_v=state.tail_v, pos=state.pos)
+        beta_d = state.beta
+        gain = self._length_gain(state.pos)
+        if gain is not None:
+            gain = gain[..., None] if gain.ndim else gain
+            beta_d = state.beta * gain
+        st2 = ca.commit_lln_chunk(st, k, v, beta_d, impl=spec.impl,
+                                  commit_len=commit_len, row_mask=row_mask,
+                                  backend=spec.backend,
+                                  renorm=spec.renorm or None)
+        return state.replace(
+            s=st2.lln.s, z=st2.lln.z, c_k=st2.lln.c_k,
+            log_scale=st2.lln.log_scale,
+            tail_k=st2.tail_k, tail_v=st2.tail_v, pos=st2.pos)
 
     def check_health(self, state: AttentionState, *,
                      config: Optional["health_mod.HealthConfig"] = None

@@ -441,3 +441,60 @@ def decode_chunk(
             log_scale = jnp.where(keep[:, None], log_scale, state.log_scale)
     return out.astype(v.dtype), LLNState(s=s, z=z, c_k=c_new,
                                          log_scale=log_scale)
+
+
+def commit_chunk(
+    state: LLNState,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    beta: jnp.ndarray,
+    row_mask: Optional[jnp.ndarray] = None,
+    commit_len: Optional[jnp.ndarray] = None,
+    renorm: Optional[float] = None,
+) -> LLNState:
+    """Fold a chunk's accepted prefix into the state WITHOUT scoring.
+
+    The commit half of :func:`decode_chunk` — same (k, v, beta) residuals,
+    same ``commit_lengths`` contract, same renorm and ``row_mask`` guards —
+    minus the query scoring.  This is the single-pass speculative-verify
+    primitive: the verify pass scores the draft chunk with ``commit_len=0``
+    (state untouched) and returns the post-RoPE (k, v) residuals; once the
+    acceptance counts are known, this O(T d^2) einsum folds exactly the
+    accepted prefix, bit-identical to re-running :func:`decode_chunk` with
+    the final ``commit_len``.
+    """
+    b, t = k.shape[0], k.shape[1]
+    bk = k * _bcast(beta, k)
+    cl = commit_lengths(
+        commit_len if commit_len is not None
+        else jnp.full((b,), t, jnp.int32), row_mask, t)
+    cmask = jnp.arange(t)[None, :] < cl[:, None]                 # (B, T)
+    bk_c = jnp.where(cmask[:, :, None, None], bk, -jnp.inf)
+    c_new = jnp.maximum(state.c_k, jax.lax.stop_gradient(
+        jnp.max(bk_c, axis=(1, 3), keepdims=True)))
+    vf = v.astype(jnp.float32)
+    r_c = jnp.exp(state.c_k - c_new)[:, 0, :, 0]
+    fk_c = jnp.exp(bk_c - c_new).astype(jnp.float32)    # 0 beyond commit
+    s = state.s * r_c[..., None, None] \
+        + jnp.einsum("bjhd,bjhv->bhdv", fk_c, vf)
+    z = state.z * r_c[..., None] + jnp.sum(fk_c, axis=1)
+    log_scale = state.log_scale
+    if renorm is not None and renorm > 0.0:
+        zmax = jax.lax.stop_gradient(jnp.max(z, axis=-1))        # (B, H)
+        folded = (cl > 0)[:, None]
+        delta = jnp.where(folded & (zmax > renorm),
+                          jnp.log(jnp.maximum(zmax, EPS)), 0.0)
+        scale = jnp.exp(-delta)
+        s = s * scale[..., None, None]
+        z = z * scale[..., None]
+        c_new = c_new + delta[:, None, :, None]
+        if log_scale is not None:
+            log_scale = log_scale + delta
+    if row_mask is not None:
+        keep = row_mask
+        s = jnp.where(keep[:, None, None, None], s, state.s)
+        z = jnp.where(keep[:, None, None], z, state.z)
+        c_new = jnp.where(keep[:, None, None, None], c_new, state.c_k)
+        if log_scale is not None:
+            log_scale = jnp.where(keep[:, None], log_scale, state.log_scale)
+    return LLNState(s=s, z=z, c_k=c_new, log_scale=log_scale)

@@ -563,6 +563,83 @@ def lln_decode_chunk(state, q, k, v, alpha, beta,
                          log_scale=log_scale)
 
 
+def lln_commit_chunk(state, k, v, beta,
+                     interpret: Optional[bool] = None,
+                     row_mask: Optional[jnp.ndarray] = None,
+                     backend: str = "auto",
+                     commit_len: Optional[jnp.ndarray] = None,
+                     renorm: Optional[float] = None):
+    """Fold a chunk's accepted prefix into an ``LLNState`` without scoring.
+
+    The commit half of :func:`lln_decode_chunk` — the single-pass
+    speculative-verify primitive.  A ``commit_len=0`` verify pass scores
+    the draft chunk and leaves the state untouched; this folds the
+    accepted prefix from the (k, v) residuals with the cheap O(T d^2)
+    einsum, bit-identical per backend to re-running
+    :func:`lln_decode_chunk` with the final ``commit_len`` (the pallas
+    kind runs the same group-level jnp fold the kernel path uses; scan/ref
+    run the jnp core twin at H heads).  k/v: (B,T,G,D[v]); beta as in
+    :func:`lln_decode_chunk`.  Returns the new ``LLNState``.
+    """
+    from repro.core.lln import LLNState
+
+    b, t, g, _ = k.shape
+    h = state.s.shape[1]
+    kind, _ = _dispatch(backend, interpret, ragged=False, cpu_twin="ref")
+    beta_b = jnp.asarray(beta, jnp.float32)
+    if beta_b.ndim and beta_b.shape[-1] == h and g != h:
+        beta_b = beta_b.reshape(beta_b.shape[:-1] + (g, h // g)).mean(axis=-1)
+    beta_b = _bcast_heads(beta_b, g)
+    if kind != "pallas":
+        kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+        vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+        beta_h = jnp.repeat(beta_b, h // g, axis=-1) if g != h else beta_b
+        return core_lln.commit_chunk(state, kf, vf, beta_h,
+                                     row_mask=row_mask,
+                                     commit_len=commit_len, renorm=renorm)
+    r = h // g
+    bk = k.astype(jnp.float32) * _row_head_bcast(beta_b)
+    c_old_g = jnp.max(state.c_k.reshape(b, 1, g, r, 1), axis=3)
+    cl = core_lln.commit_lengths(
+        commit_len if commit_len is not None
+        else jnp.full((b,), t, jnp.int32), row_mask, t)
+    cmask = jnp.arange(t)[None, :] < cl[:, None]                 # (B, T)
+    bk_c = jnp.where(cmask[:, :, None, None], bk, -jnp.inf)
+    c_com_g = jnp.maximum(c_old_g, jax.lax.stop_gradient(
+        jnp.max(bk_c, axis=(1, 3), keepdims=True)))              # (B,1,G,1)
+    c_com_h = jnp.repeat(c_com_g, r, axis=2) if r != 1 else c_com_g
+    resc = jnp.exp(state.c_k - c_com_h)[:, 0, :, 0]              # (B,H)
+    fk_c = jnp.exp(bk_c - c_com_g)                    # (B,T,G,D), 0 beyond
+    add_s = jnp.einsum("bjgd,bjgv->bgdv", fk_c, v.astype(jnp.float32))
+    add_z = jnp.sum(fk_c, axis=1)                                # (B,G,D)
+    if r != 1:
+        add_s = jnp.repeat(add_s, r, axis=1)
+        add_z = jnp.repeat(add_z, r, axis=1)
+    s_new = state.s * resc[..., None, None] + add_s
+    z_new = state.z * resc[..., None] + add_z
+    c_new_h = c_com_h
+    log_scale = state.log_scale
+    if renorm is not None and renorm > 0.0:
+        zmax = jax.lax.stop_gradient(jnp.max(z_new, axis=-1))    # (B,H)
+        folded = (cl > 0)[:, None]
+        delta = jnp.where(folded & (zmax > renorm),
+                          jnp.log(jnp.maximum(zmax, 1e-6)), 0.0)
+        scale = jnp.exp(-delta)
+        s_new = s_new * scale[..., None, None]
+        z_new = z_new * scale[..., None]
+        c_new_h = c_new_h + delta[:, None, :, None]
+        if log_scale is not None:
+            log_scale = log_scale + delta
+    if row_mask is not None:
+        keep = row_mask
+        s_new = jnp.where(keep[:, None, None, None], s_new, state.s)
+        z_new = jnp.where(keep[:, None, None], z_new, state.z)
+        c_new_h = jnp.where(keep[:, None, None, None], c_new_h, state.c_k)
+        if log_scale is not None:
+            log_scale = jnp.where(keep[:, None], log_scale, state.log_scale)
+    return LLNState(s=s_new, z=z_new, c_k=c_new_h, log_scale=log_scale)
+
+
 # ---------------------------------------------------------------------------
 # Block-diagonal softmax attention.
 # ---------------------------------------------------------------------------

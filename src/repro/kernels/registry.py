@@ -259,6 +259,18 @@ def decode_chunk(spec: AttnSpec, state, q, k, v, alpha, beta,
                                 renorm=spec.renorm or None)
 
 
+def commit_chunk(spec: AttnSpec, state, k, v, beta,
+                 row_mask=None, commit_len=None):
+    """Fold a scored chunk's accepted prefix into an ``LLNState`` under
+    ``spec.backend`` — the single-pass speculative-verify commit (no
+    scoring; see ``ops.lln_commit_chunk``)."""
+    from . import ops
+    return ops.lln_commit_chunk(state, k, v, beta,
+                                row_mask=row_mask, backend=spec.backend,
+                                commit_len=commit_len,
+                                renorm=spec.renorm or None)
+
+
 def diag_fwd(spec: AttnSpec, q, k, v):
     """Inference block-diagonal softmax (the §4.2 diag component) under
     ``spec.backend``."""

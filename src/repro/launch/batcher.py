@@ -164,6 +164,19 @@ class BatchingStats:
     snapshots: int = 0
     restored_step: Optional[int] = None
     telemetry: dict = dataclasses.field(default_factory=dict)
+    # Speculative pools (``PoolSetup.spec_k >= 1``): acceptance-aware
+    # goodput.  ``verify_iters`` counts draft+verify iterations that
+    # emitted anything; ``drafted_tokens`` = spec_k * verify_iters;
+    # ``accepted_tokens`` counts accepted DRAFT tokens (the bonus/resample
+    # token each iteration emits is excluded — acceptance_rate is the
+    # draft hit rate); ``goodput_tokens_per_iter`` = emitted tokens per
+    # verify iteration, in [1, spec_k + 1].
+    spec_k: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    acceptance_rate: float = 0.0
+    verify_iters: int = 0
+    goodput_tokens_per_iter: float = 0.0
 
 
 def synthetic_traffic(n_requests: int, vocab: int, prompt_lens,
@@ -215,6 +228,10 @@ class _RunState:
     snapshots: int = 0
     restored_step: Optional[int] = None
     telemetry: dict = dataclasses.field(default_factory=dict)
+    emitted_tokens: int = 0
+    verify_iters: int = 0
+    accepted_tokens: int = 0
+    drafted_tokens: int = 0
 
 
 class ContinuousBatcher:
@@ -294,10 +311,17 @@ class ContinuousBatcher:
             raise AdmissionError(
                 f"request {req.rid}: deadline_s must be > 0, "
                 f"got {req.deadline_s}")
-        if p.shape[0] + req.budget > s.max_len:
+        # Speculative pools reserve ``spec_k`` rows of cache slack: a
+        # row's final iteration may commit up to spec_k tokens past its
+        # budget, and every score pass needs room for the whole
+        # (spec_k + 1)-token chunk before the partial commit rolls the
+        # unaccepted suffix back.
+        slack = getattr(s, "spec_k", 0)
+        if p.shape[0] + req.budget + slack > s.max_len:
             raise AdmissionError(
                 f"request {req.rid}: prompt {p.shape[0]} + gen "
-                f"{req.budget} exceeds max_len {s.max_len}")
+                f"{req.budget}" + (f" + spec slack {slack}" if slack else "")
+                + f" exceeds max_len {s.max_len}")
 
     def _enqueue(self, st: _RunState, req: Request) -> bool:
         try:
@@ -477,6 +501,13 @@ class ContinuousBatcher:
 
     def _harvest(self, st: _RunState, toks_h, emitted_h, active_h,
                  unhealthy_h) -> None:
+        """``toks_h``: (S, B, E) token panel, ``emitted_h``: (S, B) int
+        per-step emission counts (E = 1 / counts in {0, 1} for plain
+        pools; E = spec_k + 1 for speculative pools).  A speculative row
+        may emit up to spec_k + 1 tokens in its budget-expiry step, so the
+        harvest caps the FLATTENED per-row stream at ``Request.budget`` —
+        overshoot tokens are committed on-device (the cache slack
+        ``check_request`` reserved) but never surface in ``outputs``."""
         s = self.setup
         freed: list = []
         for idx in range(s.slots):
@@ -490,8 +521,12 @@ class ContinuousBatcher:
             tr = st.tracked[rid]
             out = st.outputs[rid]
             room = tr.req.budget - len(out)   # hard buffer bound
-            steps = np.nonzero(emitted_h[:, idx])[0]
-            out.extend(int(t) for t in toks_h[steps, idx][:max(room, 0)])
+            for step in np.nonzero(emitted_h[:, idx])[0]:
+                if room <= 0:
+                    break
+                take = toks_h[step, idx, :int(emitted_h[step, idx])][:room]
+                out.extend(int(t) for t in take)
+                room -= len(take)
             if not active_h[idx]:             # evict: budget exhausted
                 st.statuses[rid] = "retried" if tr.retries else "done"
                 st.slot_rid[idx] = -1
@@ -598,6 +633,10 @@ class ContinuousBatcher:
             "segments": st.segments, "decode_steps": st.decode_steps,
             "admitted": st.admitted, "recoveries": st.recoveries,
             "rejected": st.rejected, "snapshots": st.snapshots,
+            "emitted_tokens": st.emitted_tokens,
+            "verify_iters": st.verify_iters,
+            "accepted_tokens": st.accepted_tokens,
+            "drafted_tokens": st.drafted_tokens,
             "queue": [self._ser_tracked(tr, now) for tr in st.queue],
             "resident": [self._ser_tracked(tr, now)
                          for rid, tr in st.tracked.items()
@@ -640,6 +679,10 @@ class ContinuousBatcher:
         st.recoveries = int(meta["recoveries"])
         st.rejected = int(meta["rejected"])
         st.snapshots = int(meta["snapshots"])
+        st.emitted_tokens = int(meta.get("emitted_tokens", 0))
+        st.verify_iters = int(meta.get("verify_iters", 0))
+        st.accepted_tokens = int(meta.get("accepted_tokens", 0))
+        st.drafted_tokens = int(meta.get("drafted_tokens", 0))
         st.health_events = list(meta["health_events"])
         st.outputs = {int(r): list(t) for r, t in meta["outputs"].items()}
         st.statuses = {int(r): v for r, v in meta["statuses"].items()}
@@ -677,8 +720,10 @@ class ContinuousBatcher:
         # One tiny end-to-end pass for the segment scan + harvest path;
         # generation budgets are clamped to the pool's max_len.  Snapshots
         # are disabled for the warmup run — it is not real traffic.
+        slack = getattr(s, "spec_k", 0)
         dummy = [Request(rid=i, prompt=np.zeros((p,), np.int32),
-                         gen_len=max(1, min(s.segment + 1, s.max_len - p)))
+                         gen_len=max(1, min(s.segment + 1,
+                                            s.max_len - p - slack)))
                  for i, p in enumerate(plens)]
         every, self.snapshot_every = self.snapshot_every, 0
         try:
@@ -737,13 +782,26 @@ class ContinuousBatcher:
                 st.active, seg_key)
             # Host syncs land inside the watchdog window so the EWMA sees
             # the real segment wall clock, not async-dispatch latency.
-            toks_h = np.asarray(toks)             # (S, B)
-            emitted_h = np.asarray(emitted)
+            # Normalize the two segment shapes to one panel: plain pools
+            # emit (S, B) tokens with bool masks -> (S, B, 1) + {0, 1}
+            # counts; speculative pools emit (S, B, k+1) + int counts.
+            toks_h = np.asarray(toks)
+            emitted_h = np.asarray(emitted).astype(np.int64)
+            if toks_h.ndim == 2:
+                toks_h = toks_h[..., None]
             active_h = np.asarray(st.active)
             unhealthy_h = np.asarray(unhealthy)
             wd.stop(st.segments)
             st.segments += 1
             st.decode_steps += s.segment
+            st.emitted_tokens += int(emitted_h.sum())
+            spec_k = getattr(s, "spec_k", 0)
+            if spec_k:
+                iters = int((emitted_h > 0).sum())
+                st.verify_iters += iters
+                st.drafted_tokens += spec_k * iters
+                st.accepted_tokens += int(
+                    np.maximum(emitted_h - 1, 0).sum())
             live = emitted_h.any(axis=0)          # rows that decoded here
             if metrics is not None and live.any():
                 m = {k: np.asarray(v) for k, v in metrics.items()}
@@ -782,7 +840,15 @@ class ContinuousBatcher:
             stragglers=list(wd.anomalies),
             segment_ewma_s=wd.ewma or 0.0,
             snapshots=st.snapshots, restored_step=st.restored_step,
-            telemetry=dict(st.telemetry))
+            telemetry=dict(st.telemetry),
+            spec_k=getattr(s, "spec_k", 0),
+            drafted_tokens=st.drafted_tokens,
+            accepted_tokens=st.accepted_tokens,
+            acceptance_rate=(st.accepted_tokens / st.drafted_tokens
+                             if st.drafted_tokens else 0.0),
+            verify_iters=st.verify_iters,
+            goodput_tokens_per_iter=(st.emitted_tokens / st.verify_iters
+                                     if st.verify_iters else 0.0))
 
 
 __all__ = ["Request", "BatchingStats", "ContinuousBatcher",

@@ -23,6 +23,13 @@ freed slots mid-stream (per-row positions, masked rows), e.g.
       --continuous --requests 16 --batch 4 --gen-lens 4,4,4,24
 
 and reports goodput (completed tok/s) instead of lockstep tok/s.
+``--continuous --speculative`` makes the pool rows speculative (pooled
+draft+verify with per-row ``commit_len`` and single-pass verify;
+docs/serving.md "Speculative continuous batching") and adds
+acceptance-aware goodput to the report:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+      --continuous --speculative --spec-k 3 --requests 8 --batch 2
 
 The continuous pool carries the robustness layer (docs/serving.md
 "Failure handling"): ``--deadline`` puts a wall-clock budget on every
@@ -277,7 +284,12 @@ def _run_continuous(cfg, model, mesh, args):
                 if args.gen_lens else [args.gen // 4 or 1] * 3 + [args.gen])
     prompt_lens = ([int(x) for x in args.prompt_lens.split(",")]
                    if args.prompt_lens else [args.prompt_len])
-    max_len = max(prompt_lens) + max(gen_lens)
+    # --speculative composes with --continuous: the pool rows run the
+    # pooled draft+verify loop (spec_k slack reserved in the cache).
+    spec_k = args.spec_k if args.speculative else 0
+    draft_layers = (args.draft_layers or max(cfg.n_layers // 2, 1)) \
+        if args.speculative else 0
+    max_len = max(prompt_lens) + max(gen_lens) + spec_k
     plan = FaultPlan.load(args.fault_plan) if args.fault_plan else None
     mgr = (CheckpointManager(args.snapshot_dir, keep_n=3, interval=1)
            if args.snapshot_dir else None)
@@ -286,6 +298,7 @@ def _run_continuous(cfg, model, mesh, args):
         setup = make_pool_setup(cfg, mesh, slots=args.batch,
                                 max_len=max_len, segment=args.segment,
                                 temperature=args.temperature,
+                                spec_k=spec_k, draft_layers=draft_layers,
                                 health=HealthConfig(
                                     check_drift=bool(args.drift))
                                 if args.health else None)
@@ -314,11 +327,18 @@ def _run_continuous(cfg, model, mesh, args):
     util = stats.completed_tokens / max(
         stats.decode_steps * args.batch + max(stats.admitted, 1), 1)
     print(f"continuous: {args.requests} requests over {args.batch} slots, "
-          f"segment={args.segment}, gen_lens={gen_lens}")
+          f"segment={args.segment}, gen_lens={gen_lens}"
+          + (f", speculative k={spec_k} draft_layers={draft_layers}"
+             if spec_k else ""))
     print(f"  {stats.completed_tokens} tokens in {stats.wall_s:.3f}s "
           f"({stats.completed_tokens / max(stats.wall_s, 1e-9):.1f} tok/s "
           f"goodput), {stats.segments} segments, "
           f"slot utilization {util:.2f}")
+    if stats.spec_k:
+        print(f"  speculative: acceptance {stats.acceptance_rate:.2f} "
+              f"({stats.accepted_tokens}/{stats.drafted_tokens} drafts), "
+              f"{stats.goodput_tokens_per_iter:.2f} tokens/verify-iter "
+              f"over {stats.verify_iters} iterations")
     by = {}
     for v in stats.statuses.values():
         by[v] = by.get(v, 0) + 1

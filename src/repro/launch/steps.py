@@ -416,12 +416,12 @@ def make_spec_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
                 drafts = drafts.T                          # (B, k)
                 dlogits = dlogits.transpose(1, 0, 2)       # (B, k, V)
 
-                # Verify: score ALL k+1 positions, commit nothing yet
-                # (commit_len=0 leaves every cache leaf untouched).
+                # Verify: ONE commit_len=0 target pass scores ALL k+1
+                # positions (caches bitwise untouched) and returns the
+                # per-layer (k, v) commit residuals.
                 chunk = jnp.concatenate([tok[:, None], drafts], axis=1)
-                tlogits, _ = model.decode(
-                    params, tgt_caches, chunk, pos,
-                    commit_len=jnp.zeros((b,), jnp.int32))
+                tlogits, t_resid = model.score(params, tgt_caches, chunk,
+                                               pos)
                 n_acc, nxt, commit = speculative.verify_tokens(
                     drafts, tlogits, temperature,
                     key=jax.random.fold_in(it_key, k + 1),
@@ -429,9 +429,11 @@ def make_spec_setup(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
                 live = count < steps
                 commit = jnp.where(live, commit, 0)
 
-                # Commit the accepted prefix into BOTH decode states.
-                _, tgt_caches = model.decode(params, tgt_caches, chunk,
-                                             pos, commit_len=commit)
+                # Single-pass verify: the accepted prefix folds from the
+                # score residuals with the O(T d^2) per-layer einsum — no
+                # second full target pass.  The draft (a first-k slice)
+                # still commits via its own chunked decode.
+                tgt_caches = model.commit(tgt_caches, t_resid, commit)
                 _, dr_caches = dmodel.decode(dparams, dr_caches, chunk,
                                              pos, commit_len=commit)
 
@@ -567,6 +569,13 @@ class PoolSetup:
     health: Any = None
     replay_chunk: int = 8
     telemetry: bool = True
+    # Speculative pool (spec_k >= 1): every cache tree becomes the paired
+    # {"target", "draft"} dict, each segment step is one draft+verify
+    # iteration emitting 0..k+1 tokens per row, ``segment_fn``'s ``toks``
+    # is (S, B, k+1) with ``emitted`` (S, B) int32 counts.
+    spec_k: int = 0
+    draft_layers: int = 0
+    draft_model: Any = None
 
 
 _HEALTH_DEFAULT = HealthConfig()
@@ -578,7 +587,9 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
                     multi_pod: bool = False,
                     health: Optional[HealthConfig] = _HEALTH_DEFAULT,
                     replay_chunk: int = 8,
-                    telemetry: bool = True) -> PoolSetup:
+                    telemetry: bool = True,
+                    spec_k: int = 0,
+                    draft_layers: int = 0) -> PoolSetup:
     """Build the jitted pieces of the continuous-batching pool.
 
     Supports the dense/MoE decoder families with standard attention
@@ -591,6 +602,23 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
     False).  ``replay_chunk``: token-chunk width of ``replay_fn`` (the
     quarantine-recovery replay path) — fixed so replay costs one compile.
 
+    ``spec_k >= 1`` makes the pool rows SPECULATIVE: every cache tree is
+    the paired ``{"target", "draft"}`` dict (both states prefill on
+    admission, advance in lockstep through replay/evict, and the draft is
+    the tied first-``draft_layers`` parameter slice — no extra weights),
+    and each segment step runs one draft-k/verify/accept iteration whose
+    per-row accept counts become per-row ``commit_len`` (done / masked /
+    quarantined rows freeze via ``commit_len=0``).  The verify is
+    SINGLE-PASS: one ``commit_len=0`` target score returns per-layer
+    (k, v) residuals and the accepted prefix folds via the O(T d^2)
+    ``lm_commit`` einsum instead of a second full transformer pass.
+    ``segment_fn``'s token stream widens to ``toks (S, B, k+1)`` with
+    ``emitted (S, B)`` int32 counts per step (0 for frozen rows, up to
+    ``spec_k + 1`` otherwise); a row may overshoot its budget by up to
+    ``spec_k`` tokens in its final segment — the batcher caps harvest at
+    the request budget and ``check_request`` reserves ``spec_k + 1`` cache
+    slack.
+
     The pool's model calibrates moment matching PER ROW
     (``lln_per_row_calib=True``: each request's alpha/beta come from its
     own prompt statistics, (B, H) in the slot cache), which is what makes
@@ -601,18 +629,39 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
         raise NotImplementedError(
             "continuous batching supports dense/moe decoders "
             f"(family={cfg.family}, kv_lora={cfg.kv_lora})")
+    if spec_k < 0:
+        raise ValueError(f"spec_k must be >= 0, got {spec_k}")
     cfg = cfg.replace(lln_per_row_calib=True)
     model = build_model(cfg)
     rules = shd.make_rules(cfg, multi_pod=multi_pod, serve=True)
+    speculative_pool = spec_k >= 1
+    dmodel = None
+    if speculative_pool:
+        dcfg = draft_config(cfg, draft_layers)  # validates k and the family
+        draft_layers = draft_layers or cfg.draft_layers
+        dmodel = build_model(dcfg)
+    k = spec_k
 
     def cache_init():
         struct = params_struct if params_struct is not None else \
             jax.eval_shape(model.init, jax.random.PRNGKey(0))
-        return model.cache_init(struct, slots, max_len, per_row=True)
+        tgt = model.cache_init(struct, slots, max_len, per_row=True)
+        if not speculative_pool:
+            return tgt
+        # lm_cache_init derives the layout from cfg alone — the params
+        # struct is signature-compat only, so the target's serves both.
+        return {"target": tgt,
+                "draft": dmodel.cache_init(struct, slots, max_len,
+                                           per_row=True)}
 
     def _pf(params, tokens):
         with shd.logical_rules(mesh, rules):
-            return model.prefill(params, {"inputs": tokens}, max_len)
+            logits, tgt = model.prefill(params, {"inputs": tokens}, max_len)
+            if not speculative_pool:
+                return logits, tgt
+            _, dr = dmodel.prefill(draft_params(params, cfg, draft_layers),
+                                   {"inputs": tokens}, max_len)
+        return logits, {"target": tgt, "draft": dr}
 
     _pf_jit = jax.jit(_pf)
 
@@ -661,6 +710,41 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
 
     evict_fn = jax.jit(_evict, donate_argnums=(0,))
 
+    def _sentinel(tree, active):
+        """Health + telemetry on the post-segment caches, fused into the
+        segment dispatch.  ``tree`` is the TARGET cache tree (the draft of
+        a speculative pool is a derived scratch state — corruption shows
+        up in the target it commits against).  Row axis is 1 (after the
+        stacked-layer axis)."""
+        if health is not None:
+            unhealthy = unhealthy_rows(tree, row_axis=1, config=health)
+        else:
+            unhealthy = jnp.zeros((slots,), jnp.bool_)
+        # Streaming concentration telemetry on the same post-segment caches
+        # (core/metrics.py): O(H d) per row off the carried (s, z, c_k)
+        # state, in the SAME jit.  Whether the metrics dict exists is
+        # decided at trace time (the cache tree either carries LLN ``z``
+        # leaves or it doesn't), so the output pytree is stable per
+        # compiled executable: a dict of fixed (B,) keys, or None for
+        # ``telemetry=False`` / softmax-only pools.
+        metrics = None
+        conc = streaming_concentration_tree(tree, row_axis=1) \
+            if telemetry else None
+        if conc is not None:
+            zero = jnp.zeros((slots,), jnp.float32)
+            metrics = {k: conc.get(k, zero).astype(jnp.float32)
+                       for k in ("log_mass", "log_mass_var",
+                                 "tau_hat", "conc_drift")}
+            if health is not None and health.check_drift:
+                # Concentration drift -> quarantine: rides the same
+                # re-prefill/replay recovery as a corrupted row.  Gated on
+                # ``active``: a freed slot's zero state has meaningless
+                # (hugely negative) log mass.
+                drift_bad = active & (jnp.abs(metrics["conc_drift"])
+                                      > health.max_conc_drift)
+                unhealthy = unhealthy | drift_bad
+        return unhealthy, metrics
+
     def _segment(params, caches, tok, pos, remaining, active, key):
         def body(carry, i):
             caches, tok, pos, remaining, active = carry
@@ -685,46 +769,95 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
                 body, (caches, tok, pos, remaining, active),
                 jnp.arange(segment, dtype=jnp.int32))
         caches, tok, pos, remaining, active = carry
-        # State-health sentinel on the post-segment caches, fused into the
-        # same dispatch (core/health.py): one per-leaf reduction, no extra
-        # round trip.  Row axis is 1 (after the stacked-layer axis).
-        if health is not None:
-            unhealthy = unhealthy_rows(caches, row_axis=1, config=health)
-        else:
-            unhealthy = jnp.zeros((slots,), jnp.bool_)
-        # Streaming concentration telemetry on the same post-segment caches
-        # (core/metrics.py): O(H d) per row off the carried (s, z, c_k)
-        # state, in the SAME jit.  Whether the metrics dict exists is
-        # decided at trace time (the cache tree either carries LLN ``z``
-        # leaves or it doesn't), so the output pytree is stable per
-        # compiled executable: a dict of fixed (B,) keys, or None for
-        # ``telemetry=False`` / softmax-only pools.
-        metrics = None
-        conc = streaming_concentration_tree(caches, row_axis=1) \
-            if telemetry else None
-        if conc is not None:
-            zero = jnp.zeros((slots,), jnp.float32)
-            metrics = {k: conc.get(k, zero).astype(jnp.float32)
-                       for k in ("log_mass", "log_mass_var",
-                                 "tau_hat", "conc_drift")}
-            if health is not None and health.check_drift:
-                # Concentration drift -> quarantine: rides the same
-                # re-prefill/replay recovery as a corrupted row.  Gated on
-                # ``active``: a freed slot's zero state has meaningless
-                # (hugely negative) log mass.
-                drift_bad = active & (jnp.abs(metrics["conc_drift"])
-                                      > health.max_conc_drift)
-                unhealthy = unhealthy | drift_bad
+        unhealthy, metrics = _sentinel(caches, active)
         return (caches, tok, pos, remaining, active, toks, emitted,
                 unhealthy, metrics)
 
-    segment_fn = jax.jit(_segment, donate_argnums=(1,))
+    def _segment_spec(params, caches, tok, pos, remaining, active, key):
+        """Speculative segment: each scan step is one draft-k/verify/accept
+        iteration over the paired {"target", "draft"} states.  Frozen rows
+        (done / masked / quarantined) ride ``commit_len=0`` — bitwise
+        inert on both states.  Emits (S, B, k+1) tokens with (S, B) int32
+        per-step counts (0 for frozen rows)."""
+        dparams = draft_params(params, cfg, draft_layers)
+
+        def body(carry, i):
+            caches, tok, pos, remaining, active = carry
+            tgt, dr = caches["target"], caches["draft"]
+            it_key = jax.random.fold_in(key, i)
+
+            # Draft k tokens sequentially on scratch draft state (the
+            # scratch advance is discarded; the committed draft state
+            # refolds below through the partial-commit contract).
+            def dstep(dc, j):
+                dcache, cur = dc
+                lg, dcache = dmodel.decode(dparams, dcache, cur, pos + j,
+                                           row_mask=active)
+                lg = jnp.where(active[:, None], lg, 0.0)
+                nxt = sample_token(lg, temperature,
+                                   jax.random.fold_in(it_key, j))
+                return (dcache, nxt), (nxt, lg)
+
+            _, (drafts, dlogits) = jax.lax.scan(
+                dstep, (dr, tok), jnp.arange(k, dtype=jnp.int32))
+            drafts = drafts.T                          # (B, k)
+            dlogits = dlogits.transpose(1, 0, 2)       # (B, k, V)
+
+            # Single-pass verify: ONE commit_len=0 target score over the
+            # whole [tok, d_1..d_k] chunk returns logits for all k+1
+            # positions AND the per-layer (k, v) commit residuals; the
+            # target caches stay bitwise untouched.
+            chunk = jnp.concatenate([tok[:, None], drafts], axis=1)
+            tlogits, t_resid = model.score(params, tgt, chunk, pos,
+                                           row_mask=active)
+            tlogits = jnp.where(active[:, None, None], tlogits, 0.0)
+            n_acc, nxt, commit = speculative.verify_tokens(
+                drafts, tlogits, temperature,
+                key=jax.random.fold_in(it_key, k + 1),
+                draft_logits=dlogits)
+            # Per-row accept counts -> per-row commit_len; frozen rows
+            # commit nothing (the masked-row contract, bitwise).
+            commit = jnp.where(active, commit, 0)
+            tgt = model.commit(tgt, t_resid, commit, row_mask=active)
+            _, dr = dmodel.decode(dparams, dr, chunk, pos,
+                                  commit_len=commit, row_mask=active)
+
+            n_emit = jnp.where(active, n_acc + 1, 0)
+            toks_out = speculative.emit_tokens(drafts, n_acc, nxt)
+            tok = jnp.where(active, nxt, tok)
+            pos = pos + commit
+            remaining = remaining - n_emit
+            active = active & (remaining > 0)
+            return ({"target": tgt, "draft": dr}, tok, pos, remaining,
+                    active), (toks_out, n_emit)
+
+        with shd.logical_rules(mesh, rules):
+            carry, (toks, emitted) = jax.lax.scan(
+                body, (caches, tok, pos, remaining, active),
+                jnp.arange(segment, dtype=jnp.int32))
+        caches, tok, pos, remaining, active = carry
+        unhealthy, metrics = _sentinel(caches["target"], active)
+        return (caches, tok, pos, remaining, active, toks, emitted,
+                unhealthy, metrics)
+
+    segment_fn = jax.jit(_segment_spec if speculative_pool else _segment,
+                         donate_argnums=(1,))
 
     def _replay(params, caches, chunk, pos, commit):
         """Advance per-row state over already-committed tokens without
         emitting: one chunked decode under the partial-commit contract
-        (rows with ``commit = 0`` are bitwise untouched)."""
+        (rows with ``commit = 0`` are bitwise untouched).  A speculative
+        pool replays BOTH paired states — the replayed trajectory is the
+        original committed trajectory for each."""
         with shd.logical_rules(mesh, rules):
+            if speculative_pool:
+                _, tgt = model.decode(params, caches["target"], chunk,
+                                      pos, commit_len=commit)
+                _, dr = dmodel.decode(draft_params(params, cfg,
+                                                   draft_layers),
+                                      caches["draft"], chunk, pos,
+                                      commit_len=commit)
+                return {"target": tgt, "draft": dr}
             _, caches = model.decode(params, caches, chunk, pos,
                                      commit_len=commit)
         return caches
@@ -737,4 +870,6 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
                      prefill_fn=prefill_fn, admit_fn=admit_fn,
                      segment_fn=segment_fn, evict_fn=evict_fn,
                      replay_fn=replay_fn, health=health,
-                     replay_chunk=replay_chunk, telemetry=telemetry)
+                     replay_chunk=replay_chunk, telemetry=telemetry,
+                     spec_k=spec_k, draft_layers=draft_layers,
+                     draft_model=dmodel)

@@ -137,7 +137,7 @@ def serve_prefill(p, x, cfg, positions, *, prefix_len: int = 0,
 
 
 def serve_decode(p, x, state, cfg, position, *, row_mask=None,
-                 commit_len=None):
+                 commit_len=None, return_residuals: bool = False):
     """Decode over T >= 1 new tokens.  x: (B, T, d).
 
     ``position``: absolute index of the first new token — a scalar (static
@@ -150,6 +150,10 @@ def serve_decode(p, x, state, cfg, position, *, row_mask=None,
     ``commit_len``: optional per-row (B,) int32 in [0, T] — speculative
     partial commit: all T positions are scored, only the accepted prefix
     folds into the state (``AttentionEngine.verify``).
+    ``return_residuals=True`` (requires ``commit_len``) returns a third
+    element — the layer's ``{"k", "v"}`` post-RoPE commit residuals — so a
+    ``commit_len=0`` score pass can be folded later by
+    :func:`serve_commit` without a second full pass.
     """
     b, n, _ = x.shape
     hd, h, g = cfg.hd, cfg.n_heads, cfg.n_kv_heads
@@ -168,10 +172,30 @@ def serve_decode(p, x, state, cfg, position, *, row_mask=None,
         pos = position
     q = rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
     k = rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
-    out, state = attn_engine(cfg).decode(state, q, k, v, row_mask=row_mask,
-                                         commit_len=commit_len)
+    eng = attn_engine(cfg)
+    if return_residuals:
+        out, state, resid = eng.verify(state, q, k, v, row_mask=row_mask,
+                                       commit_len=commit_len,
+                                       return_residuals=True)
+        out = out.reshape(b, n, h * hd)
+        return dense(p["o_w"], out, cfg.cdtype), state, resid
+    out, state = eng.decode(state, q, k, v, row_mask=row_mask,
+                            commit_len=commit_len)
     out = out.reshape(b, n, h * hd)
     return dense(p["o_w"], out, cfg.cdtype), state
+
+
+def serve_commit(state, residual, cfg, *, commit_len, row_mask=None):
+    """Params-free commit of a scored chunk's accepted prefix.
+
+    ``residual``: the ``{"k", "v"}`` dict :func:`serve_decode` returned
+    under ``return_residuals=True`` (the projections and RoPE already
+    happened in the score pass); ``state`` the state that pass ran against
+    (bitwise unchanged by a ``commit_len=0`` score).  O(T d^2) per layer —
+    :meth:`repro.core.engine.AttentionEngine.commit`.
+    """
+    return attn_engine(cfg).commit(state, residual, commit_len=commit_len,
+                                   row_mask=row_mask)
 
 
 # --- legacy entry points (deprecation shims over the engine) ---------------

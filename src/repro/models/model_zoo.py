@@ -39,6 +39,12 @@ class Model:
     decode: Callable
     cache_init: Callable
     param_count: Callable
+    # Single-pass speculative verify (dense/moe decoders only; None
+    # elsewhere): ``score`` = logits + per-layer (k, v) residuals without
+    # advancing the caches; ``commit`` = params-free O(T d^2) fold of the
+    # accepted prefix (transformer.py:lm_score / lm_commit).
+    score: Optional[Callable] = None
+    commit: Optional[Callable] = None
 
 
 def _xent_loss(cfg, h, head, batch):
@@ -75,7 +81,15 @@ def build_model(cfg: ArchConfig) -> Model:
                          commit_len=commit_len),
                      cache_init=lambda p, b, n, per_row=False:
                          tr.lm_cache_init(p, cfg, b, n, per_row=per_row),
-                     param_count=_count)
+                     param_count=_count,
+                     score=(None if cfg.kv_lora > 0 else
+                            lambda p, c, t, pos, row_mask=None:
+                            tr.lm_score(p, c, t, cfg, pos,
+                                        row_mask=row_mask)),
+                     commit=(None if cfg.kv_lora > 0 else
+                             lambda c, resid, commit_len, row_mask=None:
+                             tr.lm_commit(c, resid, cfg, commit_len,
+                                          row_mask=row_mask)))
 
     if fam in ("ssm", "hybrid"):
         def loss(params, batch):

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
 from . import mla as mla_mod
-from .attention_block import (attn_apply, attn_init, serve_decode,
-                              serve_prefill, serve_state_init)
+from .attention_block import (attn_apply, attn_init, serve_commit,
+                              serve_decode, serve_prefill, serve_state_init)
 from .layers import (apply_mlp, apply_norm, embed_init, embed_lookup,
                      logits_from_hidden, mlp_init, norm_init, trunc_normal)
 from .moe import moe_apply, moe_init
@@ -89,6 +89,26 @@ def block_prefill(p, x, cfg, positions, *, use_moe: bool, prefix_len: int = 0,
     ffn_out = (moe_apply(p["moe"], h, cfg)[0] if use_moe
                else apply_mlp(p["mlp"], h, cfg.act, cfg.cdtype))
     return x + ffn_out.astype(x.dtype), cache
+
+
+def block_score(p, x, cache, cfg, position, *, use_moe: bool,
+                row_mask=None):
+    """Speculative score pass over one block: a ``commit_len=0`` decode
+    that leaves ``cache`` bitwise unchanged and returns the attention
+    layer's ``{"k", "v"}`` commit residuals alongside the activations."""
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if _use_mla(cfg):
+        raise NotImplementedError(
+            "single-pass speculative verify is not wired for MLA")
+    zeros = jnp.zeros((x.shape[0],), jnp.int32)
+    attn_out, _, resid = serve_decode(p["attn"], h, cache, cfg, position,
+                                      row_mask=row_mask, commit_len=zeros,
+                                      return_residuals=True)
+    x = x + attn_out.astype(x.dtype)
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    ffn_out = (moe_apply(p["moe"], h, cfg)[0] if use_moe
+               else apply_mlp(p["mlp"], h, cfg.act, cfg.cdtype))
+    return x + ffn_out.astype(x.dtype), resid
 
 
 def block_decode(p, x, cache, cfg, position, *, use_moe: bool,
@@ -241,6 +261,18 @@ def lm_prefill(p, tokens, cfg, max_len: int,
     return logits, caches
 
 
+# Trace-time full-pass counter: each lm_decode / lm_score TRACE bumps the
+# config's entry, so lowering a jitted generation loop (whose lax.scan body
+# traces exactly once) counts the full transformer passes per loop
+# iteration — benchmarks/bench_spec.py uses it to gate target passes per
+# verify iteration.  lm_commit is O(T d^2) per layer and does not count.
+DECODE_PASS_COUNTS: dict = {}
+
+
+def _count_pass(cfg):
+    DECODE_PASS_COUNTS[cfg.name] = DECODE_PASS_COUNTS.get(cfg.name, 0) + 1
+
+
 def lm_decode(p, caches, token, cfg, position, row_mask=None,
               commit_len=None):
     """Decode step.  token: (B,) or (B, T) int32 — T > 1 advances the caches
@@ -255,6 +287,7 @@ def lm_decode(p, caches, token, cfg, position, row_mask=None,
     behave like masked rows).  Returns logits (B, V) for (B,) input,
     (B, T, V) for chunked input."""
     single = token.ndim == 1
+    _count_pass(cfg)
     first, n_main, is_moe = _layer_groups(cfg)
     toks = token[:, None] if single else token
     x = embed_lookup(p["embed"], toks, cfg.cdtype, cfg.embed_scale)
@@ -280,3 +313,69 @@ def lm_decode(p, caches, token, cfg, position, row_mask=None,
     logits = logits_from_hidden(lm_head_of(p), x, cfg.cdtype,
                                 cfg.logit_softcap)
     return (logits[:, 0] if single else logits), new_caches
+
+
+def lm_score(p, caches, token, cfg, position, row_mask=None):
+    """Speculative score pass: logits for a (B, T) draft chunk WITHOUT
+    advancing the caches, plus per-layer commit residuals.
+
+    A ``commit_len=0`` decode leaves every cache leaf bitwise unchanged,
+    so the caller keeps using ``caches`` as-is; once the acceptance rule
+    has produced per-row commit lengths, :func:`lm_commit` folds the
+    accepted prefix from the returned residuals with the cheap O(T d^2)
+    per-layer einsum — one full transformer pass per verify iteration
+    instead of two.  Returns ``(logits (B, T, V), residuals)`` where
+    ``residuals`` mirrors the cache dict: stacked per-layer
+    ``{"k", "v"}`` (L, B, T, G, D[v]) trees under the same keys.
+    """
+    _count_pass(cfg)
+    first, n_main, is_moe = _layer_groups(cfg)
+    x = embed_lookup(p["embed"], token, cfg.cdtype, cfg.embed_scale)
+    residuals = {}
+
+    def mk(use_moe):
+        def fn(x, xs):
+            lp, cache = xs
+            x, resid = block_score(lp, x, cache, cfg, position,
+                                   use_moe=use_moe, row_mask=row_mask)
+            return x, resid
+        return fn
+
+    if first:
+        x, residuals["first_layers"] = jax.lax.scan(
+            mk(False), x, (p["first_layers"], caches["first_layers"]),
+            unroll=bool(cfg.scan_unroll))
+    x, residuals["layers"] = jax.lax.scan(
+        mk(is_moe), x, (p["layers"], caches["layers"]),
+        unroll=bool(cfg.scan_unroll))
+    x = apply_norm(p["final_norm"], x, cfg.norm)
+    logits = logits_from_hidden(lm_head_of(p), x, cfg.cdtype,
+                                cfg.logit_softcap)
+    return logits, residuals
+
+
+def lm_commit(caches, residuals, cfg, commit_len, row_mask=None):
+    """Fold the accepted prefix of a scored chunk into every layer's cache.
+
+    Params-free: the residuals already carry the post-RoPE (k, v) the
+    score pass computed, so the commit is one O(T d^2) einsum per layer
+    (``AttentionEngine.commit``) — no projections, no MLP, no logits.
+    Bit-identical per backend to re-running :func:`lm_decode` with the
+    same ``commit_len``.  Returns the new caches.
+    """
+    if _use_mla(cfg):
+        raise NotImplementedError(
+            "single-pass speculative verify is not wired for MLA")
+    new_caches = {}
+
+    def fn(carry, xs):
+        cache, resid = xs
+        return carry, serve_commit(cache, resid, cfg,
+                                   commit_len=commit_len,
+                                   row_mask=row_mask)
+
+    for name in caches:
+        _, new_caches[name] = jax.lax.scan(
+            fn, 0, (caches[name], residuals[name]),
+            unroll=bool(cfg.scan_unroll))
+    return new_caches

@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 # Tests run single-device (the 512-device override belongs ONLY to the
 # dry-run, which always runs in its own subprocess).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -8,3 +10,77 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+#: Markers deselected from the default tier-1 run (``pytest -x -q``).
+#: Passing any ``-m`` expression takes over selection entirely, so
+#: ``-m slow`` / ``-m soak`` / ``-m "slow or not slow"`` opt back in.
+_DEFAULT_DESELECT = ("slow", "soak")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_programs_between_modules():
+    """Free each module's compiled executables when it finishes.  The
+    full suite compiles thousands of tiny programs; letting them pile up
+    in one process has produced native crashes in XLA:CPU's JIT late in
+    the run.  Shapes barely repeat across modules, so the lost cache
+    reuse is negligible."""
+    yield
+    jax.clear_caches()
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("-m"):
+        return
+    skip = {name: pytest.mark.skip(
+        reason=f"tier-2 ({name}): run with -m {name}")
+        for name in _DEFAULT_DESELECT}
+    for item in items:
+        for name in _DEFAULT_DESELECT:
+            if name in item.keywords:
+                item.add_marker(skip[name])
+
+
+# ---------------------------------------------------------------------------
+# The canonical backend-parity sweep: ONE source of truth for the
+# pallas/scan/ref × impl × GQA grids that test_registry.py, test_serve.py
+# and test_longctx.py used to copy-paste.  softmax × pallas is excluded
+# (an invalid AttnSpec — there is no softmax pallas kernel).
+# ---------------------------------------------------------------------------
+
+PARITY_BACKENDS = ("pallas", "scan", "ref")
+PARITY_IMPLS = ("softmax", "lln", "lln_diag")
+PARITY_GQA = (1, 4)
+
+
+def _cells(impls):
+    return [pytest.param((b, i, r), id=f"{b}-{i}-r{r}")
+            for i in impls for b in PARITY_BACKENDS for r in PARITY_GQA
+            if not (i == "softmax" and b == "pallas")]
+
+
+@pytest.fixture(params=_cells(("lln", "lln_diag")))
+def lln_parity_cell(request):
+    """(backend, impl, r) over the LLN attention ops (kernels/ops.py)."""
+    return request.param
+
+
+@pytest.fixture(params=_cells(PARITY_IMPLS))
+def engine_parity_cell(request):
+    """(backend, impl, r) over the AttentionEngine (softmax included)."""
+    return request.param
+
+
+@pytest.fixture(params=[pytest.param((b, r), id=f"{b}-r{r}")
+                        for b in PARITY_BACKENDS for r in PARITY_GQA])
+def backend_gqa_cell(request):
+    """(backend, r) for impl-agnostic LLN state ops (prefill / decode
+    chunk / renorm), where the impl axis does not exist."""
+    return request.param
+
+
+@pytest.fixture(params=[pytest.param((i, r), id=f"{i}-r{r}")
+                        for i in PARITY_IMPLS for r in PARITY_GQA])
+def impl_gqa_cell(request):
+    """(impl, r) for model-level parity sweeps that dispatch backend=auto
+    (end-to-end serve / pool tests)."""
+    return request.param

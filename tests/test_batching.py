@@ -396,3 +396,153 @@ class TestAdmit:
         # And the admitted row is the slot prefill's state.
         tgt = np.asarray(new["layers"]["pos"])[:, 1]
         np.testing.assert_array_equal(tgt, np.full((cfg.n_layers,), 8))
+
+
+# ---------------------------------------------------------------------------
+# Speculative continuous batching (PoolSetup.spec_k >= 1).
+# ---------------------------------------------------------------------------
+
+def _solo_spec_tokens(cfg, params, mesh, req, max_len, spec_k,
+                      draft_layers, cache):
+    """The request served alone through the solo ``SpecSetup`` loop —
+    the speculative oracle pooled rows must reproduce token-for-token."""
+    from repro.launch.steps import flatten_spec_tokens, make_spec_setup
+    plen = len(req.prompt)
+    if ("setup", plen) not in cache:
+        shape = ShapeSpec("solo-spec", max_len, 1, "decode")
+        cache[("setup", plen)] = make_spec_setup(
+            cfg, shape, mesh, spec_k=spec_k, draft_layers=draft_layers)
+    ss = cache[("setup", plen)]
+    logits, tgt, dr = ss.prefill_fn(
+        params, {"inputs": jnp.asarray(req.prompt)[None, :]})
+    last = logits[:, -1] if logits.ndim == 3 else logits
+    tok0 = jnp.argmax(last, -1).astype(jnp.int32)
+    toks = [int(tok0[0])]
+    steps = req.budget - 1
+    if steps > 0:
+        gkey = ("gen", plen, steps)
+        if gkey not in cache:
+            cache[gkey] = ss.make_generate(steps, 0.0)
+        t, n_emit, *_ = cache[gkey](params, tgt, dr, tok0,
+                                    jnp.asarray([plen], jnp.int32),
+                                    jax.random.PRNGKey(0))
+        flat = flatten_spec_tokens(np.asarray(t), np.asarray(n_emit),
+                                   steps)
+        toks.extend(int(x) for x in flat[0])
+    return np.asarray(toks, np.int32)
+
+
+class TestSpeculativePool:
+    SPEC_K, DRAFT_LAYERS = 2, 1
+
+    def test_pool_matches_solo_spec(self, impl_gqa_cell):
+        """Pooled speculative greedy decode (staggered admits/evicts over
+        2 slots, per-row commit_len) is token-for-token the solo
+        ``SpecSetup`` run per request — softmax/lln/lln_diag × r."""
+        impl, r = impl_gqa_cell
+        cfg = _tiny_cfg(impl, r)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = 48
+        reqs = synthetic_traffic(4, cfg.vocab, prompt_lens=[8, 8, 11],
+                                 gen_lens=[2, 7, 4], seed=r)
+        mesh = compat_mesh((1, 1), ("data", "model"))
+        with mesh:
+            setup = make_pool_setup(cfg, mesh, slots=2, max_len=max_len,
+                                    segment=3, spec_k=self.SPEC_K,
+                                    draft_layers=self.DRAFT_LAYERS)
+            stats = ContinuousBatcher(setup, params).run(reqs)
+            assert stats.admitted == len(reqs)
+            assert stats.spec_k == self.SPEC_K
+            assert stats.verify_iters > 0
+            assert 1.0 <= stats.goodput_tokens_per_iter <= self.SPEC_K + 1
+            cache: dict = {}
+            for req in reqs:
+                ref = _solo_spec_tokens(cfg, params, mesh, req, max_len,
+                                        self.SPEC_K, self.DRAFT_LAYERS,
+                                        cache)
+                got = stats.outputs[req.rid]
+                assert len(got) == req.gen_len
+                np.testing.assert_array_equal(got, ref,
+                                              err_msg=f"rid {req.rid}")
+
+    def test_quarantine_recovery_replays_both_states(self):
+        """NaN-poisoning a speculative row mid-stream quarantines it; the
+        re-prefill + paired replay rebuilds BOTH states and the request
+        still finishes with its exact solo-spec tokens."""
+        from repro.launch.faults import FaultPlan
+        cfg = _tiny_cfg("lln_diag", 2)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = 48
+        reqs = synthetic_traffic(2, cfg.vocab, prompt_lens=[8],
+                                 gen_lens=[9], seed=5)
+        plan = FaultPlan(events=[{"kind": "nan", "segment": 1, "row": 0}])
+        mesh = compat_mesh((1, 1), ("data", "model"))
+        with mesh:
+            setup = make_pool_setup(cfg, mesh, slots=2, max_len=max_len,
+                                    segment=2, spec_k=self.SPEC_K,
+                                    draft_layers=self.DRAFT_LAYERS)
+            stats = ContinuousBatcher(setup, params).run(
+                reqs, key=jax.random.PRNGKey(1), fault_plan=plan)
+            assert stats.recoveries >= 1
+            cache: dict = {}
+            for req in reqs:
+                ref = _solo_spec_tokens(cfg, params, mesh, req, max_len,
+                                        self.SPEC_K, self.DRAFT_LAYERS,
+                                        cache)
+                np.testing.assert_array_equal(stats.outputs[req.rid], ref,
+                                              err_msg=f"rid {req.rid}")
+
+    def test_budget_expiry_caps_multi_token_harvest(self):
+        """Regression (multi-token emission bugfix): a speculative row's
+        final verify iteration may emit up to spec_k + 1 tokens past its
+        budget — the harvest must cap the stored output at EXACTLY
+        ``Request.budget`` (including the ``max_tokens`` form), and the
+        kept prefix must still match the oracle."""
+        cfg = _tiny_cfg("lln", 4)    # r=4 tends to accept multi-token runs
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        max_len = 48
+        mesh = compat_mesh((1, 1), ("data", "model"))
+        # gen_len chosen NOT ≡ 1 (mod spec_k+1) so expiry can land
+        # mid-iteration; max_tokens on rid 1 exercises the min() budget.
+        reqs = [Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
+                        gen_len=6),
+                Request(rid=1, prompt=np.arange(3, 11, dtype=np.int32),
+                        gen_len=7, max_tokens=5)]
+        with mesh:
+            setup = make_pool_setup(cfg, mesh, slots=2, max_len=max_len,
+                                    segment=3, spec_k=self.SPEC_K,
+                                    draft_layers=cfg.n_layers)  # accept=1
+            stats = ContinuousBatcher(setup, params).run(reqs)
+            cache: dict = {}
+            for req in reqs:
+                got = stats.outputs[req.rid]
+                assert len(got) == req.budget, \
+                    f"rid {req.rid}: {len(got)} != budget {req.budget}"
+                ref = _solo_spec_tokens(cfg, params, mesh, req, max_len,
+                                        self.SPEC_K, cfg.n_layers, cache)
+                np.testing.assert_array_equal(got, ref,
+                                              err_msg=f"rid {req.rid}")
+
+    def test_check_request_reserves_spec_slack(self):
+        """Admission rejects a request whose prompt + budget would fit a
+        plain pool but not the speculative overshoot slack."""
+        cfg = _tiny_cfg("lln_diag", 2)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        mesh = compat_mesh((1, 1), ("data", "model"))
+        with mesh:
+            setup = make_pool_setup(cfg, mesh, slots=2, max_len=24,
+                                    segment=2, spec_k=self.SPEC_K,
+                                    draft_layers=self.DRAFT_LAYERS)
+            eng = ContinuousBatcher(setup, params)
+            fits = Request(rid=0, prompt=np.zeros((8,), np.int32),
+                           gen_len=24 - 8 - self.SPEC_K)
+            eng.check_request(fits)
+            from repro.launch.batcher import AdmissionError
+            with pytest.raises(AdmissionError, match="spec slack"):
+                eng.check_request(
+                    Request(rid=1, prompt=np.zeros((8,), np.int32),
+                            gen_len=24 - 8 - self.SPEC_K + 1))

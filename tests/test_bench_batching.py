@@ -9,7 +9,8 @@ def test_bench_batching_smoke(tmp_path):
     report = run(str(out), smoke=True, repeats=1, verbose=False)
     assert out.exists()
     on_disk = json.loads(out.read_text())
-    assert on_disk["modes"].keys() == {"static", "continuous"}
+    assert on_disk["modes"].keys() == {"static", "continuous",
+                                       "continuous_spec"}
     assert len(on_disk["results"]) == len(report["results"]) == 1
     for row in on_disk["results"]:
         assert row["goodput_tok_s"]["static"] > 0
@@ -18,3 +19,11 @@ def test_bench_batching_smoke(tmp_path):
         assert 0 < row["slot_utilization"]["continuous"] <= 1
         assert row["traffic"]["useful_tokens"] == sum(
             [3, 3, 9, 3, 3][:row["traffic"]["requests"]])
+        # Pooled-speculative cell: same stream through the spec pool.
+        assert row["goodput_tok_s"]["continuous_spec"] > 0
+        sp = row["continuous_spec"]
+        assert sp["spec_k"] >= 1
+        assert 0.0 <= sp["acceptance_rate"] <= 1.0
+        assert sp["verify_iters"] > 0
+        # Every verify iteration commits in [1, spec_k + 1] tokens.
+        assert 1.0 <= sp["goodput_tokens_per_iter"] <= sp["spec_k"] + 1

@@ -79,11 +79,11 @@ class TestRenormSemantics:
                                    np.asarray(cont_off),
                                    rtol=2e-5, atol=2e-5)
 
-    @pytest.mark.parametrize("backend", ["pallas", "scan", "ref"])
-    @pytest.mark.parametrize("g", [H, H // 2])
-    def test_backend_uniform(self, backend, g):
+    def test_backend_uniform(self, backend_gqa_cell):
         """Every backend (Pallas kernel incl. GQA grouping, scan/ref
         twins) applies the renormalization with the same semantics."""
+        backend, r = backend_gqa_cell
+        g = H // r
         key = jax.random.PRNGKey(1)
         st = _warm_state(key)
         thresh = float(jnp.max(st.z)) * 0.5

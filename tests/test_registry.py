@@ -20,7 +20,7 @@ from repro.core import attention as ca
 from repro.core import lln as core_lln
 from repro.core.engine import AttentionEngine, AttentionState
 from repro.kernels import ops as kops
-from repro.kernels.registry import AttnSpec, BACKENDS, Resolution, resolve
+from repro.kernels.registry import AttnSpec, Resolution, resolve
 
 
 def _qkv(seed, b, n, h, g, d, dtype=jnp.float32):
@@ -81,10 +81,9 @@ class TestSpecValidation:
 # ---------------------------------------------------------------------------
 
 class TestBackendParity:
-    @pytest.mark.parametrize("r", [1, 4])
     @pytest.mark.parametrize("causal", [True, False])
-    @pytest.mark.parametrize("impl", ["lln", "lln_diag"])
-    def test_attention_backends_agree(self, impl, r, causal):
+    def test_attention_backends_agree(self, lln_parity_cell, causal):
+        backend, impl, r = lln_parity_cell
         b, n, g, d = 2, 32, 2, 8
         h = g * r
         q, k, v = _qkv(r, b, n, h, g, d)
@@ -92,14 +91,13 @@ class TestBackendParity:
         beta = jnp.full((g,), 1.0)
         fn = kops.lln_attention if impl == "lln" else kops.lln_diag_attention
         ref = fn(q, k, v, alpha, beta, causal, 16, backend="auto")
-        for backend in ("pallas", "scan", "ref"):
-            out = fn(q, k, v, alpha, beta, causal, 16, backend=backend)
-            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                                       rtol=3e-4, atol=3e-4,
-                                       err_msg=f"{impl} {backend}")
+        out = fn(q, k, v, alpha, beta, causal, 16, backend=backend)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-4, atol=3e-4,
+                                   err_msg=f"{impl} {backend}")
 
-    @pytest.mark.parametrize("r", [1, 4])
-    def test_prefill_backends_agree(self, r):
+    def test_prefill_backends_agree(self, backend_gqa_cell):
+        backend, r = backend_gqa_cell
         b, n, g, d = 2, 32, 2, 8
         h = g * r
         q, k, v = _qkv(10 + r, b, n, h, g, d)
@@ -107,16 +105,15 @@ class TestBackendParity:
         beta = jnp.full((g,), 1.1)
         ref = kops.lln_prefill(q, k, v, alpha, beta, chunk=16,
                                backend="auto")
-        for backend in ("pallas", "scan", "ref"):
-            got = kops.lln_prefill(q, k, v, alpha, beta, chunk=16,
-                                   backend=backend)
-            for name, a, b_ in zip(("out", "s", "z", "c_k"), got, ref):
-                np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
-                                           rtol=3e-4, atol=3e-4,
-                                           err_msg=f"{backend}:{name}")
+        got = kops.lln_prefill(q, k, v, alpha, beta, chunk=16,
+                               backend=backend)
+        for name, a, b_ in zip(("out", "s", "z", "c_k"), got, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=3e-4, atol=3e-4,
+                                       err_msg=f"{backend}:{name}")
 
-    @pytest.mark.parametrize("r", [1, 4])
-    def test_decode_chunk_backends_agree(self, r):
+    def test_decode_chunk_backends_agree(self, backend_gqa_cell):
+        backend, r = backend_gqa_cell
         b, g, d, t = 2, 2, 8, 5
         h = g * r
         q0, k0, v0 = _qkv(20 + r, b, 24, h, g, d)
@@ -127,15 +124,14 @@ class TestBackendParity:
         qn, kn, vn = _qkv(30 + r, b, t, h, g, d)
         ref = kops.lln_decode_chunk(st, qn, kn, vn, alpha, beta,
                                     backend="auto")
-        for backend in ("pallas", "scan", "ref"):
-            o, st2 = kops.lln_decode_chunk(st, qn, kn, vn, alpha, beta,
-                                           backend=backend)
-            np.testing.assert_allclose(np.asarray(o), np.asarray(ref[0]),
-                                       rtol=3e-4, atol=3e-4,
-                                       err_msg=backend)
-            np.testing.assert_allclose(np.asarray(st2.s),
-                                       np.asarray(ref[1].s), rtol=3e-4,
-                                       atol=3e-4, err_msg=backend)
+        o, st2 = kops.lln_decode_chunk(st, qn, kn, vn, alpha, beta,
+                                       backend=backend)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref[0]),
+                                   rtol=3e-4, atol=3e-4,
+                                   err_msg=backend)
+        np.testing.assert_allclose(np.asarray(st2.s),
+                                   np.asarray(ref[1].s), rtol=3e-4,
+                                   atol=3e-4, err_msg=backend)
 
     def test_diag_fwd_backends_agree(self):
         b, n, g, r, d = 2, 32, 2, 2, 8
@@ -169,30 +165,24 @@ def _engine(impl, r, backend="auto", calibration="batch"):
 
 
 class TestEngineLifecycle:
-    @pytest.mark.parametrize("r", [1, 4])
-    @pytest.mark.parametrize("impl", ["softmax", "lln", "lln_diag"])
-    def test_engine_backends_agree_end_to_end(self, impl, r):
-        """prefill + decode outputs agree across every legal backend."""
+    def test_engine_backends_agree_end_to_end(self, engine_parity_cell):
+        """prefill + decode outputs agree across every legal backend
+        (each cell checks one backend against the auto resolution)."""
+        backend, impl, r = engine_parity_cell
         b, n, g, d, t = 2, 16, 2, 8, 3
         h = g * r
         q, k, v = _qkv(60 + r, b, n, h, g, d)
         qn, kn, vn = _qkv(70 + r, b, t, h, g, d)
-        ref = None
-        for backend in BACKENDS:
-            if impl == "softmax" and backend == "pallas":
-                continue
-            eng = _engine(impl, r, backend)
-            out, st = eng.prefill(q, k, v, max_len=n + t)
-            out2, st2 = eng.decode(st, qn, kn, vn)
-            if ref is None:
-                ref = (out, out2)
-            else:
-                np.testing.assert_allclose(np.asarray(out),
-                                           np.asarray(ref[0]), rtol=3e-4,
-                                           atol=3e-4, err_msg=backend)
-                np.testing.assert_allclose(np.asarray(out2),
-                                           np.asarray(ref[1]), rtol=3e-4,
-                                           atol=3e-4, err_msg=backend)
+        ref_eng = _engine(impl, r, "auto")
+        ref_out, ref_st = ref_eng.prefill(q, k, v, max_len=n + t)
+        ref_out2, _ = ref_eng.decode(ref_st, qn, kn, vn)
+        eng = _engine(impl, r, backend)
+        out, st = eng.prefill(q, k, v, max_len=n + t)
+        out2, _ = eng.decode(st, qn, kn, vn)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=3e-4, atol=3e-4, err_msg=backend)
+        np.testing.assert_allclose(np.asarray(out2), np.asarray(ref_out2),
+                                   rtol=3e-4, atol=3e-4, err_msg=backend)
 
     @pytest.mark.parametrize("impl", ["softmax", "lln_diag"])
     def test_lifecycle_roundtrip_matches_legacy_bitwise(self, impl):

@@ -308,8 +308,11 @@ class TestDeadlines:
                                             seconds=1.0)])
         stats = _run(pool, reqs, fault_plan=plan)
         assert stats.segment_ewma_s > 0
-        assert stats.stragglers, "1s delay must register as a straggler"
-        assert stats.stragglers[0].duration >= 1.0
+        # The EWMA threshold is ~1ms here, so an OS scheduling blip on a
+        # loaded host can also register — require the injected delay to
+        # be AMONG the stragglers, not necessarily the first.
+        delayed = [r for r in stats.stragglers if r.duration >= 1.0]
+        assert delayed, "1s delay must register as a straggler"
 
 
 # ---------------------------------------------------------------------------
