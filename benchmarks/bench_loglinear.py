@@ -1,0 +1,312 @@
+"""Log-linear multi-scale state: memory, recall, and decode-cost gates.
+
+The ``log_linear`` impl trades the single O(d^2) LLN summary for a
+Fenwick pyramid of ``num_scales`` bucket states (``core/loglinear.py``).
+This benchmark checks the three claims that justify the extra state:
+
+* **state bytes are O(log N * d^2)** — the decode state for a 32k-token
+  row (pyramid deep enough that the saturating top level is actually
+  exercised) stays under 2x the ideal ``ceil(log2 N) * d * dv`` fp32
+  bucket budget, and is hundreds of times smaller than the KV cache a
+  softmax row of the same depth would carry;
+* **multi-scale recall** — on a synthetic association-recall stream
+  (key/value pairs written recently, a long distractor prefix behind
+  them), down-weighting the old mass by ``scale_decay**level`` recovers
+  the stored values where the single-state LLN's uniform running sum
+  drowns them: top-1 retrieval accuracy and the correct-vs-confuser
+  cosine margin must both beat plain ``lln``;
+* **bounded decode cost** — chunked ``loglin_decode_chunk`` wall clock
+  stays within ``GATE_DECODE_RATIO``x of ``lln_decode_chunk`` at serving
+  shapes (the pyramid fold is O(L) adds + two-view scoring; it must not
+  regress the token loop asymptotically).
+
+Writes ``BENCH_loglinear.json`` at the repo root (schema:
+benchmarks/README.md).  Wall-clock gates are informational in ``--smoke``
+mode (same policy as bench_robustness / bench_longctx); the memory and
+recall gates are deterministic and always count.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_loglinear [--smoke] \
+        [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lln as core_lln
+from repro.core import loglinear as core_loglin
+from repro.kernels import ops as kops
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_loglinear.json")
+
+GATE_STATE_RATIO = 2.0       # state bytes / ideal log2(N) bucket budget
+GATE_DECODE_RATIO = 3.0      # loglin decode wall clock / lln decode
+GATE_RECALL_ACC = 0.85       # multi-scale top-1 retrieval accuracy
+
+STATE_N = 32_768             # horizon the state-bytes cell is sized for
+STATE_D = 64
+STATE_GRANULE = 128
+
+
+def state_bytes_cell(verbose: bool) -> dict:
+    """Decode-state footprint for one 32k-token row, vs the ideal
+    log-depth bucket budget and the equivalent softmax KV cache."""
+    n, d, dv, g = STATE_N, STATE_D, STATE_D, STATE_GRANULE
+    # pyramid deep enough that 32k tokens overflow into the top level
+    ls = max(1, int(math.ceil(math.log2(n // g))))
+    st = core_loglin.LogLinState.init(1, 1, d, dv, ls)
+    actual = sum(int(np.asarray(leaf).nbytes)
+                 for leaf in jax.tree_util.tree_leaves(st))
+    ideal = int(math.ceil(math.log2(n))) * d * dv * 4       # fp32 buckets
+    kv = 2 * n * d * 4                                      # softmax row
+    row = {"name": "state_bytes", "tokens": n, "head_dim": d,
+           "granule": g, "num_scales": ls,
+           "state_bytes_per_head": actual,
+           "ideal_log2n_bytes": ideal, "kv_cache_bytes": kv,
+           "ratio_vs_ideal": actual / ideal,
+           "compression_vs_kv": kv / actual,
+           "gate_ratio": GATE_STATE_RATIO,
+           "pass": bool(actual <= GATE_STATE_RATIO * ideal)}
+    if verbose:
+        print(f"  state {actual / 1024:.0f} KiB/head vs ideal "
+              f"{ideal / 1024:.0f} KiB (x{row['ratio_vs_ideal']:.2f}, "
+              f"gate {GATE_STATE_RATIO}x) — {row['compression_vs_kv']:.0f}x "
+              f"smaller than the 32k KV cache "
+              f"({'PASS' if row['pass'] else 'FAIL'})", flush=True)
+    return row
+
+
+def _recall_stream(n: int, granule: int, pairs: int, d: int, seed: int):
+    """Distractor prefix + ``pairs`` associations written in the last few
+    granules + one probe query per pair in the open granule.
+
+    Under the elementwise-exp LLN feature map, dense random keys barely
+    discriminate (``phi(q) . phi(k)`` is a sum of per-dim log-normals, so
+    a matched pair only beats a random cross by ``e^(scale^2/d)`` per
+    dim).  The associations therefore use SPARSE disjoint-support keys —
+    pair ``j`` puts weight ``s`` on its own ``d // pairs`` dims — giving
+    a matched score of ``(d/pairs) e^(2s)`` vs ``~e^s`` cross terms:
+    retrievable when old mass is down-weighted, drowned by a uniform sum
+    over the full distractor prefix.
+    """
+    rng = np.random.default_rng(seed)
+    s = 2.0
+    sup = d // pairs
+
+    def unit(shape):
+        x = rng.normal(size=shape)
+        return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+    keys = np.zeros((pairs, d))
+    for j in range(pairs):
+        keys[j, j * sup:(j + 1) * sup] = s
+    vals = unit((pairs, d))
+    n_store = 2 * granule            # associations: the last two granules
+    n_probe = pairs                  # probes: the open (ragged) tail
+    n_dis = n - n_store - n_probe
+    k = np.concatenate([
+        rng.normal(size=(n_dis, d)),
+        np.repeat(keys, n_store // pairs, axis=0)[:n_store],
+        np.zeros((n_probe, d))])                       # probes: inert keys
+    v = np.concatenate([
+        unit((n_dis, d)),
+        np.repeat(vals, n_store // pairs, axis=0)[:n_store],
+        np.zeros((n_probe, d))])
+    q = np.concatenate([rng.normal(size=(n - n_probe, d)), keys])
+    return (jnp.asarray(q, jnp.float32)[None, :, None, :],
+            jnp.asarray(k, jnp.float32)[None, :, None, :],
+            jnp.asarray(v, jnp.float32)[None, :, None, :],
+            np.asarray(vals, np.float32))
+
+
+def _recall_score(out, vals, pairs: int):
+    """Top-1 accuracy + mean correct-vs-best-confuser cosine margin of the
+    last ``pairs`` outputs against the stored value dictionary."""
+    probes = np.asarray(out)[0, -pairs:, 0]            # (P, d)
+    probes = probes / (np.linalg.norm(probes, axis=-1, keepdims=True)
+                       + 1e-30)
+    cos = probes @ vals.T                              # (P, P)
+    acc = float(np.mean(np.argmax(cos, axis=-1) == np.arange(pairs)))
+    own = cos[np.arange(pairs), np.arange(pairs)]
+    confuser = np.max(cos - 2.0 * np.eye(pairs), axis=-1)
+    return acc, float(np.mean(own - confuser))
+
+
+def recall_cell(smoke: bool, verbose: bool) -> dict:
+    """Association recall: multi-scale pyramid vs single-state LLN,
+    averaged over 3 deterministic stream seeds."""
+    n, granule, pairs, d = (1024, 32, 8, 32) if smoke else (4096, 32, 8, 32)
+    ls, decay, seeds = 6, 0.5, (0, 1, 2)
+    alpha = jnp.ones((1,), jnp.float32)
+    beta = jnp.ones((1,), jnp.float32)
+    accs = {"log_linear": [], "lln": []}
+    margins = {"log_linear": [], "lln": []}
+    for seed in seeds:
+        q, k, v, vals = _recall_stream(n, granule, pairs, d, seed=seed)
+        out_ml = kops.loglin_attention(q, k, v, alpha, beta, True, granule,
+                                       num_scales=ls, scale_decay=decay,
+                                       backend="scan")
+        out_ll = kops.lln_attention(q, k, v, alpha, beta, True, granule,
+                                    backend="scan")
+        for name, out in (("log_linear", out_ml), ("lln", out_ll)):
+            acc, margin = _recall_score(out, vals, pairs)
+            accs[name].append(acc)
+            margins[name].append(margin)
+    acc_ml = float(np.mean(accs["log_linear"]))
+    acc_ll = float(np.mean(accs["lln"]))
+    margin_ml = float(np.mean(margins["log_linear"]))
+    margin_ll = float(np.mean(margins["lln"]))
+    row = {"name": "recall",
+           "stream": {"tokens": n, "granule": granule, "pairs": pairs,
+                      "head_dim": d, "num_scales": ls,
+                      "scale_decay": decay, "seeds": list(seeds)},
+           "log_linear": {"top1_acc": acc_ml, "cos_margin": margin_ml},
+           "lln": {"top1_acc": acc_ll, "cos_margin": margin_ll},
+           "gate_acc": GATE_RECALL_ACC,
+           "pass": bool(acc_ml >= GATE_RECALL_ACC and acc_ml >= acc_ll
+                        and margin_ml > margin_ll)}
+    if verbose:
+        print(f"  recall@{n}: log_linear acc {acc_ml:.2f} margin "
+              f"{margin_ml:+.3f}  vs  lln acc {acc_ll:.2f} margin "
+              f"{margin_ll:+.3f}  ({'PASS' if row['pass'] else 'FAIL'})",
+              flush=True)
+    return row
+
+
+def decode_cost_cell(smoke: bool, verbose: bool) -> dict:
+    """Chunked decode wall clock: loglin_decode_chunk vs lln_decode_chunk
+    at serving shapes, min-of-repeats, jitted."""
+    b, h, d, dv, t = 4, 4, 64, 64, 16
+    granule, ls, decay = 16, 4, 0.5
+    steps, repeats = (8, 2) if smoke else (64, 5)
+    key = jax.random.PRNGKey(0)
+    alpha = jnp.full((b, h), 0.9, jnp.float32)
+    beta = jnp.full((b, h), 0.9, jnp.float32)
+
+    ll_st = core_lln.LLNState.init(b, h, d, dv)
+    ml_st = core_loglin.LogLinState.init(b, h, d, dv, ls)
+    pos0 = jnp.zeros((b,), jnp.int32)
+
+    @jax.jit
+    def step_ll(state, q, k, v):
+        return kops.lln_decode_chunk(state, q, k, v, alpha, beta)
+
+    @jax.jit
+    def step_ml(state, pos, q, k, v):
+        out, st = kops.loglin_decode_chunk(
+            state, q, k, v, alpha, beta, pos=pos, granule=granule,
+            num_scales=ls, scale_decay=decay)
+        return out, st, pos + t
+
+    def loop_ll():
+        st = ll_st
+        for i in range(steps):
+            kk = jax.random.fold_in(key, i)
+            q, k, v = (jax.random.normal(jax.random.fold_in(kk, j),
+                                         (b, t, h, d)) for j in range(3))
+            out, st = step_ll(st, q, k, v)
+        return out.block_until_ready()
+
+    def loop_ml():
+        st, pos = ml_st, pos0
+        for i in range(steps):
+            kk = jax.random.fold_in(key, i)
+            q, k, v = (jax.random.normal(jax.random.fold_in(kk, j),
+                                         (b, t, h, d)) for j in range(3))
+            out, st, pos = step_ml(st, pos, q, k, v)
+        return out.block_until_ready()
+
+    loop_ll(), loop_ml()                               # compile
+    walls = {"lln": [], "log_linear": []}
+    for it in range(repeats):
+        order = (("lln", loop_ll), ("log_linear", loop_ml)) if it % 2 == 0 \
+            else (("log_linear", loop_ml), ("lln", loop_ll))
+        for name, fn in order:
+            t0 = time.perf_counter()
+            fn()
+            walls[name].append(time.perf_counter() - t0)
+    s_ll, s_ml = min(walls["lln"]), min(walls["log_linear"])
+    toks = b * t * steps
+    ratio = s_ml / s_ll
+    row = {"name": "decode_cost",
+           "shapes": {"batch": b, "heads": h, "head_dim": d, "chunk": t,
+                      "granule": granule, "num_scales": ls,
+                      "steps": steps},
+           "tok_s": {"lln": toks / s_ll, "log_linear": toks / s_ml},
+           "wall_s": {"lln": s_ll, "log_linear": s_ml},
+           "overhead_ratio": ratio, "gate_ratio": GATE_DECODE_RATIO,
+           "pass": bool(ratio <= GATE_DECODE_RATIO)}
+    if verbose:
+        print(f"  decode lln {toks / s_ll:8.0f} tok/s -> log_linear "
+              f"{toks / s_ml:8.0f} tok/s  x{ratio:.2f} "
+              f"({'PASS' if row['pass'] else 'FAIL'} <= "
+              f"{GATE_DECODE_RATIO}x)", flush=True)
+    return row
+
+
+def run(out_path: str = DEFAULT_OUT, smoke: bool = False,
+        verbose: bool = True) -> dict:
+    if verbose:
+        print(f"== log-linear state: bytes / recall / decode cost "
+              f"({'smoke' if smoke else 'full'}) ==", flush=True)
+    rows = [state_bytes_cell(verbose), recall_cell(smoke, verbose),
+            decode_cost_cell(smoke, verbose)]
+    report = {
+        "backend": jax.default_backend(),
+        "gates": {
+            "state_bytes": f"32k-row decode state <= {GATE_STATE_RATIO}x "
+                           "the ideal ceil(log2 N) * d * dv fp32 bucket "
+                           "budget",
+            "recall": f"multi-scale top-1 retrieval accuracy >= "
+                      f"{GATE_RECALL_ACC} AND >= single-state lln, with a "
+                      "strictly larger correct-vs-confuser cosine margin",
+            "decode_cost": f"chunked loglin decode wall clock <= "
+                           f"{GATE_DECODE_RATIO}x lln decode (smoke runs "
+                           "are informational)",
+        },
+        "results": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    if verbose:
+        print(f"wrote {out_path}")
+    return report
+
+
+def run_rows(verbose: bool = True):
+    """benchmarks/run.py adapter: (name, us_per_call, derived) CSV rows —
+    us = log_linear decode wall clock, derived = pass fraction."""
+    report = run(verbose=verbose)
+    rows = report["results"]
+    cost = next(r for r in rows if r["name"] == "decode_cost")
+    passed = sum(1 for r in rows if r["pass"]) / len(rows)
+    return [("loglinear_state", cost["wall_s"]["log_linear"] * 1e6, passed)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small recall stream + short decode loop (CI)")
+    args = ap.parse_args()
+    report = run(args.out, smoke=args.smoke)
+    # Smoke-scale wall clocks are too noisy to hard-gate (policy of
+    # bench_robustness/bench_longctx); memory + recall always count.
+    gated = [r for r in report["results"]
+             if not (args.smoke and r["name"] == "decode_cost")]
+    if not all(r["pass"] for r in gated):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,10 @@ Three stages, each skippable, all on by default:
      ``target_passes_per_iter <= 1.25`` on every row;
    * ``BENCH_batching.json`` — continuous goodput >= 1.3x static on at
      least one cell, and every pooled-speculative cell commits
-     ``goodput_tokens_per_iter`` in [1, spec_k + 1].
+     ``goodput_tokens_per_iter`` in [1, spec_k + 1];
+   * ``BENCH_loglinear.json`` — 32k-row state bytes <= 2x the ideal
+     log2(N) bucket budget, multi-scale recall beats single-state lln
+     (accuracy + cosine margin), chunked decode overhead <= 3x lln.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.ci_check [--no-tier1] \
@@ -45,6 +48,7 @@ SMOKES = (
     ("benchmarks.bench_dispatch", "BENCH_dispatch.json"),
     ("benchmarks.bench_robustness", "BENCH_robustness.json"),
     ("benchmarks.bench_longctx", "BENCH_longctx.json"),
+    ("benchmarks.bench_loglinear", "BENCH_loglinear.json"),
 )
 
 
@@ -117,6 +121,36 @@ def _batching_gates(report) -> list:
     return fails
 
 
+def _loglinear_gates(report) -> list:
+    fails = []
+    rows = {r.get("name"): r for r in report.get("results", [])}
+    sb = rows.get("state_bytes")
+    if sb is None:
+        fails.append("missing state_bytes row")
+    elif not sb.get("ratio_vs_ideal", 99.0) <= sb.get("gate_ratio", 2.0):
+        fails.append(f"state_bytes: ratio_vs_ideal {sb['ratio_vs_ideal']} "
+                     f"> {sb.get('gate_ratio')}")
+    rc = rows.get("recall")
+    if rc is None:
+        fails.append("missing recall row")
+    else:
+        ml, ll = rc.get("log_linear", {}), rc.get("lln", {})
+        if not ml.get("top1_acc", 0) >= rc.get("gate_acc", 0.85):
+            fails.append(f"recall: log_linear acc {ml.get('top1_acc')} "
+                         f"< {rc.get('gate_acc')}")
+        if not ml.get("top1_acc", 0) >= ll.get("top1_acc", 1):
+            fails.append("recall: log_linear acc below single-state lln")
+        if not ml.get("cos_margin", -1) > ll.get("cos_margin", 1):
+            fails.append("recall: log_linear cos margin not above lln")
+    dc = rows.get("decode_cost")
+    if dc is None:
+        fails.append("missing decode_cost row")
+    elif not dc.get("overhead_ratio", 99.0) <= dc.get("gate_ratio", 3.0):
+        fails.append(f"decode_cost: overhead_ratio "
+                     f"{dc['overhead_ratio']} > {dc.get('gate_ratio')}")
+    return fails
+
+
 def _gate_fields(fname, report) -> dict:
     """The gate-relevant scalars of a report, flattened for the diff."""
     out = {}
@@ -133,13 +167,24 @@ def _gate_fields(fname, report) -> dict:
             sp = r.get("continuous_spec") or {}
             out[f"{r['name']}.spec_goodput_per_iter"] = \
                 sp.get("goodput_tokens_per_iter")
+    elif fname == "BENCH_loglinear.json":
+        for r in report.get("results", []):
+            if r.get("name") == "state_bytes":
+                out["state_bytes.ratio_vs_ideal"] = r.get("ratio_vs_ideal")
+            elif r.get("name") == "recall":
+                out["recall.log_linear_acc"] = \
+                    r.get("log_linear", {}).get("top1_acc")
+                out["recall.lln_acc"] = r.get("lln", {}).get("top1_acc")
+            elif r.get("name") == "decode_cost":
+                out["decode_cost.overhead_ratio"] = r.get("overhead_ratio")
     return out
 
 
 def diff_gates(out_dir: str) -> bool:
     ok = True
     for fname, checker in (("BENCH_spec.json", _spec_gates),
-                           ("BENCH_batching.json", _batching_gates)):
+                           ("BENCH_batching.json", _batching_gates),
+                           ("BENCH_loglinear.json", _loglinear_gates)):
         committed = _load(os.path.join(ROOT, fname))
         if committed is None:
             print(f"FAIL: missing/unreadable {fname}", flush=True)

@@ -23,6 +23,10 @@ Prints ``name,us_per_call,derived`` CSV rows per the repo convention:
                        beta(n) on, gated on z pinned / fp32-safe state /
                        renorm invariance / flat concentration telemetry
                        (writes BENCH_longctx.json)
+  bench_loglinear      log_linear multi-scale state: O(log N * d^2) state
+                       bytes, association-recall vs single-state lln, and
+                       bounded chunked-decode overhead (writes
+                       BENCH_loglinear.json)
 
 Roofline terms (EXPERIMENTS.md §Roofline) are produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts.
@@ -35,8 +39,9 @@ import time
 
 def main() -> None:
     from . import (bench_batching, bench_concentration, bench_convergence,
-                   bench_dispatch, bench_distribution, bench_longctx,
-                   bench_robustness, bench_scaling, bench_serve, bench_spec)
+                   bench_dispatch, bench_distribution, bench_loglinear,
+                   bench_longctx, bench_robustness, bench_scaling,
+                   bench_serve, bench_spec)
 
     class _ServeAdapter:
         run = staticmethod(bench_serve.run_rows)
@@ -56,6 +61,9 @@ def main() -> None:
     class _LongctxAdapter:
         run = staticmethod(bench_longctx.run_rows)
 
+    class _LoglinearAdapter:
+        run = staticmethod(bench_loglinear.run_rows)
+
     modules = [("distribution", bench_distribution),
                ("concentration", bench_concentration),
                ("convergence", bench_convergence),
@@ -65,7 +73,8 @@ def main() -> None:
                ("dispatch", _DispatchAdapter),
                ("spec", _SpecAdapter),
                ("robustness", _RobustnessAdapter),
-               ("longctx", _LongctxAdapter)]
+               ("longctx", _LongctxAdapter),
+               ("loglinear", _LoglinearAdapter)]
     all_rows = []
     for name, mod in modules:
         print(f"== {name} ==", file=sys.stderr, flush=True)

@@ -25,7 +25,9 @@ class ArchConfig:
     head_dim: Optional[int] = None   # default d_model // n_heads
 
     # --- attention ---------------------------------------------------------
-    attn_impl: str = "softmax"       # softmax | lln | lln_diag (paper technique)
+    attn_impl: str = "softmax"       # softmax | lln | lln_diag (paper
+                                     # technique) | log_linear (Fenwick
+                                     # multi-scale LLN state)
     diag_block: int = 256
     lln_chunk: int = 256
     use_kernel: bool = False         # Pallas kernels (TPU); jnp path on CPU
@@ -54,6 +56,11 @@ class ArchConfig:
                                      # |z| magnitude: rescale (s, z) against
                                      # the per-row log-scale when max|z|
                                      # exceeds it (0 = off)
+    lln_num_scales: int = 4          # log_linear only: Fenwick pyramid depth
+                                     # L — level l holds a dyadic span of 2^l
+                                     # closed lln_chunk granules (L=1 == lln)
+    lln_scale_decay: float = 0.5     # log_linear only: per-level mix weight
+                                     # w_l = decay^l (1.0 == flat == lln)
 
     # --- speculative decoding ------------------------------------------------
     draft_layers: int = 0            # tied first-k-layers draft (0 = off;

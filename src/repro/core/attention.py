@@ -33,10 +33,11 @@ NEG_INF = -1e30
 
 @dataclasses.dataclass(frozen=True)
 class AttnConfig:
-    impl: str = "softmax"          # softmax | lln | lln_diag
+    impl: str = "softmax"          # softmax | lln | lln_diag | log_linear
     causal: bool = True
     diag_block: int = 256          # block size of the §4.2 diagonal component
-    lln_chunk: int = 128           # chunk of the causal LLN scan
+    lln_chunk: int = 128           # chunk of the causal LLN scan (also the
+                                   # log_linear bucket granule)
     softmax_chunk: int = 1024      # key-chunk of the flash softmax path
     use_kernel: bool = False       # route through Pallas kernels (kernels/ops)
     backend: Optional[str] = None  # explicit kernel backend (kernels/registry
@@ -46,6 +47,10 @@ class AttnConfig:
     mm_b: Optional[float] = None
     # Fixed alpha=beta (paper §A.8.4 ablation); 0 = dynamic moment matching.
     fixed_ab: float = 0.0
+    # log_linear only: Fenwick pyramid depth and per-level mix decay
+    # (core/loglinear.py; num_scales=1 or scale_decay=1 reduce to lln).
+    num_scales: int = 4
+    scale_decay: float = 0.5
 
 
 def _repeat_kv(t: jnp.ndarray, h: int) -> jnp.ndarray:
@@ -314,12 +319,23 @@ def multi_head_attention(
                              lln_chunk=cfg.lln_chunk,
                              diag_block=cfg.diag_block,
                              softmax_chunk=cfg.softmax_chunk,
-                             fixed_ab=cfg.fixed_ab)
+                             fixed_ab=cfg.fixed_ab,
+                             num_scales=cfg.num_scales,
+                             scale_decay=cfg.scale_decay)
         return kreg.attention(spec, q, k, v, alpha, beta)
 
     kv_k = _repeat_kv(k, h)
     kv_v = _repeat_kv(v, h)
     beta_h = jnp.repeat(beta, h // g, axis=-1) if g != h else beta
+    if cfg.impl == "log_linear":
+        if not cfg.causal:
+            raise ValueError("log_linear attention is causal-only")
+        from . import loglinear as _loglin
+        out, _ = _loglin.prefill(q, kv_k, kv_v, alpha, beta_h,
+                                 granule=cfg.lln_chunk,
+                                 num_scales=cfg.num_scales,
+                                 scale_decay=cfg.scale_decay)
+        return out.astype(v.dtype)
     if cfg.causal:
         lln_out = lln_causal(q, kv_k, kv_v, alpha, beta_h, chunk=cfg.lln_chunk)
     else:

@@ -33,7 +33,8 @@ from . import attention as ca
 from . import health as health_mod
 from . import moment_matching as mm
 from .attention import KVCache, LLNDecodeState, batch_alpha_beta
-from .lln import LLNState
+from .lln import LLNState, commit_lengths
+from .loglinear import LogLinState
 from repro.kernels import registry as kreg
 from repro.kernels.registry import AttnSpec
 
@@ -55,6 +56,11 @@ class AttentionState:
                 (B,1,H,1) fp32, ``tail_k``/``tail_v`` (B,BLK,G,D[v]),
                 ``pos`` (B,), ``alpha``/``beta`` (B,H) fp32,
                 ``log_scale`` (B,H) fp32 accumulated drift-renorm shift
+    log_linear  lln leaves (no tails) plus the Fenwick bucket pyramid:
+                ``sl`` (B,L,H,D,Dv), ``zl`` (B,L,H,D), ``cl`` (B,L,H)
+                fp32 — level l summarizes a dyadic span of 2^l closed
+                granules; occupancy is derived from ``pos``
+                (``core/loglinear.py:occupancy``), so no extra counter
     MLA latent  ``ckv`` (B,S,kv_lora), ``kr`` (B,S,rd), ``len`` (B,)
     ==========  =======================================================
 
@@ -77,6 +83,9 @@ class AttentionState:
     alpha: Optional[jnp.ndarray] = None
     beta: Optional[jnp.ndarray] = None
     log_scale: Optional[jnp.ndarray] = None
+    sl: Optional[jnp.ndarray] = None
+    zl: Optional[jnp.ndarray] = None
+    cl: Optional[jnp.ndarray] = None
     ckv: Optional[jnp.ndarray] = None
     kr: Optional[jnp.ndarray] = None
 
@@ -183,6 +192,19 @@ class AttentionEngine:
                 k=jnp.zeros((batch, max_len, g, d), self.state_dtype),
                 v=jnp.zeros((batch, max_len, g, dv), self.state_dtype),
                 len=jnp.zeros((batch,), jnp.int32))
+        if self.spec.impl == "log_linear":
+            ls = self.spec.num_scales
+            return AttentionState(
+                s=jnp.zeros((batch, h, d, dv), jnp.float32),
+                z=jnp.zeros((batch, h, d), jnp.float32),
+                c_k=jnp.zeros((batch, 1, h, 1), jnp.float32),
+                sl=jnp.zeros((batch, ls, h, d, dv), jnp.float32),
+                zl=jnp.zeros((batch, ls, h, d), jnp.float32),
+                cl=jnp.zeros((batch, ls, h), jnp.float32),
+                pos=jnp.zeros((batch,), jnp.int32),
+                alpha=jnp.ones((batch, h), jnp.float32),
+                beta=jnp.ones((batch, h), jnp.float32),
+                log_scale=jnp.zeros((batch, h), jnp.float32))
         blk = self.spec.diag_block
         return AttentionState(
             s=jnp.zeros((batch, h, d, dv), jnp.float32),
@@ -240,7 +262,8 @@ class AttentionEngine:
             lln_chunk=spec.lln_chunk, softmax_chunk=spec.softmax_chunk,
             use_kernel=spec.backend != "ref",
             backend=None if spec.backend == "auto" else spec.backend,
-            fixed_ab=spec.fixed_ab, mm_a=spec.mm_a, mm_b=spec.mm_b)
+            fixed_ab=spec.fixed_ab, mm_a=spec.mm_a, mm_b=spec.mm_b,
+            num_scales=spec.num_scales, scale_decay=spec.scale_decay)
         return ca.multi_head_attention(q, k, v, acfg, mask=mask,
                                        alpha=alpha, beta=beta,
                                        prefix_len=prefix_len)
@@ -282,6 +305,20 @@ class AttentionEngine:
         if gain is not None:
             use_alpha = jnp.asarray(alpha, jnp.float32) * gain
             use_beta = jnp.asarray(beta, jnp.float32) * gain
+        if spec.impl == "log_linear":
+            out, s, z, c_k, sl, zl, cl = kreg.loglin_prefill(
+                spec, q, k, v, use_alpha, use_beta)
+            beta_h = jnp.asarray(beta, jnp.float32)
+            if beta_h.shape[-1] == g and g != h:
+                beta_h = jnp.repeat(beta_h, h // g, axis=-1)
+            state = AttentionState(
+                s=s, z=z, c_k=c_k, sl=sl, zl=zl, cl=cl,
+                pos=jnp.full((b,), n, jnp.int32),
+                alpha=jnp.broadcast_to(jnp.asarray(alpha, jnp.float32),
+                                       (b, h)).astype(jnp.float32),
+                beta=jnp.broadcast_to(beta_h, (b, h)).astype(jnp.float32),
+                log_scale=jnp.zeros((b, h), jnp.float32))
+            return out, state
         lln_out, s, z, c_k = kreg.prefill(spec, q, k, v, use_alpha,
                                           use_beta)
         if spec.impl == "lln_diag":
@@ -325,10 +362,6 @@ class AttentionEngine:
                 q, k, v, chunk=spec.softmax_chunk, row_mask=row_mask,
                 commit_len=commit_len)
             return out, state.replace(k=kv2.k, v=kv2.v, len=kv2.length)
-        st = LLNDecodeState(
-            lln=LLNState(s=state.s, z=state.z, c_k=state.c_k,
-                         log_scale=state.log_scale),
-            tail_k=state.tail_k, tail_v=state.tail_v, pos=state.pos)
         # beta(n) schedule: each row's effective calibration keys off its
         # OWN depth (state.pos) — a 400k-context row and a 2k row in the
         # same pool decode at different temperatures.  The stored
@@ -339,6 +372,25 @@ class AttentionEngine:
             gain = gain[..., None] if gain.ndim else gain    # (B,1) / ()
             alpha_d = state.alpha * gain
             beta_d = state.beta * gain
+        if spec.impl == "log_linear":
+            st = LogLinState(s=state.s, z=state.z, c_k=state.c_k,
+                             sl=state.sl, zl=state.zl, cl=state.cl,
+                             log_scale=state.log_scale)
+            out, st2 = kreg.decode_chunk(spec, st, q, k, v, alpha_d,
+                                         beta_d, row_mask=row_mask,
+                                         commit_len=commit_len,
+                                         pos=state.pos)
+            t = q.shape[1]
+            adv = commit_lengths(
+                commit_len if commit_len is not None
+                else jnp.full((q.shape[0],), t, jnp.int32), row_mask, t)
+            return out, state.replace(
+                s=st2.s, z=st2.z, c_k=st2.c_k, sl=st2.sl, zl=st2.zl,
+                cl=st2.cl, log_scale=st2.log_scale, pos=state.pos + adv)
+        st = LLNDecodeState(
+            lln=LLNState(s=state.s, z=state.z, c_k=state.c_k,
+                         log_scale=state.log_scale),
+            tail_k=state.tail_k, tail_v=state.tail_v, pos=state.pos)
         out, st2 = ca.decode_lln_chunk(st, q, k, v, alpha_d, beta_d,
                                        impl=spec.impl, row_mask=row_mask,
                                        backend=spec.backend,
@@ -403,15 +455,29 @@ class AttentionEngine:
                 KVCache(k=state.k, v=state.v, length=state.len), k, v,
                 commit_len=commit_len, row_mask=row_mask)
             return state.replace(k=kv2.k, v=kv2.v, len=kv2.length)
-        st = LLNDecodeState(
-            lln=LLNState(s=state.s, z=state.z, c_k=state.c_k,
-                         log_scale=state.log_scale),
-            tail_k=state.tail_k, tail_v=state.tail_v, pos=state.pos)
         beta_d = state.beta
         gain = self._length_gain(state.pos)
         if gain is not None:
             gain = gain[..., None] if gain.ndim else gain
             beta_d = state.beta * gain
+        if spec.impl == "log_linear":
+            st = LogLinState(s=state.s, z=state.z, c_k=state.c_k,
+                             sl=state.sl, zl=state.zl, cl=state.cl,
+                             log_scale=state.log_scale)
+            st2 = kreg.commit_chunk(spec, st, k, v, beta_d,
+                                    row_mask=row_mask,
+                                    commit_len=commit_len, pos=state.pos)
+            t = k.shape[1]
+            adv = commit_lengths(
+                commit_len if commit_len is not None
+                else jnp.full((k.shape[0],), t, jnp.int32), row_mask, t)
+            return state.replace(
+                s=st2.s, z=st2.z, c_k=st2.c_k, sl=st2.sl, zl=st2.zl,
+                cl=st2.cl, log_scale=st2.log_scale, pos=state.pos + adv)
+        st = LLNDecodeState(
+            lln=LLNState(s=state.s, z=state.z, c_k=state.c_k,
+                         log_scale=state.log_scale),
+            tail_k=state.tail_k, tail_v=state.tail_v, pos=state.pos)
         st2 = ca.commit_lln_chunk(st, k, v, beta_d, impl=spec.impl,
                                   commit_len=commit_len, row_mask=row_mask,
                                   backend=spec.backend,

@@ -1,0 +1,553 @@
+"""Log-linear multi-scale LLN state: a Fenwick-tree pyramid of buckets.
+
+One LLN ``(s, z)`` running sum compresses the whole context into a single
+O(d^2) state — expressive for concentration (the paper's point) but unable
+to weight recent tokens differently from distant ones.  Following
+Log-Linear Attention (Guo, Yang, Dao & Kim 2025; PAPERS.md), this module
+replaces the single state with O(log N) dyadic buckets arranged as a
+binary counter (Fenwick layout): closing one ``granule``-sized chunk of
+keys inserts a level-0 bucket; two level-l buckets merge into one
+level-(l+1) bucket exactly like a carry in binary increment.  After ``n``
+closed granules the occupied levels are the set bits of ``n`` (the top
+level saturates — see :func:`occupancy`), and bucket level ``l`` holds a
+contiguous dyadic span of ``2^l`` granules.
+
+Scoring mixes the buckets with derived per-scale weights
+``w_l = scale_decay**l`` under ONE shared normalizer:
+
+    out_i = (sum_l w_l Phi(q_i) . S_l  +  Phi(q_i) . S_open  +  intra_i)
+            / (same with z  +  EPS)
+
+The open (partially filled) granule and the intra-chunk keys score at
+``w_0 = 1``.  ``scale_decay = 1`` makes every weight 1 and the bucket sums
+telescope back to the single LLN state — plain ``lln`` exactly.  With
+``scale_decay = 0.5`` each level contributes ~constant total mass
+(``w_l * 2^l ~ 1``), so the normalizer grows ~log N instead of ~N and a
+single distant associated key is diluted by 1/log N rather than 1/N —
+the mechanism by which multi-scale wins the association-recall proxy
+(``benchmarks/bench_loglinear.py``).
+
+Numerics follow ``core/lln.py``: every bucket carries its own reference
+constant (``cl`` per level, ``c_k`` for the open bucket); merges rescale
+both operands to the max of their references; the drift renorm raises a
+bucket's reference by ``ln(max_d z)`` and scales ``(s, z)`` down — exact,
+because the mix weights repay ``exp(cl - c_out)`` at scoring time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .lln import EPS, _bcast, _stab_const, commit_lengths
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LogLinState:
+    """Multi-scale decode state for one layer (full H query heads).
+
+    s / z / c_k / log_scale: the OPEN bucket — the partially filled
+        current granule, exactly an ``LLNState`` (same shapes, same
+        renorm semantics).  s (B,H,D,Dv) f32, z (B,H,D) f32, c_k
+        (B,1,H,1) f32, log_scale (B,H) f32.
+    sl: (B, L, H, D, Dv) f32 — closed-bucket pyramid, level l at index l.
+    zl: (B, L, H, D) f32.
+    cl: (B, L, H) f32 — per-bucket reference constants.  Unoccupied
+        levels hold zeros (occupancy is DERIVED from the row position,
+        not stored — see :func:`occupancy`).
+    """
+    s: jnp.ndarray
+    z: jnp.ndarray
+    c_k: jnp.ndarray
+    sl: jnp.ndarray
+    zl: jnp.ndarray
+    cl: jnp.ndarray
+    log_scale: Optional[jnp.ndarray] = None
+
+    @staticmethod
+    def init(batch: int, heads: int, d: int, dv: int,
+             num_scales: int) -> "LogLinState":
+        return LogLinState(
+            s=jnp.zeros((batch, heads, d, dv), jnp.float32),
+            z=jnp.zeros((batch, heads, d), jnp.float32),
+            c_k=jnp.zeros((batch, 1, heads, 1), jnp.float32),
+            sl=jnp.zeros((batch, num_scales, heads, d, dv), jnp.float32),
+            zl=jnp.zeros((batch, num_scales, heads, d), jnp.float32),
+            cl=jnp.zeros((batch, num_scales, heads), jnp.float32),
+            log_scale=jnp.zeros((batch, heads), jnp.float32))
+
+
+def level_weights(num_scales: int, scale_decay: float) -> jnp.ndarray:
+    """Derived per-scale mix weights ``w_l = scale_decay**l`` (L,) f32."""
+    return jnp.asarray([float(scale_decay) ** l for l in range(num_scales)],
+                       jnp.float32)
+
+
+def occupancy(n: jnp.ndarray, num_scales: int) -> jnp.ndarray:
+    """Which pyramid levels hold a bucket after ``n`` closed granules.
+
+    Binary-counter layout: level ``l < L-1`` is occupied iff bit ``l`` of
+    ``n`` is set; the TOP level saturates (``n >= 2^(L-1)``) — carries
+    past it merge into it instead of overflowing, so the top bucket's
+    span keeps growing while the lower bits stay exact binary arithmetic.
+    Returns (..., L) float32 in {0, 1}.
+    """
+    n = jnp.asarray(n, jnp.int32)
+    if num_scales == 1:
+        return (n[..., None] >= 1).astype(jnp.float32)
+    ls = jnp.arange(num_scales - 1, dtype=jnp.int32)
+    low = ((n[..., None] >> ls) & 1).astype(jnp.float32)
+    top = (n >= 2 ** (num_scales - 1)).astype(jnp.float32)
+    return jnp.concatenate([low, top[..., None]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Quadratic oracle — the test reference.  Materializes, for every
+# (query t, key j) pair, the level that key's granule sits at in the
+# pyramid layout of t's granule count, and scores the full weighted
+# quadratic.  O(N^2); never a serving path.
+# ---------------------------------------------------------------------------
+
+def level_matrix(n: int, *, granule: int, num_scales: int) -> jnp.ndarray:
+    """(N, N) int32: pyramid level of key j as seen by query t (both
+    0-indexed positions, prefix starting at position 0).  Intra-granule
+    keys (the open bucket) are level 0; entries above the diagonal are
+    level 0 too (callers mask causally)."""
+    pos = jnp.arange(n, dtype=jnp.int32)
+    gq = pos // granule                      # query's granule == closed count
+    gj = (pos // granule)[None, :]           # key's granule
+    nq = gq[:, None]
+    ls = num_scales
+    top_count = nq - (nq & ((1 << (ls - 1)) - 1))   # low L-1 bits cleared
+    lev = jnp.where(gj < top_count, ls - 1, 0)
+    for l in range(ls - 1):
+        hi = (nq >> (l + 1)) << (l + 1)
+        in_l = (((nq >> l) & 1) == 1) & (gj >= hi) \
+            & (gj < hi + (1 << l)) & (gj >= top_count)
+        lev = jnp.where(in_l, l, lev)
+    return jnp.where(gj == nq, 0, lev)
+
+
+def loglin_attention_ref(q, k, v, alpha, beta, *, granule: int,
+                         num_scales: int, scale_decay: float) -> jnp.ndarray:
+    """Causal multi-scale LLN attention, quadratic form (full H heads).
+
+    Weight of key j for query t is ``scale_decay**level(t, j)`` where the
+    level follows the Fenwick layout at t's granule count; intra-granule
+    and open-bucket keys weigh 1.  ``scale_decay=1`` or ``num_scales=1``
+    reduce exactly to plain causal LLN.
+    """
+    b, n, h, d = q.shape
+    aq = q * _bcast(alpha, q)
+    bk = k * _bcast(beta, k)
+    fq = jnp.exp(aq - _stab_const(aq, (1, 3))).astype(jnp.float32)
+    fk = jnp.exp(bk - _stab_const(bk, (1, 3))).astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    lev = level_matrix(n, granule=granule, num_scales=num_scales)
+    w = (jnp.float32(scale_decay) ** lev.astype(jnp.float32)) \
+        * jnp.tril(jnp.ones((n, n), jnp.float32))
+    scores = jnp.einsum("bihd,bjhd->bhij", fq, fk) * w[None, None]
+    num = jnp.einsum("bhij,bjhv->bihv", scores, vf)
+    den = jnp.sum(scores, axis=-1).transpose(0, 2, 1)            # (B,N,H)
+    return (num / (den[..., None] + EPS)).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: chunked scan over granules carrying the bucket pyramid.
+# One global stabilization constant per (batch, head) — every bucket is
+# built at the same reference, so the in-scan cascade merges are pure adds.
+# ---------------------------------------------------------------------------
+
+def _cascade_same_ref(sl, zl, g_s, g_z, i, num_scales: int):
+    """Insert a freshly closed granule (``g_s``/``g_z``) into a pyramid
+    whose buckets all share ONE reference constant.  ``i`` is the closed
+    count BEFORE this insert (occupancy bits).  Binary-increment carry:
+    merge-and-propagate while the level is occupied; the top saturates."""
+    inc_s, inc_z = g_s, g_z
+    carry = jnp.asarray(True)
+    new_s, new_z = [], []
+    for l in range(num_scales - 1):
+        occ = ((i >> l) & 1) == 1
+        mrg = carry & occ
+        take = carry & ~occ
+        new_s.append(jnp.where(take, inc_s,
+                               jnp.where(mrg, 0.0, sl[:, l])))
+        new_z.append(jnp.where(take, inc_z,
+                               jnp.where(mrg, 0.0, zl[:, l])))
+        inc_s = jnp.where(mrg, sl[:, l] + inc_s, inc_s)
+        inc_z = jnp.where(mrg, zl[:, l] + inc_z, inc_z)
+        carry = mrg
+    top = num_scales - 1
+    new_s.append(jnp.where(carry, sl[:, top] + inc_s, sl[:, top]))
+    new_z.append(jnp.where(carry, zl[:, top] + inc_z, zl[:, top]))
+    return jnp.stack(new_s, axis=1), jnp.stack(new_z, axis=1)
+
+
+def prefill(q, k, v, alpha, beta, *, granule: int, num_scales: int,
+            scale_decay: float):
+    """Causal multi-scale forward over a prompt; returns
+    ``(out, LogLinState)``.  Ragged lengths are first-class: the trailing
+    ``n % granule`` keys land in the open bucket.
+
+    q: (B,N,H,D); k/v: (B,N,H,D[v]) (full heads — callers repeat KV for
+    GQA, as with ``core/lln.py``)."""
+    b, n, h, d = q.shape
+    dv = v.shape[-1]
+    ls = num_scales
+    aq = q * _bcast(alpha, q)
+    bk = k * _bcast(beta, k)
+    c_q = _stab_const(aq, (1, 3))
+    c_k = _stab_const(bk, (1, 3))
+    fq = jnp.exp(aq - c_q).astype(jnp.float32)
+    fk = jnp.exp(bk - c_k).astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = level_weights(ls, scale_decay)
+    nf = n // granule
+    tail = n - nf * granule
+    sl = jnp.zeros((b, ls, h, d, dv), jnp.float32)
+    zl = jnp.zeros((b, ls, h, d), jnp.float32)
+    pieces = []
+    if nf:
+        causal = jnp.tril(jnp.ones((granule, granule), jnp.float32))
+        fqc = fq[:, :nf * granule].reshape(b, nf, granule, h, d) \
+            .transpose(1, 0, 2, 3, 4)
+        fkc = fk[:, :nf * granule].reshape(b, nf, granule, h, d) \
+            .transpose(1, 0, 2, 3, 4)
+        vfc = vf[:, :nf * granule].reshape(b, nf, granule, h, dv) \
+            .transpose(1, 0, 2, 3, 4)
+
+        def step(carry, xs):
+            slc, zlc = carry
+            i, cq, ck, cv = xs
+            occf = occupancy(i, ls)                       # (L,)
+            wvec = w * occf
+            s_eff = jnp.einsum("l,blhdv->bhdv", wvec, slc)
+            z_eff = jnp.einsum("l,blhd->bhd", wvec, zlc)
+            scores = jnp.einsum("bihd,bjhd->bhij", cq, ck) \
+                * causal[None, None]
+            intra = jnp.einsum("bhij,bjhv->bihv", scores, cv)
+            intra_z = jnp.sum(scores, axis=-1).transpose(0, 2, 1)
+            inter = jnp.einsum("bihd,bhdv->bihv", cq, s_eff)
+            inter_z = jnp.einsum("bihd,bhd->bih", cq, z_eff)
+            out = (intra + inter) / (intra_z + inter_z + EPS)[..., None]
+            g_s = jnp.einsum("bjhd,bjhv->bhdv", ck, cv)
+            g_z = jnp.sum(ck, axis=1)
+            slc, zlc = _cascade_same_ref(slc, zlc, g_s, g_z, i, ls)
+            return (slc, zlc), out
+
+        (sl, zl), outs = jax.lax.scan(
+            jax.checkpoint(step), (sl, zl),
+            (jnp.arange(nf, dtype=jnp.int32), fqc, fkc, vfc))
+        pieces.append(outs.transpose(1, 0, 2, 3, 4)
+                      .reshape(b, nf * granule, h, dv))
+    if tail:
+        tq, tk, tv = fq[:, -tail:], fk[:, -tail:], vf[:, -tail:]
+        occf = occupancy(jnp.asarray(nf, jnp.int32), ls)
+        wvec = w * occf
+        s_eff = jnp.einsum("l,blhdv->bhdv", wvec, sl)
+        z_eff = jnp.einsum("l,blhd->bhd", wvec, zl)
+        tri = jnp.tril(jnp.ones((tail, tail), jnp.float32))
+        scores = jnp.einsum("bihd,bjhd->bhij", tq, tk) * tri[None, None]
+        intra = jnp.einsum("bhij,bjhv->bihv", scores, tv)
+        intra_z = jnp.sum(scores, axis=-1).transpose(0, 2, 1)
+        inter = jnp.einsum("bihd,bhdv->bihv", tq, s_eff)
+        inter_z = jnp.einsum("bihd,bhd->bih", tq, z_eff)
+        pieces.append((intra + inter)
+                      / (intra_z + inter_z + EPS)[..., None])
+        s_open = jnp.einsum("bjhd,bjhv->bhdv", tk, tv)
+        z_open = jnp.sum(tk, axis=1)
+    else:
+        s_open = jnp.zeros((b, h, d, dv), jnp.float32)
+        z_open = jnp.zeros((b, h, d), jnp.float32)
+    out = jnp.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
+    cl = jnp.broadcast_to(c_k[:, 0, :, 0][:, None, :], (b, ls, h)) \
+        .astype(jnp.float32)
+    state = LogLinState(
+        s=s_open, z=z_open, c_k=c_k.astype(jnp.float32),
+        sl=sl, zl=zl, cl=cl,
+        log_scale=jnp.zeros((b, h), jnp.float32))
+    return out.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Decode: chunked multi-token advance with at most one dyadic boundary.
+# ---------------------------------------------------------------------------
+
+def _sel(mask, a, b):
+    """Per-row select: broadcast a (B,) bool over a's trailing dims."""
+    return jnp.where(mask.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+
+
+def _advance(state: LogLinState, bk, vf, *, pos, granule: int,
+             num_scales: int, row_mask, commit_len, renorm, t: int):
+    """The ONE state-advance computation shared by decode and commit.
+
+    ``bk`` = beta*k (B,T,H,D) f32; ``vf`` (B,T,H,Dv) f32; ``pos`` (B,)
+    int32 tokens already folded.  Returns ``(new_state, aux)`` where
+    ``aux`` carries everything scoring needs: ``(cl_c, split, crossed,
+    occ, occ2, sl2, zl2, cl2)`` — the cascaded pyramid folds ALL
+    pre-boundary chunk keys (what a sequential decode would have seen),
+    while the committed state folds only ``j < commit_len`` per the
+    partial-commit contract.  When the commit crosses the boundary the
+    two folds coincide (crossing requires every pre-boundary key to be
+    committed), so commit == decode bitwise.
+    """
+    b, _, h, d = bk.shape
+    ls = num_scales
+    cl_c = commit_lengths(
+        commit_len if commit_len is not None
+        else jnp.full((b,), t, jnp.int32), row_mask, t)
+    pos = jnp.asarray(pos, jnp.int32)
+    n = pos // granule
+    split = granule - (pos - n * granule)            # (B,) in [1, granule]
+    crossed = cl_c >= split                          # close fires this call
+    j = jnp.arange(t)
+    # Close the open granule: fold ALL pre-boundary keys (scoring view; it
+    # is also the committed view whenever ``crossed``).
+    amask = j[None, :] < jnp.minimum(split, t)[:, None]
+    bk_a = jnp.where(amask[:, :, None, None], bk, -jnp.inf)
+    c_cas = jnp.maximum(state.c_k, jax.lax.stop_gradient(
+        jnp.max(bk_a, axis=(1, 3), keepdims=True)))          # (B,1,H,1)
+    r_a = jnp.exp(state.c_k - c_cas)[:, 0, :, 0]             # (B,H)
+    fk_a = jnp.exp(bk_a - c_cas).astype(jnp.float32)
+    closed_s = state.s * r_a[..., None, None] \
+        + jnp.einsum("bjhd,bjhv->bhdv", fk_a, vf)
+    closed_z = state.z * r_a[..., None] + jnp.sum(fk_a, axis=1)
+    closed_c = c_cas[:, 0, :, 0]                             # (B,H)
+    # Fenwick carry-merge: insert the closed bucket at level 0, merging
+    # upward while occupied (binary increment); the top level saturates.
+    occ = occupancy(n, ls)                                   # (B,L)
+    inc_s, inc_z, inc_c = closed_s, closed_z, closed_c
+    carry = jnp.ones((b,), bool)
+    new_sl, new_zl, new_cl = [], [], []
+    for l in range(ls - 1):
+        o_l = occ[:, l] > 0.5
+        mrg = carry & o_l
+        take = carry & ~o_l
+        cm = jnp.maximum(state.cl[:, l], inc_c)              # (B,H)
+        e_old = jnp.exp(state.cl[:, l] - cm)
+        e_inc = jnp.exp(inc_c - cm)
+        sm = state.sl[:, l] * e_old[..., None, None] \
+            + inc_s * e_inc[..., None, None]
+        zm = state.zl[:, l] * e_old[..., None] + inc_z * e_inc[..., None]
+        new_sl.append(_sel(take, inc_s,
+                           _sel(mrg, jnp.zeros_like(inc_s), state.sl[:, l])))
+        new_zl.append(_sel(take, inc_z,
+                           _sel(mrg, jnp.zeros_like(inc_z), state.zl[:, l])))
+        new_cl.append(_sel(take, inc_c,
+                           _sel(mrg, jnp.zeros_like(inc_c), state.cl[:, l])))
+        inc_s = _sel(mrg, sm, inc_s)
+        inc_z = _sel(mrg, zm, inc_z)
+        inc_c = _sel(mrg, cm, inc_c)
+        carry = mrg
+    top = ls - 1
+    o_t = occ[:, top] > 0.5
+    cm = jnp.maximum(state.cl[:, top], inc_c)
+    e_old = jnp.exp(state.cl[:, top] - cm)
+    e_inc = jnp.exp(inc_c - cm)
+    sm = state.sl[:, top] * e_old[..., None, None] \
+        + inc_s * e_inc[..., None, None]
+    zm = state.zl[:, top] * e_old[..., None] + inc_z * e_inc[..., None]
+    t_mrg = carry & o_t
+    t_take = carry & ~o_t
+    new_sl.append(_sel(t_take, inc_s, _sel(t_mrg, sm, state.sl[:, top])))
+    new_zl.append(_sel(t_take, inc_z, _sel(t_mrg, zm, state.zl[:, top])))
+    new_cl.append(_sel(t_take, inc_c, _sel(t_mrg, cm, state.cl[:, top])))
+    sl2 = jnp.stack(new_sl, axis=1)
+    zl2 = jnp.stack(new_zl, axis=1)
+    cl2 = jnp.stack(new_cl, axis=1)
+    occ2 = occupancy(n + 1, ls)
+    # Committed pyramid: the cascade only lands when the commit crossed.
+    cx = crossed
+    sl_new = _sel(cx, sl2, state.sl)
+    zl_new = _sel(cx, zl2, state.zl)
+    cl_new = _sel(cx, cl2, state.cl)
+    # Committed open bucket.  Not crossed: plain LLN fold of j < commit.
+    cmask = j[None, :] < jnp.minimum(cl_c, split)[:, None]
+    bk_nc = jnp.where(cmask[:, :, None, None], bk, -jnp.inf)
+    c_nc = jnp.maximum(state.c_k, jax.lax.stop_gradient(
+        jnp.max(bk_nc, axis=(1, 3), keepdims=True)))
+    r_nc = jnp.exp(state.c_k - c_nc)[:, 0, :, 0]
+    fk_nc = jnp.exp(bk_nc - c_nc).astype(jnp.float32)
+    s_nc = state.s * r_nc[..., None, None] \
+        + jnp.einsum("bjhd,bjhv->bhdv", fk_nc, vf)
+    z_nc = state.z * r_nc[..., None] + jnp.sum(fk_nc, axis=1)
+    # Crossed: the old open bucket closed; a NEW open bucket starts from
+    # the committed post-boundary keys (reference from zero-init, exactly
+    # like a fresh row's first fold).
+    bmask = (j[None, :] >= split[:, None]) & (j[None, :] < cl_c[:, None])
+    bk_b = jnp.where(bmask[:, :, None, None], bk, -jnp.inf)
+    c_b = jnp.maximum(0.0, jax.lax.stop_gradient(
+        jnp.max(bk_b, axis=(1, 3), keepdims=True)))
+    fk_b = jnp.exp(bk_b - c_b).astype(jnp.float32)
+    s_b = jnp.einsum("bjhd,bjhv->bhdv", fk_b, vf)
+    z_b = jnp.sum(fk_b, axis=1)
+    s_new = _sel(cx, s_b, s_nc)
+    z_new = _sel(cx, z_b, z_nc)
+    c_new = _sel(cx, c_b, c_nc)
+    log_scale = state.log_scale
+    if renorm is not None and renorm > 0.0:
+        # Open bucket: same drift renorm as core.lln.decode_chunk, except
+        # the shift folds into c_k (the mix weight ``exp(c_k - c_out)``
+        # repays it exactly — scaling one bucket alone would change its
+        # weight relative to the pyramid).
+        folded = (cl_c > 0)[:, None]
+        zmax = jax.lax.stop_gradient(jnp.max(z_new, axis=-1))    # (B,H)
+        delta = jnp.where(folded & (zmax > renorm),
+                          jnp.log(jnp.maximum(zmax, EPS)), 0.0)
+        scale = jnp.exp(-delta)
+        s_new = s_new * scale[..., None, None]
+        z_new = z_new * scale[..., None]
+        c_new = c_new + delta[:, None, :, None]
+        if log_scale is not None:
+            log_scale = log_scale + delta
+        # Closed buckets renormalize into their own cl at merge time.
+        zlmax = jax.lax.stop_gradient(jnp.max(zl_new, axis=-1))  # (B,L,H)
+        dl = jnp.where(cx[:, None, None] & (zlmax > renorm),
+                       jnp.log(jnp.maximum(zlmax, EPS)), 0.0)
+        sc = jnp.exp(-dl)
+        sl_new = sl_new * sc[..., None, None]
+        zl_new = zl_new * sc[..., None]
+        cl_new = cl_new + dl
+    if row_mask is not None:
+        keep = row_mask
+        s_new = _sel(keep, s_new, state.s)
+        z_new = _sel(keep, z_new, state.z)
+        c_new = _sel(keep, c_new, state.c_k)
+        sl_new = _sel(keep, sl_new, state.sl)
+        zl_new = _sel(keep, zl_new, state.zl)
+        cl_new = _sel(keep, cl_new, state.cl)
+        if log_scale is not None:
+            log_scale = _sel(keep, log_scale, state.log_scale)
+    new = LogLinState(s=s_new, z=z_new, c_k=c_new, sl=sl_new, zl=zl_new,
+                      cl=cl_new, log_scale=log_scale)
+    return new, (cl_c, split, crossed, occ, occ2, sl2, zl2, cl2,
+                 closed_s, closed_z, closed_c)
+
+
+def _aggregate(sl, zl, cl, occ, w, c_out):
+    """Weighted pyramid aggregate at reference ``c_out`` (B,1,H,1):
+    ``sum_l occ_l * w_l * exp(cl_l - c_out) * (sl_l, zl_l)``.  Unoccupied
+    levels are masked BEFORE the exp (stale ``cl`` must not overflow)."""
+    c_o = c_out[:, 0, :, 0]                                  # (B,H)
+    cl_occ = jnp.where(occ[..., None] > 0.5, cl, -jnp.inf)   # (B,L,H)
+    wl = occ[..., None] * w[None, :, None] * jnp.exp(cl_occ - c_o[:, None, :])
+    s_eff = jnp.einsum("blh,blhdv->bhdv", wl, sl)
+    z_eff = jnp.einsum("blh,blhd->bhd", wl, zl)
+    return s_eff, z_eff
+
+
+def decode_chunk(state: LogLinState, q, k, v, alpha, beta, *,
+                 pos, granule: int, num_scales: int, scale_decay: float,
+                 row_mask: Optional[jnp.ndarray] = None,
+                 commit_len: Optional[jnp.ndarray] = None,
+                 renorm: Optional[float] = None):
+    """Advance the multi-scale state over T new tokens.
+
+    q/k/v: (B,T,H,D[v]) full heads; ``pos``: (B,) int32 tokens already in
+    the state (per-row — rows at different depths see different bucket
+    layouts).  Honors the serving contract of ``core/lln.py:decode_chunk``:
+    ``row_mask`` rows stay bitwise inert, ``commit_len`` scores all T
+    positions but folds only the accepted prefix, ``renorm`` bounds the
+    carried magnitudes semantics-preservingly (per bucket).
+
+    A chunk crosses at most one dyadic boundary when ``T <= granule``;
+    longer chunks are processed in ``granule``-sized sub-chunks (full
+    commit only — speculative drafts are never longer than a granule).
+    Each position scores exactly what a sequential decode would see:
+    pre-boundary queries mix pyramid(n) + open + intra; post-boundary
+    queries mix pyramid(n+1) (which absorbed the closed granule — and with
+    it every pre-boundary chunk key) + intra over post-boundary keys only.
+    """
+    b, t, h, d = q.shape
+    if t > granule:
+        if commit_len is not None:
+            raise ValueError(
+                "log_linear decode_chunk supports commit_len only for "
+                f"T <= granule (T={t}, granule={granule})")
+        outs = []
+        pos = jnp.asarray(pos, jnp.int32)
+        done = jnp.zeros((b,), jnp.int32)
+        for i0 in range(0, t, granule):
+            sl = slice(i0, min(i0 + granule, t))
+            o, state = decode_chunk(
+                state, q[:, sl], k[:, sl], v[:, sl], alpha, beta,
+                pos=pos + done, granule=granule, num_scales=num_scales,
+                scale_decay=scale_decay, row_mask=row_mask, renorm=renorm)
+            step = sl.stop - sl.start
+            adv = jnp.full((b,), step, jnp.int32)
+            done = done + (jnp.where(row_mask, adv, 0)
+                           if row_mask is not None else adv)
+            outs.append(o)
+        return jnp.concatenate(outs, axis=1), state
+    ls = num_scales
+    bk = (k * _bcast(beta, k)).astype(jnp.float32)
+    aq = q * _bcast(alpha, q)
+    fq = jnp.exp(aq - _stab_const(aq, (1, 3))).astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = level_weights(ls, scale_decay)
+    new_state, aux = _advance(state, bk, vf, pos=pos, granule=granule,
+                              num_scales=ls, row_mask=row_mask,
+                              commit_len=commit_len, renorm=renorm, t=t)
+    (cl_c, split, crossed, occ, occ2, sl2, zl2, cl2,
+     closed_s, closed_z, closed_c) = aux
+    # One scoring reference covering every bucket and every chunk key.
+    cl_occ = jnp.where(occ[..., None] > 0.5, state.cl, -jnp.inf)  # (B,L,H)
+    c_state = jnp.max(cl_occ, axis=1)[:, None, :, None]      # (B,1,H,1)
+    c_out = jnp.maximum(jnp.maximum(state.c_k, c_state),
+                        jax.lax.stop_gradient(
+                            jnp.max(bk, axis=(1, 3), keepdims=True)))
+    fk = jnp.exp(bk - c_out).astype(jnp.float32)
+    # Pre-boundary view: pyramid(n) + open bucket.
+    s_effa, z_effa = _aggregate(state.sl, state.zl, state.cl, occ, w, c_out)
+    r_open = jnp.exp(state.c_k - c_out)[:, 0, :, 0]          # (B,H)
+    s_effa = s_effa + state.s * r_open[..., None, None]
+    z_effa = z_effa + state.z * r_open[..., None]
+    # Post-boundary view: pyramid(n+1) only (the closed granule absorbed
+    # the old open bucket and all pre-boundary chunk keys; post-boundary
+    # chunk keys arrive via intra).
+    s_effb, z_effb = _aggregate(sl2, zl2, cl2, occ2, w, c_out)
+    # Intra: causal AND same-side-of-boundary (post-boundary queries see
+    # pre-boundary chunk keys through pyramid(n+1), not intra).
+    j = jnp.arange(t)
+    tri = (j[:, None] >= j[None, :])
+    side = ~((j[None, :, None] >= split[:, None, None])
+             & (j[None, None, :] < split[:, None, None]))    # (B,T,T)
+    mask = (tri[None] & side).astype(jnp.float32)
+    scores = jnp.einsum("bihd,bjhd->bhij", fq, fk) * mask[:, None]
+    intra = jnp.einsum("bhij,bjhv->bihv", scores, vf)
+    intra_z = jnp.sum(scores, axis=-1).transpose(0, 2, 1)    # (B,T,H)
+    inter_a = jnp.einsum("bihd,bhdv->bihv", fq, s_effa)
+    inter_az = jnp.einsum("bihd,bhd->bih", fq, z_effa)
+    inter_b = jnp.einsum("bihd,bhdv->bihv", fq, s_effb)
+    inter_bz = jnp.einsum("bihd,bhd->bih", fq, z_effb)
+    pre = j[None, :] < split[:, None]                        # (B,T)
+    inter = jnp.where(pre[..., None, None], inter_a, inter_b)
+    inter_z = jnp.where(pre[..., None], inter_az, inter_bz)
+    out = (intra + inter) / (intra_z + inter_z + EPS)[..., None]
+    return out.astype(v.dtype), new_state
+
+
+def commit_chunk(state: LogLinState, k, v, beta, *,
+                 pos, granule: int, num_scales: int,
+                 row_mask: Optional[jnp.ndarray] = None,
+                 commit_len: Optional[jnp.ndarray] = None,
+                 renorm: Optional[float] = None) -> LogLinState:
+    """Fold a scored chunk's accepted prefix WITHOUT scoring — the
+    single-pass speculative-verify commit.  Runs the exact ``_advance``
+    computation :func:`decode_chunk` runs, so it is bit-identical to
+    re-running decode with the final ``commit_len``."""
+    t = k.shape[1]
+    if t > granule:
+        raise ValueError(
+            f"log_linear commit_chunk requires T <= granule "
+            f"(T={t}, granule={granule})")
+    bk = (k * _bcast(beta, k)).astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    new_state, _ = _advance(state, bk, vf, pos=pos, granule=granule,
+                            num_scales=num_scales, row_mask=row_mask,
+                            commit_len=commit_len, renorm=renorm, t=t)
+    return new_state

@@ -32,12 +32,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lln as core_lln
+from repro.core import loglinear as core_loglin
 from repro.core.diag import block_diag_attn as core_diag
 from . import ref as kref
 from . import registry
 from .block_diag import block_diag_bwd_pallas, block_diag_pallas
 from .lln_attention import (lln_bidir_pallas, lln_causal_pallas,
                             lln_decode_pallas, lln_diag_fused_pallas)
+from .loglinear import loglin_causal_pallas
 from .lln_backward import (lln_bidir_bwd_pallas, lln_bidir_bwd_scan,
                            lln_causal_bwd_pallas, lln_causal_bwd_scan,
                            lln_diag_fused_bwd_pallas,
@@ -638,6 +640,349 @@ def lln_commit_chunk(state, k, v, beta,
         if log_scale is not None:
             log_scale = jnp.where(keep[:, None], log_scale, state.log_scale)
     return LLNState(s=s_new, z=z_new, c_k=c_new_h, log_scale=log_scale)
+
+
+# ---------------------------------------------------------------------------
+# Log-linear (Fenwick multi-scale) LLN: full-sequence forward, state-
+# emitting prefill and chunked decode/commit.  Inference-only entry points
+# (the serving path); the scan/ref kinds are pure jnp and autodiff-able.
+# ---------------------------------------------------------------------------
+
+def _loglin_repeat(q, k, v, beta):
+    """Model-layout fallback prep: repeated KV + (H,)-shaped beta."""
+    h, g = q.shape[2], k.shape[2]
+    kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+    vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+    beta = jnp.asarray(beta, jnp.float32)
+    if beta.ndim and beta.shape[-1] == g and g != h:
+        beta = jnp.repeat(beta, h // g, axis=-1)
+    return kf, vf, beta
+
+
+def loglin_attention(q, k, v, alpha, beta, causal: bool = True,
+                     chunk: int = 256, num_scales: int = 4,
+                     scale_decay: float = 0.5,
+                     interpret: Optional[bool] = None,
+                     backend: str = "auto"):
+    """Full-sequence log-linear LLN attention (causal-only).
+
+    Each query mixes a causal intra-granule term (weight 1) with the
+    Fenwick bucket pyramid of its prefix: the granule holding key ``j``
+    sits at level ``l`` of the pyramid at query time and scores at weight
+    ``scale_decay ** l`` (see ``core/loglinear.py``).  ``num_scales=1``
+    or ``scale_decay=1`` reduce exactly to plain :func:`lln_attention`.
+
+    Dispatch: Pallas kernel (``kernels/loglinear.py``) on compiled
+    backends; the core granule-``lax.scan`` under ``scan`` / interpret
+    mode; the quadratic jnp oracle under ``ref`` (and for ragged
+    lengths).
+    """
+    if not causal:
+        raise ValueError("log_linear attention is causal-only")
+    b, n, h, _ = q.shape
+    g = k.shape[2]
+    kind, ip = _dispatch(backend, interpret, ragged=bool(n % chunk),
+                         cpu_twin="scan")
+    if kind in ("ref", "scan"):
+        kf, vf, beta_h = _loglin_repeat(q, k, v, beta)
+        if kind == "ref":
+            out = core_loglin.loglin_attention_ref(
+                q, kf, vf, alpha, beta_h, granule=chunk,
+                num_scales=num_scales, scale_decay=scale_decay)
+        else:
+            out, _ = core_loglin.prefill(
+                q, kf, vf, alpha, beta_h, granule=chunk,
+                num_scales=num_scales, scale_decay=scale_decay)
+        return out.astype(v.dtype)
+    qs, ks, _, _ = _scaled_stabilized(q, k, alpha, beta)
+    out = loglin_causal_pallas(qs, ks, _to_kernel(v),
+                               num_scales=num_scales,
+                               scale_decay=scale_decay, r=h // g,
+                               blk=chunk, interpret=ip)
+    return _from_kernel(out, b)
+
+
+def loglin_prefill(q, k, v, alpha, beta, chunk: int = 256,
+                   num_scales: int = 4, scale_decay: float = 0.5,
+                   interpret: Optional[bool] = None,
+                   backend: str = "auto"):
+    """Causal log-linear prefill emitting outputs AND the multi-scale
+    decode state in one pass.
+
+    Returns ``(out, s, z, c_k, sl, zl, cl)``: the open-bucket LLN state
+    (``s``/``z``/``c_k`` exactly as :func:`lln_prefill` — holding the
+    ragged tail past the last closed granule, empty for aligned N) plus
+    the Fenwick bucket pyramid ``sl`` (B,L,H,D,Dv), ``zl`` (B,L,H,D),
+    ``cl`` (B,L,H) fp32 — the ``core.loglinear.LogLinState`` layout.
+    On the kernel/scan paths every bucket shares the global reference
+    constant, so ``cl`` is the broadcast ``c_k``.
+    """
+    b, n, h, d = q.shape
+    g, dv = k.shape[2], v.shape[-1]
+    ls = num_scales
+    kind, ip = _dispatch(backend, interpret, ragged=bool(n % chunk),
+                         cpu_twin="scan")
+    if kind == "ref":
+        kf, vf, beta_h = _loglin_repeat(q, k, v, beta)
+        out, st = core_loglin.prefill(q, kf, vf, alpha, beta_h,
+                                      granule=chunk, num_scales=ls,
+                                      scale_decay=scale_decay)
+        return (out.astype(v.dtype), st.s, st.z, st.c_k,
+                st.sl, st.zl, st.cl)
+    qs, ks, _, _, c_k = _scaled_stabilized(q, k, alpha, beta,
+                                           with_const=True)
+    vk = _to_kernel(v)
+    if kind == "scan":
+        out_k, sl, zl = _loglin_prefill_scan(
+            qs, ks, vk, r=h // g, blk=chunk, num_scales=ls,
+            scale_decay=scale_decay)
+    else:
+        out_k, sl, zl = loglin_causal_pallas(
+            qs, ks, vk, num_scales=ls, scale_decay=scale_decay,
+            r=h // g, blk=chunk, interpret=ip, return_state=True)
+        zl = zl[:, :, 0, :]                            # (BH, L, D)
+    sl = sl.reshape(b, h, ls, d, dv).transpose(0, 2, 1, 3, 4)
+    zl = zl.reshape(b, h, ls, d).transpose(0, 2, 1, 3)
+    c_kh = jnp.repeat(c_k, h // g, axis=2) if g != h else c_k
+    cl = jnp.broadcast_to(c_kh[:, 0, :, 0][:, None, :], (b, ls, h))
+    s = jnp.zeros((b, h, d, dv), jnp.float32)
+    z = jnp.zeros((b, h, d), jnp.float32)
+    return _from_kernel(out_k, b), s, z, c_kh, sl, zl, cl
+
+
+def _loglin_prefill_scan(qs, ks, vk, *, r: int, blk: int, num_scales: int,
+                         scale_decay: float):
+    """Chunked lax.scan twin of the state-emitting log-linear kernel
+    (kernel layout, GQA via the (BG, R) head split — no repeated KV).
+    All buckets share the global pre-stabilized reference, so the
+    Fenwick carry-merge is pure adds and merged-out levels are zeroed."""
+    bh, n, d = qs.shape
+    bg, dv = ks.shape[0], vk.shape[-1]
+    nc = n // blk
+    ls = num_scales
+    wv = jnp.asarray([float(scale_decay) ** l for l in range(ls)],
+                     jnp.float32)
+    fq = jnp.exp(qs.astype(jnp.float32)).reshape(bg, r, nc, blk, d) \
+        .transpose(2, 0, 1, 3, 4)                      # (nc, BG, R, blk, D)
+    fk = jnp.exp(ks.astype(jnp.float32)).reshape(bg, nc, blk, d) \
+        .transpose(1, 0, 2, 3)                         # (nc, BG, blk, D)
+    vf = vk.astype(jnp.float32).reshape(bg, nc, blk, dv).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((blk, blk), jnp.float32))
+
+    def step(carry, xs):
+        sl, zl = carry                                 # (BG,L,D,Dv),(BG,L,D)
+        i, cq, ck, cv = xs
+        s_eff = jnp.einsum("l,gldv->gdv", wv, sl)
+        z_eff = jnp.einsum("l,gld->gd", wv, zl)
+        scores = jnp.einsum("grid,gjd->grij", cq, ck) * causal
+        intra = jnp.einsum("grij,gjv->griv", scores, cv)
+        intra_z = jnp.sum(scores, axis=-1)
+        inter = jnp.einsum("grid,gdv->griv", cq, s_eff)
+        inter_z = jnp.einsum("grid,gd->gri", cq, z_eff)
+        out = (intra + inter) / (intra_z + inter_z + 1e-6)[..., None]
+        c_s = jnp.einsum("gjd,gjv->gdv", ck, cv)
+        c_z = jnp.sum(ck, axis=1)
+        for l in range(ls - 1):
+            reach = (i & ((1 << l) - 1)) == ((1 << l) - 1)
+            bit = ((i >> l) & 1) == 1
+            mrg = reach & bit
+            take = reach & ~bit
+            old_s, old_z = sl[:, l], zl[:, l]
+            sl = sl.at[:, l].set(jnp.where(
+                take, c_s, jnp.where(mrg, jnp.zeros_like(old_s), old_s)))
+            zl = zl.at[:, l].set(jnp.where(
+                take, c_z, jnp.where(mrg, jnp.zeros_like(old_z), old_z)))
+            c_s = jnp.where(mrg, c_s + old_s, c_s)
+            c_z = jnp.where(mrg, c_z + old_z, c_z)
+        if ls > 1:
+            reach_top = (i & ((1 << (ls - 1)) - 1)) == ((1 << (ls - 1)) - 1)
+            sl = sl.at[:, ls - 1].add(jnp.where(reach_top, c_s, 0.0))
+            zl = zl.at[:, ls - 1].add(jnp.where(reach_top, c_z, 0.0))
+        else:
+            sl = sl.at[:, 0].add(c_s)
+            zl = zl.at[:, 0].add(c_z)
+        return (sl, zl), out
+
+    sl0 = jnp.zeros((bg, ls, d, dv), jnp.float32)
+    zl0 = jnp.zeros((bg, ls, d), jnp.float32)
+    (sl, zl), out = jax.lax.scan(step, (sl0, zl0),
+                                 (jnp.arange(nc), fq, fk, vf))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(bh, n, dv).astype(vk.dtype)
+    sl = jnp.repeat(sl, r, axis=0) if r != 1 else sl   # group state -> H
+    zl = jnp.repeat(zl, r, axis=0) if r != 1 else zl
+    return out, sl, zl
+
+
+def loglin_decode_chunk(state, q, k, v, alpha, beta, *,
+                        pos, granule: int, num_scales: int,
+                        scale_decay: float,
+                        interpret: Optional[bool] = None,
+                        row_mask: Optional[jnp.ndarray] = None,
+                        backend: str = "auto",
+                        commit_len: Optional[jnp.ndarray] = None,
+                        renorm: Optional[float] = None):
+    """Advance a ``core.loglinear.LogLinState`` over T new tokens.
+
+    Same serving contract as :func:`lln_decode_chunk` (``row_mask`` rows
+    bitwise inert, ``commit_len`` scores all T but folds the accepted
+    prefix, ``renorm`` per-bucket drift guard) plus the multi-scale
+    extras: per-row ``pos`` (B,) int32 — tokens already folded, which
+    determines each row's bucket layout — and the Fenwick carry-merge
+    when the chunk crosses a granule boundary.
+
+    Backend dispatch: ``scan``/``ref``/interpret run the jnp core twin
+    (the twin IS the reference, as for lln decode).  The ``pallas`` kind
+    runs the committed fold as the same jnp ``core.loglinear._advance``
+    (bitwise-identical state on every backend) and scores with TWO
+    :func:`kernels.lln_attention.lln_decode_pallas` launches sharing one
+    group-level reference: pass A masks keys at/past each row's granule
+    boundary and carries the pyramid(n)+open aggregate as its ``s0``;
+    pass B masks pre-boundary keys and carries the cascaded pyramid(n+1)
+    aggregate; per-position outputs select between the two views.
+
+    ``T > granule`` chunks are processed in granule-sized sub-chunks
+    (full commit only — speculative drafts never exceed a granule).
+    """
+    b, t, h, d = q.shape
+    g = k.shape[2]
+    kind, ip = _dispatch(backend, interpret, ragged=False, cpu_twin="ref")
+    beta_b = jnp.asarray(beta, jnp.float32)
+    if beta_b.ndim and beta_b.shape[-1] == h and g != h:
+        beta_b = beta_b.reshape(beta_b.shape[:-1] + (g, h // g)).mean(axis=-1)
+    beta_b = _bcast_heads(beta_b, g)
+    beta_h = jnp.repeat(beta_b, h // g, axis=-1) if g != h else beta_b
+    kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+    vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+    if kind != "pallas":
+        return core_loglin.decode_chunk(state, q, kf, vf, alpha, beta_h,
+                                        pos=pos, granule=granule,
+                                        num_scales=num_scales,
+                                        scale_decay=scale_decay,
+                                        row_mask=row_mask,
+                                        commit_len=commit_len,
+                                        renorm=renorm)
+    if t > granule:
+        if commit_len is not None:
+            raise ValueError(
+                "log_linear decode_chunk supports commit_len only for "
+                f"T <= granule (T={t}, granule={granule})")
+        outs = []
+        posv = jnp.asarray(pos, jnp.int32)
+        done = jnp.zeros((b,), jnp.int32)
+        for i0 in range(0, t, granule):
+            sl = slice(i0, min(i0 + granule, t))
+            o, state = loglin_decode_chunk(
+                state, q[:, sl], k[:, sl], v[:, sl], alpha, beta_b,
+                pos=posv + done, granule=granule, num_scales=num_scales,
+                scale_decay=scale_decay, interpret=interpret,
+                row_mask=row_mask, backend=backend, renorm=renorm)
+            step = sl.stop - sl.start
+            adv = jnp.full((b,), step, jnp.int32)
+            done = done + (jnp.where(row_mask, adv, 0)
+                           if row_mask is not None else adv)
+            outs.append(o)
+        return jnp.concatenate(outs, axis=1), state
+    # Committed fold: the exact jnp `_advance` the core twin runs, at H
+    # heads — the new state is bitwise-identical across backends.
+    bk_h = (kf * _row_head_bcast(beta_h)).astype(jnp.float32)
+    vf32 = vf.astype(jnp.float32)
+    new_state, aux = core_loglin._advance(
+        state, bk_h, vf32, pos=pos, granule=granule,
+        num_scales=num_scales, row_mask=row_mask,
+        commit_len=commit_len, renorm=renorm, t=t)
+    (cl_c, split, crossed, occ, occ2, sl2, zl2, cl2,
+     closed_s, closed_z, closed_c) = aux
+    # Group-level scoring reference covering every bucket and chunk key
+    # (the normalized form is exactly invariant to the reference, so the
+    # group pooling only changes rounding, not semantics).
+    alpha_b = _bcast_heads(alpha, h)
+    aq = q.astype(jnp.float32) * _row_head_bcast(alpha_b)
+    c_q = jax.lax.stop_gradient(jnp.max(aq, axis=(1, 3), keepdims=True))
+    w = core_loglin.level_weights(num_scales, scale_decay)
+    cl_occ = jnp.where(occ[..., None] > 0.5, state.cl, -jnp.inf)
+    c_state = jnp.max(cl_occ, axis=1)[:, None, :, None]      # (B,1,H,1)
+    c_h = jnp.maximum(jnp.maximum(state.c_k, c_state),
+                      jax.lax.stop_gradient(
+                          jnp.max(bk_h, axis=(1, 3), keepdims=True)))
+    r = h // g
+    c_g = jnp.max(c_h.reshape(b, 1, g, r, 1), axis=3)        # (B,1,G,1)
+    c_out = jnp.repeat(c_g, r, axis=2) if r != 1 else c_g    # (B,1,H,1)
+    # Two inter views at the shared reference (jnp aggregates, H heads).
+    s_effa, z_effa = core_loglin._aggregate(state.sl, state.zl, state.cl,
+                                            occ, w, c_out)
+    r_open = jnp.exp(state.c_k - c_out)[:, 0, :, 0]          # (B,H)
+    s_effa = s_effa + state.s * r_open[..., None, None]
+    z_effa = z_effa + state.z * r_open[..., None]
+    s_effb, z_effb = core_loglin._aggregate(sl2, zl2, cl2, occ2, w, c_out)
+    # Pass A scores pre-boundary queries (keys at/past the row's split
+    # masked to NEG_INF => Phi(k) = 0); pass B scores post-boundary
+    # queries (pre-boundary keys masked — they arrive via pyramid(n+1)).
+    j = jnp.arange(t)
+    bk_g = k.astype(jnp.float32) * _row_head_bcast(beta_b)   # (B,T,G,D)
+    ks_full = bk_g - c_g
+    pre_key = j[None, :, None, None] < split[:, None, None, None]
+    ks_a = jnp.where(pre_key, ks_full, -1e30)
+    ks_b = jnp.where(pre_key, -1e30, ks_full)
+    qs = _to_kernel(aq - c_q)
+    ka = _to_kernel(ks_a)
+    kb = _to_kernel(ks_b)
+    vk = _to_kernel(v)
+    tp = -(-t // 16) * 16
+    if tp != t:
+        qs = jnp.pad(qs, ((0, 0), (0, tp - t), (0, 0)))
+        ka = jnp.pad(ka, ((0, 0), (0, tp - t), (0, 0)),
+                     constant_values=-1e30)
+        kb = jnp.pad(kb, ((0, 0), (0, tp - t), (0, 0)),
+                     constant_values=-1e30)
+        vk = jnp.pad(vk, ((0, 0), (0, tp - t), (0, 0)))
+    dv = v.shape[-1]
+    out_a, _, _ = lln_decode_pallas(qs, ka, vk,
+                                    s_effa.reshape(b * h, d, dv),
+                                    z_effa.reshape(b * h, 1, d),
+                                    r=r, interpret=ip)
+    out_b, _, _ = lln_decode_pallas(qs, kb, vk,
+                                    s_effb.reshape(b * h, d, dv),
+                                    z_effb.reshape(b * h, 1, d),
+                                    r=r, interpret=ip)
+    pre = j[None, :] < split[:, None]                        # (B,T)
+    out = jnp.where(pre[..., None, None],
+                    _from_kernel(out_a[:, :t], b),
+                    _from_kernel(out_b[:, :t], b))
+    return out, new_state
+
+
+def loglin_commit_chunk(state, k, v, beta, *, pos, granule: int,
+                        num_scales: int,
+                        interpret: Optional[bool] = None,
+                        row_mask: Optional[jnp.ndarray] = None,
+                        backend: str = "auto",
+                        commit_len: Optional[jnp.ndarray] = None,
+                        renorm: Optional[float] = None):
+    """Fold a scored chunk's accepted prefix into a ``LogLinState``
+    without scoring — the single-pass speculative-verify commit.
+
+    Every backend kind runs the same O(T d^2 L) jnp
+    ``core.loglinear._advance`` fold (the Pallas decode path uses it
+    too), so commit is bit-identical to re-running
+    :func:`loglin_decode_chunk` with the final ``commit_len`` on every
+    backend.  k/v: (B,T,G,D[v]); beta as in :func:`lln_decode_chunk`.
+    """
+    t = k.shape[1]
+    g = k.shape[2]
+    h = state.s.shape[1]
+    _dispatch(backend, interpret, ragged=False, cpu_twin="ref")
+    beta_b = jnp.asarray(beta, jnp.float32)
+    if beta_b.ndim and beta_b.shape[-1] == h and g != h:
+        beta_b = beta_b.reshape(beta_b.shape[:-1] + (g, h // g)).mean(axis=-1)
+    beta_b = _bcast_heads(beta_b, g)
+    beta_h = jnp.repeat(beta_b, h // g, axis=-1) if g != h else beta_b
+    kf = k if g == h else jnp.repeat(k, h // g, axis=2)
+    vf = v if g == h else jnp.repeat(v, h // g, axis=2)
+    return core_loglin.commit_chunk(state, kf, vf, beta_h, pos=pos,
+                                    granule=granule,
+                                    num_scales=num_scales,
+                                    row_mask=row_mask,
+                                    commit_len=commit_len, renorm=renorm)
 
 
 # ---------------------------------------------------------------------------

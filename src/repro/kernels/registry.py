@@ -43,7 +43,7 @@ from typing import Callable, Optional
 
 import jax
 
-IMPLS = ("softmax", "lln", "lln_diag")
+IMPLS = ("softmax", "lln", "lln_diag", "log_linear")
 BACKENDS = ("auto", "pallas", "scan", "ref")
 CALIBRATIONS = ("batch", "per_row")
 PRECISIONS = ("float32", "bfloat16", "float16")
@@ -59,7 +59,8 @@ class AttnSpec:
     call (``AttnSpec.from_cfg``) or inline in tests.
 
     Attributes:
-      impl: ``softmax`` | ``lln`` | ``lln_diag`` (paper §4.2 hybrid).
+      impl: ``softmax`` | ``lln`` | ``lln_diag`` (paper §4.2 hybrid) |
+        ``log_linear`` (Fenwick multi-scale LLN state, causal-only).
       causal: decoder (True) vs encoder (False) masking.
       r: GQA ratio ``H // G`` (1 = MHA; k/v carry ``G = H // r`` heads).
       backend: ``auto`` | ``pallas`` | ``scan`` | ``ref`` — see module
@@ -87,7 +88,18 @@ class AttnSpec:
       renorm: drift renormalization threshold on the carried LLN ``z``
         magnitude — decode rescales (s, z) against the per-row log-scale
         when ``max|z|`` crosses it (0 = off; semantics-preserving, see
-        ``core/lln.py:decode_chunk``).
+        ``core/lln.py:decode_chunk``).  For ``log_linear`` the shift is
+        repaid through each bucket's reference constant
+        (``core/loglinear.py``).
+      num_scales: ``log_linear`` only — number of Fenwick pyramid levels
+        L; level ``l`` summarizes a dyadic span of ``2^l`` closed
+        granules (``lln_chunk`` tokens each).  ``num_scales=1`` is
+        exactly plain ``lln``.
+      scale_decay: ``log_linear`` only — per-level mix weight
+        ``scale_decay ** l`` (the open bucket and intra-chunk keys score
+        at weight 1).  ``scale_decay=1`` is exactly plain ``lln``; the
+        default 0.5 equalizes per-level mass so recent tokens outweigh
+        distant ones.
     """
     impl: str = "softmax"
     causal: bool = True
@@ -104,6 +116,8 @@ class AttnSpec:
     beta_n: float = 0.0
     calib_len: int = 1024
     renorm: float = 0.0
+    num_scales: int = 4
+    scale_decay: float = 0.5
 
     def __post_init__(self):
         if self.impl not in IMPLS:
@@ -139,6 +153,14 @@ class AttnSpec:
             raise ValueError("AttnSpec.renorm must be >= 0")
         if self.calib_len < 1:
             raise ValueError("AttnSpec.calib_len must be positive")
+        if self.num_scales < 1:
+            raise ValueError("AttnSpec.num_scales must be >= 1")
+        if self.scale_decay <= 0:
+            raise ValueError("AttnSpec.scale_decay must be > 0")
+        if self.impl == "log_linear" and not self.causal:
+            raise ValueError(
+                "log_linear attention is causal-only (the Fenwick bucket "
+                "pyramid is a running prefix summary)")
 
     @classmethod
     def from_cfg(cls, cfg, causal: bool = True,
@@ -164,7 +186,9 @@ class AttnSpec:
                    fixed_ab=cfg.lln_fixed_ab,
                    beta_n=getattr(cfg, "lln_beta_n", 0.0),
                    calib_len=getattr(cfg, "lln_calib_len", 1024),
-                   renorm=getattr(cfg, "lln_renorm", 0.0))
+                   renorm=getattr(cfg, "lln_renorm", 0.0),
+                   num_scales=getattr(cfg, "lln_num_scales", 4),
+                   scale_decay=getattr(cfg, "lln_scale_decay", 0.5))
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +260,12 @@ def attention(spec: AttnSpec, q, k, v, alpha, beta, **kw):
         return ops.lln_diag_attention(q, k, v, alpha, beta, spec.causal,
                                       spec.diag_block, backend=spec.backend,
                                       **kw)
+    if spec.impl == "log_linear":
+        return ops.loglin_attention(q, k, v, alpha, beta, spec.causal,
+                                    spec.lln_chunk,
+                                    num_scales=spec.num_scales,
+                                    scale_decay=spec.scale_decay,
+                                    backend=spec.backend, **kw)
     raise ValueError(f"registry.attention does not handle {spec.impl!r}")
 
 
@@ -247,12 +277,34 @@ def prefill(spec: AttnSpec, q, k, v, alpha, beta):
                            backend=spec.backend)
 
 
+def loglin_prefill(spec: AttnSpec, q, k, v, alpha, beta):
+    """State-emitting causal log-linear prefill under ``spec.backend``.
+    Returns ``(out, s, z, c_k, sl, zl, cl)`` — the open-bucket LLN state
+    plus the Fenwick bucket pyramid (``core/loglinear.py`` layout)."""
+    from . import ops
+    return ops.loglin_prefill(q, k, v, alpha, beta, chunk=spec.lln_chunk,
+                              num_scales=spec.num_scales,
+                              scale_decay=spec.scale_decay,
+                              backend=spec.backend)
+
+
 def decode_chunk(spec: AttnSpec, state, q, k, v, alpha, beta,
-                 row_mask=None, commit_len=None):
+                 row_mask=None, commit_len=None, pos=None):
     """Advance an ``LLNState`` over T tokens under ``spec.backend``.
     ``commit_len`` (B,) folds only the accepted prefix (speculative
-    verify — see ``ops.lln_decode_chunk``)."""
+    verify — see ``ops.lln_decode_chunk``).  ``log_linear`` specs route
+    to :func:`ops.loglin_decode_chunk` and additionally need ``pos``
+    (B,) — the per-row depth that determines each row's bucket layout."""
     from . import ops
+    if spec.impl == "log_linear":
+        return ops.loglin_decode_chunk(state, q, k, v, alpha, beta,
+                                       pos=pos, granule=spec.lln_chunk,
+                                       num_scales=spec.num_scales,
+                                       scale_decay=spec.scale_decay,
+                                       row_mask=row_mask,
+                                       backend=spec.backend,
+                                       commit_len=commit_len,
+                                       renorm=spec.renorm or None)
     return ops.lln_decode_chunk(state, q, k, v, alpha, beta,
                                 row_mask=row_mask, backend=spec.backend,
                                 commit_len=commit_len,
@@ -260,11 +312,19 @@ def decode_chunk(spec: AttnSpec, state, q, k, v, alpha, beta,
 
 
 def commit_chunk(spec: AttnSpec, state, k, v, beta,
-                 row_mask=None, commit_len=None):
+                 row_mask=None, commit_len=None, pos=None):
     """Fold a scored chunk's accepted prefix into an ``LLNState`` under
     ``spec.backend`` — the single-pass speculative-verify commit (no
     scoring; see ``ops.lln_commit_chunk``)."""
     from . import ops
+    if spec.impl == "log_linear":
+        return ops.loglin_commit_chunk(state, k, v, beta,
+                                       pos=pos, granule=spec.lln_chunk,
+                                       num_scales=spec.num_scales,
+                                       row_mask=row_mask,
+                                       backend=spec.backend,
+                                       commit_len=commit_len,
+                                       renorm=spec.renorm or None)
     return ops.lln_commit_chunk(state, k, v, beta,
                                 row_mask=row_mask, backend=spec.backend,
                                 commit_len=commit_len,

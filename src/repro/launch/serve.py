@@ -68,7 +68,8 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--attn-impl", default=None,
-                    choices=[None, "softmax", "lln", "lln_diag"])
+                    choices=[None, "softmax", "lln", "lln_diag",
+                             "log_linear"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)

@@ -86,6 +86,11 @@ def cache_shardings(cache_tree, cfg, mesh, rules):
         (r"(^|/)ckv$", (b_ax, None, "model")),
         (r"(^|/)kr$", (b_ax, None, None)),
         (r"(^|/)c_k$", (b_ax, None, h_ax, None)),
+        # log_linear Fenwick pyramid: (B, L, H, D[, Dv]) — scale axis
+        # replicates (L = lln_num_scales is tiny), heads/feature as LLN
+        (r"(^|/)sl$", (b_ax, None, h_ax, h_fd, None)),
+        (r"(^|/)zl$", (b_ax, None, h_ax, h_fd)),
+        (r"(^|/)cl$", (b_ax, None, h_ax)),
         # softmax KV caches (kv heads) / cross-attn caches
         (r"(^|/)(ck|cv|k|v)$", (b_ax, None, kv_ax, kv_fd)),
         # LLN state: heads when divisible, else the feature dim
@@ -625,12 +630,18 @@ def make_pool_setup(cfg: ArchConfig, mesh, params_struct=None, *,
     a batched slot prefill exact per request and lets the batcher group
     same-length admits even under dynamic moment matching.
     """
-    if cfg.family not in ("dense", "moe") or cfg.kv_lora > 0:
+    if cfg.family not in ("dense", "moe", "ssm", "hybrid") \
+            or cfg.kv_lora > 0:
         raise NotImplementedError(
-            "continuous batching supports dense/moe decoders "
+            "continuous batching supports dense/moe decoders and "
+            "ssm/hybrid models "
             f"(family={cfg.family}, kv_lora={cfg.kv_lora})")
     if spec_k < 0:
         raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+    if spec_k >= 1 and cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            "speculative pools need a first-k-layers draft "
+            f"(family={cfg.family})")
     cfg = cfg.replace(lln_per_row_calib=True)
     model = build_model(cfg)
     rules = shd.make_rules(cfg, multi_pod=multi_pod, serve=True)

@@ -32,7 +32,9 @@ def attn_cfg_of(cfg, causal: bool = True) -> AttnConfig:
                       diag_block=cfg.diag_block, lln_chunk=cfg.lln_chunk,
                       softmax_chunk=cfg.softmax_chunk,
                       use_kernel=cfg.use_kernel,
-                      fixed_ab=cfg.lln_fixed_ab)
+                      fixed_ab=cfg.lln_fixed_ab,
+                      num_scales=getattr(cfg, "lln_num_scales", 4),
+                      scale_decay=getattr(cfg, "lln_scale_decay", 0.5))
 
 
 def attn_engine(cfg, causal: bool = True) -> AttentionEngine:

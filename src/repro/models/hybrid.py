@@ -24,7 +24,8 @@ from .attention_block import (attn_apply, attn_init, serve_decode,
 from .layers import (apply_mlp, apply_norm, dense, dense_init, embed_init,
                      embed_lookup, logits_from_hidden, mlp_init, norm_init,
                      trunc_normal)
-from .ssm import ssm_apply, ssm_cache_init, ssm_decode, ssm_init
+from .ssm import (ssm_apply, ssm_cache_init, ssm_decode, ssm_decode_chunk,
+                  ssm_init)
 from .transformer import _remat
 
 
@@ -125,7 +126,13 @@ def hybrid_logits(p, tokens, cfg):
 # Serving.
 # ---------------------------------------------------------------------------
 
-def hybrid_cache_init(p, cfg, batch: int, max_len: int):
+def hybrid_cache_init(p, cfg, batch: int, max_len: int,
+                      per_row: bool = False):
+    """``per_row`` is accepted for pool-signature compatibility: the SSM
+    caches carry no position counters and the shared attention state is
+    per-row by construction (``serve_state_init``), so the layout is the
+    same either way."""
+    del per_row
     g, per, tail = _groups(cfg)
     one = ssm_cache_init(cfg, batch)
     caches = {"layers": jax.tree_util.tree_map(
@@ -191,18 +198,36 @@ def hybrid_prefill(p, tokens, cfg, max_len: int):
     return logits, caches
 
 
-def hybrid_decode(p, caches, token, cfg, position):
-    if token.ndim != 1:
-        raise NotImplementedError(
-            "chunked (B, T) decode is not wired for the ssm/hybrid family")
-    x = embed_lookup(p["embed"], token[:, None], cfg.cdtype, cfg.embed_scale)
+def hybrid_decode(p, caches, token, cfg, position, *, row_mask=None,
+                  commit_len=None):
+    """Decode step.  ``token`` (B,) is the single-token generation loop;
+    (B, T) is the chunked multi-token path.  ``row_mask``/``commit_len``
+    follow the continuous-batching / partial-commit contract of
+    ``AttentionEngine.decode`` on EVERY cache: masked rows advance
+    neither the SSM recurrent state, the conv windows, nor the shared
+    block's attention state, and ``commit_len`` folds only the accepted
+    prefix of a scored chunk.  ``position`` may be a scalar or per-row
+    (B,) (the shared attention block's RoPE base; the SSM layers are
+    position-free).  Returns ``(logits (B, V) | (B, T, V), caches)``.
+    """
+    chunked = token.ndim == 2
+    use_chunk = chunked or row_mask is not None or commit_len is not None
+    tokens = token if chunked else token[:, None]
+    x = embed_lookup(p["embed"], tokens, cfg.cdtype, cfg.embed_scale)
     x0 = x
     grouped, tail_p, g, per = _groups_params(p, cfg)
     new_caches = {}
 
+    def _ssm_step(lp, xn, cache):
+        if use_chunk:
+            return ssm_decode_chunk(lp["ssm"], xn, cache, cfg,
+                                    row_mask=row_mask,
+                                    commit_len=commit_len)
+        return ssm_decode(lp["ssm"], xn, cache, cfg)
+
     def mamba_step(x, lp, cache):
-        out, cache = ssm_decode(lp["ssm"],
-                                apply_norm(lp["ln"], x, "rmsnorm"), cache, cfg)
+        out, cache = _ssm_step(lp, apply_norm(lp["ln"], x, "rmsnorm"),
+                               cache)
         return x + out.astype(x.dtype), cache
 
     if g:
@@ -223,7 +248,8 @@ def hybrid_decode(p, caches, token, cfg, position):
                          jnp.concatenate([x, x0], -1), cfg.cdtype)
             a, gsc = serve_decode(p["shared"]["attn"],
                                   apply_norm(p["shared"]["ln1"], hcat,
-                                             "rmsnorm"), gsc, cfg, position)
+                                             "rmsnorm"), gsc, cfg, position,
+                                  row_mask=row_mask, commit_len=commit_len)
             hcat = hcat + a.astype(hcat.dtype)
             m = apply_mlp(p["shared"]["mlp"],
                           apply_norm(p["shared"]["ln2"], hcat, "rmsnorm"),
@@ -254,7 +280,7 @@ def hybrid_decode(p, caches, token, cfg, position):
     x = apply_norm(p["final_norm"], x, "rmsnorm")
     head = p["lm_head"] if "lm_head" in p else p["embed"]["table"].T
     logits = logits_from_hidden(head, x, cfg.cdtype, cfg.logit_softcap)
-    return logits[:, 0], new_caches
+    return (logits if chunked else logits[:, 0]), new_caches
 
 
 def _groups_params(p, cfg):

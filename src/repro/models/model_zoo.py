@@ -105,8 +105,13 @@ def build_model(cfg: ArchConfig) -> Model:
 
         return Model(cfg=cfg, init=lambda key: hy.hybrid_init(key, cfg),
                      loss=loss, hidden=hidden, prefill=prefill,
-                     decode=lambda p, c, t, pos: hy.hybrid_decode(p, c, t, cfg, pos),
-                     cache_init=lambda p, b, n: hy.hybrid_cache_init(p, cfg, b, n),
+                     decode=lambda p, c, t, pos, row_mask=None,
+                     commit_len=None: hy.hybrid_decode(
+                         p, c, t, cfg, pos, row_mask=row_mask,
+                         commit_len=commit_len),
+                     cache_init=lambda p, b, n, per_row=False:
+                         hy.hybrid_cache_init(p, cfg, b, n,
+                                              per_row=per_row),
                      param_count=_count)
 
     if fam == "encdec":

@@ -194,6 +194,103 @@ def ssm_cache_init(cfg, batch: int):
                               cfg.cdtype)}
 
 
+def ssm_decode_chunk(p, x, cache, cfg, *, row_mask=None, commit_len=None):
+    """Chunked T-token SSD decode under the serving contract.
+
+    x: (B, T, D).  All T positions are scored (each sees exactly the
+    tokens a sequential decode would have seen: the carried ``state`` /
+    conv window plus the in-chunk prefix), but the cache folds only the
+    accepted prefix: ``commit_len`` (B,) int32 in [0, T] selects how many
+    tokens enter the recurrent state and the conv window per row
+    (speculative partial commit), and ``row_mask`` (B,) bool freezes
+    masked rows bitwise (their outputs are garbage and must be
+    discarded) — the same contract as ``AttentionEngine.decode``.
+    Returns (out (B, T, D), new cache).
+    """
+    from repro.core.lln import commit_lengths
+    di, h, p_dim, s, g = _dims(cfg)
+    bsz, t, _ = x.shape
+    dtype = cfg.cdtype
+    wdt = cfg.conv_width
+    z = dense(p["w_z"], x, dtype)
+    xs = dense(p["w_x"], x, dtype)
+    b_proj = dense(p["w_B"], x, dtype)
+    c_proj = dense(p["w_C"], x, dtype)
+    dt = dense(p["w_dt"], x, dtype).astype(jnp.float32)
+
+    # Causal conv over [cached window | chunk]: position t sees rows
+    # t .. t+W-1 of the concatenation — the exact sliding window a
+    # sequential one-token loop would assemble.
+    conv_in = jnp.concatenate([xs, b_proj, c_proj], -1)       # (B,T,Cd)
+    window = jnp.concatenate([cache["conv"].astype(dtype), conv_in], 1)
+    conv_out = jnp.zeros((bsz, t, window.shape[-1]), dtype)
+    for j in range(wdt):
+        conv_out = conv_out + window[:, j:j + t] * \
+            p["conv_w"][j].astype(dtype)[None, None, :]
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(dtype)[None, None])
+    xs = conv_out[..., :di]
+    b_proj = conv_out[..., di:di + g * s]
+    c_proj = conv_out[..., di + g * s:]
+
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None])       # (B,T,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    log_a = dt * a[None, None]                                # (B,T,H)
+
+    xh = xs.reshape(bsz, t, h, p_dim).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    rep = h // g
+    b_in = jnp.repeat(b_proj.reshape(bsz, t, g, s), rep,
+                      axis=2).astype(jnp.float32)
+    c_in = jnp.repeat(c_proj.reshape(bsz, t, g, s), rep,
+                      axis=2).astype(jnp.float32)
+
+    # Score all T positions against the carried state (the intra-chunk
+    # quadratic dual + the inter-chunk state term of ssd_chunked).
+    lcum = jnp.cumsum(log_a, axis=1)                          # (B,T,H)
+    dot = einsum_f32("bihs,bjhs->bhij", c_in, b_in)
+    dec = jnp.exp(jnp.clip(lcum[:, :, None] - lcum[:, None, :],
+                           -60.0, 0.0)).transpose(0, 3, 1, 2)
+    tri = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = dot * dec * tri[None, None]
+    y_intra = einsum_f32("bhij,bjhp->bihp", scores, xbar)
+    ein = jnp.exp(jnp.clip(lcum, -60.0, 0.0))
+    y_inter = einsum_f32("bihs,bhsp->bihp", c_in,
+                         cache["state"]) * ein[..., None]
+    y = y_intra + y_inter
+
+    # Partial commit: only tokens j < commit_len[b] enter the recurrence.
+    cl = commit_lengths(commit_len, row_mask, t) if commit_len is not None \
+        else commit_lengths(jnp.full((bsz,), t, jnp.int32), row_mask, t)
+    lcum0 = jnp.concatenate([jnp.zeros((bsz, 1, h), jnp.float32), lcum], 1)
+    l_tot = jnp.take_along_axis(lcum0, cl[:, None, None].repeat(h, 2),
+                                axis=1)[:, 0]                 # (B,H)
+    take = (jnp.arange(t)[None, :] < cl[:, None])             # (B,T)
+    carry_dec = jnp.where(take[..., None],
+                          jnp.exp(jnp.clip(l_tot[:, None] - lcum,
+                                           -60.0, 0.0)), 0.0)
+    state = cache["state"] * \
+        jnp.exp(jnp.clip(l_tot, -60.0, 0.0))[:, :, None, None] + \
+        jnp.einsum("bjhs,bjh,bjhp->bhsp", b_in, carry_dec, xbar)
+    # Conv window commit: rows cl .. cl+W-2 of the concatenation are the
+    # last W-1 inputs a sequential decode of the accepted prefix saw.
+    idx = cl[:, None] + jnp.arange(wdt - 1)[None, :]          # (B,W-1)
+    conv_cache = jnp.take_along_axis(
+        window, idx[:, :, None].astype(jnp.int32), axis=1)
+    if row_mask is not None:
+        keep = row_mask[:, None, None]
+        state = jnp.where(keep[..., None], state, cache["state"])
+        conv_cache = jnp.where(keep, conv_cache,
+                               cache["conv"].astype(dtype))
+
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, t, di).astype(dtype)
+    y = y * jax.nn.silu(z)
+    y = apply_norm(p["norm"], y, "rmsnorm")
+    out = dense(p["out_w"], y, dtype)
+    new_cache = {"state": state, "conv": conv_cache.astype(cfg.cdtype)}
+    return out, new_cache
+
+
 def ssm_decode(p, x, cache, cfg):
     """One-token step.  x: (B, 1, D)."""
     di, h, p_dim, s, g = _dims(cfg)

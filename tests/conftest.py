@@ -48,7 +48,7 @@ def pytest_collection_modifyitems(config, items):
 # ---------------------------------------------------------------------------
 
 PARITY_BACKENDS = ("pallas", "scan", "ref")
-PARITY_IMPLS = ("softmax", "lln", "lln_diag")
+PARITY_IMPLS = ("softmax", "lln", "lln_diag", "log_linear")
 PARITY_GQA = (1, 4)
 
 
@@ -58,9 +58,11 @@ def _cells(impls):
             if not (i == "softmax" and b == "pallas")]
 
 
-@pytest.fixture(params=_cells(("lln", "lln_diag")))
+@pytest.fixture(params=_cells(("lln", "lln_diag", "log_linear")))
 def lln_parity_cell(request):
-    """(backend, impl, r) over the LLN attention ops (kernels/ops.py)."""
+    """(backend, impl, r) over the LLN attention ops (kernels/ops.py).
+    ``log_linear`` is causal-only — tests sweeping a causal axis skip the
+    non-causal cells for it."""
     return request.param
 
 

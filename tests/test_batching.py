@@ -67,7 +67,8 @@ def _solo_tokens(cfg, model, params, mesh, req, max_len, gen_cache):
 
 class TestPoolParity:
     @pytest.mark.parametrize("r", [1, 4])
-    @pytest.mark.parametrize("impl", ["softmax", "lln", "lln_diag"])
+    @pytest.mark.parametrize("impl", ["softmax", "lln", "lln_diag",
+                                      "log_linear"])
     def test_pool_matches_solo_generate(self, impl, r):
         """2 slots, 4 mixed-length requests: admits/evicts stagger (short
         requests retire and refill their slot while a long one is still

@@ -1,0 +1,50 @@
+"""Smoke test: the log-linear state benchmark runs end-to-end.
+
+Runs the smoke-scale cells.  The state-bytes and recall gates are
+deterministic — they measure math and layout, not wall clock — and must
+PASS even at smoke scale.  The decode-cost cell is wall-clock and too
+noisy to hard-gate here; only its shape is checked (same policy as
+``test_bench_longctx``).
+"""
+import json
+
+from benchmarks.bench_loglinear import run
+from benchmarks.ci_check import _loglinear_gates
+
+
+def test_bench_loglinear_smoke(tmp_path):
+    out = tmp_path / "BENCH_loglinear.json"
+    report = run(str(out), smoke=True, verbose=False)
+    assert out.exists()
+    on_disk = json.loads(out.read_text())
+    names = [r["name"] for r in on_disk["results"]]
+    assert names == ["state_bytes", "recall", "decode_cost"]
+    assert len(report["results"]) == len(on_disk["results"])
+
+    rows = {r["name"]: r for r in on_disk["results"]}
+    # Deterministic gates hold at any scale.
+    sb = rows["state_bytes"]
+    assert sb["pass"], sb
+    assert sb["ratio_vs_ideal"] <= sb["gate_ratio"]
+    assert sb["compression_vs_kv"] > 10.0       # logN*d^2 beats N*d by far
+    rc = rows["recall"]
+    assert rc["pass"], rc
+    assert rc["log_linear"]["top1_acc"] >= rc["gate_acc"]
+    assert rc["log_linear"]["top1_acc"] >= rc["lln"]["top1_acc"]
+    assert rc["log_linear"]["cos_margin"] > rc["lln"]["cos_margin"]
+
+    # Smoke wall clocks are too noisy to hard-gate; shape only.
+    dc = rows["decode_cost"]
+    assert dc["tok_s"]["lln"] > 0 and dc["tok_s"]["log_linear"] > 0
+    assert isinstance(dc["overhead_ratio"], float)
+    assert dc["gate_ratio"] == 3.0
+
+
+def test_ci_check_gates_on_committed_report():
+    """The committed repo-root BENCH_loglinear.json passes the ci_check
+    gate validator (the same one CI applies)."""
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_loglinear.json")) as f:
+        committed = json.load(f)
+    assert _loglinear_gates(committed) == []

@@ -1,0 +1,372 @@
+"""Log-linear (Fenwick multi-scale) attention state: core + ops + engine.
+
+Covers the ``log_linear`` impl end to end against its quadratic oracle
+(:func:`repro.core.loglinear.loglin_attention_ref`):
+
+* layout unit tests — ``occupancy`` is a saturating binary counter,
+  ``level_matrix`` matches a python Fenwick walk;
+* exact reductions — ``scale_decay=1`` and ``num_scales=1`` reproduce
+  plain LLN attention bit-for-tolerance;
+* backend parity (pallas / scan / ref × GQA, fp32 tight + bf16 loose);
+* the serving lifecycle: prefill+decode == oracle, chunked == sequential
+  decode, ``commit_chunk`` bitwise == ``verify``'s fold, ``row_mask``
+  rows bitwise inert, per-bucket ``renorm`` semantics-preserving, and
+  ``evict`` resetting the bucket pyramid;
+* the hybrid satellite regression: masked hybrid-model rows leave every
+  cache leaf (SSM state, conv window, attention pyramid) bitwise
+  unchanged.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import loglinear as core_loglin
+from repro.core.engine import AttentionEngine, AttnSpec
+from repro.kernels import ops as kops
+
+B, H, G, D = 2, 4, 2, 8
+CH, L = 8, 3          # granule, num_scales
+DECAY = 0.5
+
+
+def _qkv(n, seed=0, t_heads=H, kv=G, d=D, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, n, t_heads, d)), dtype) * 0.5
+    k = jnp.asarray(rng.normal(size=(B, n, kv, d)), dtype) * 0.5
+    v = jnp.asarray(rng.normal(size=(B, n, kv, d)), dtype)
+    alpha = jnp.asarray(rng.uniform(0.8, 1.2, size=(t_heads,)), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0.8, 1.2, size=(kv,)), jnp.float32)
+    return q, k, v, alpha, beta
+
+
+def _rep(x, r):
+    return x if r == 1 else jnp.repeat(x, r, axis=2)
+
+
+def _spec(backend, r, **kw):
+    kw.setdefault("lln_chunk", CH)
+    kw.setdefault("num_scales", L)
+    kw.setdefault("scale_decay", DECAY)
+    return AttnSpec(impl="log_linear", causal=True, r=r, backend=backend,
+                    **kw)
+
+
+class TestLayout:
+    def test_occupancy_binary_counter(self):
+        """occupancy(n) is n in binary with a saturating top level."""
+        for n in range(0, 40):
+            occ = np.asarray(core_loglin.occupancy(jnp.int32(n), L))
+            top = 2 ** (L - 1)
+            want = [float((n >> l) & 1) for l in range(L - 1)]
+            want.append(float(n >= top))
+            assert occ.tolist() == want, (n, occ)
+
+    def test_occupancy_single_scale(self):
+        occ = np.asarray(core_loglin.occupancy(jnp.asarray([0, 1, 7]), 1))
+        assert occ.tolist() == [[0.0], [1.0], [1.0]]
+
+    def test_level_matrix_fenwick_walk(self):
+        """Each key granule's level matches a python binary-counter walk."""
+        n, g, ls = 64, 8, 3
+        lev = np.asarray(core_loglin.level_matrix(n, granule=g,
+                                                  num_scales=ls))
+        for t in range(n):
+            nq = t // g
+            # walk: which level does closed granule j live at, given nq?
+            top_count = nq - (nq & ((1 << (ls - 1)) - 1))
+            for j in range(t + 1):
+                gj = j // g
+                if gj == nq:
+                    want = 0                       # intra / open bucket
+                elif gj < top_count:
+                    want = ls - 1
+                else:
+                    want = None
+                    for l in range(ls - 1):
+                        hi = (nq >> (l + 1)) << (l + 1)
+                        if ((nq >> l) & 1) and hi <= gj < hi + (1 << l):
+                            want = l
+                            break
+                    assert want is not None, (t, j)
+                assert lev[t, j] == want, (t, j, lev[t, j], want)
+
+    def test_level_weights(self):
+        w = np.asarray(core_loglin.level_weights(4, 0.5))
+        np.testing.assert_allclose(w, [1.0, 0.5, 0.25, 0.125])
+
+
+class TestReductions:
+    """scale_decay=1 / num_scales=1 reduce EXACTLY to plain LLN."""
+
+    @pytest.mark.parametrize("ls,decay", [(L, 1.0), (1, DECAY)],
+                             ids=["decay1", "scales1"])
+    def test_reduces_to_lln(self, ls, decay):
+        q, k, v, alpha, beta = _qkv(48, seed=3)
+        kf, vf = _rep(k, H // G), _rep(v, H // G)
+        beta_h = jnp.repeat(beta, H // G)
+        ref = kops.lln_attention(q, kf, vf, alpha, beta_h, True, CH,
+                                 backend="ref")
+        got = core_loglin.loglin_attention_ref(
+            q, kf, vf, alpha, beta_h, granule=CH, num_scales=ls,
+            scale_decay=decay)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestBackendParity:
+    def test_attention_matches_oracle(self, lln_parity_cell):
+        backend, impl, r = lln_parity_cell
+        if impl != "log_linear":
+            pytest.skip("log_linear-only module")
+        n = 48
+        q, k, v, alpha, beta = _qkv(n, seed=1, kv=H // r)
+        kf, vf = _rep(k, r), _rep(v, r)
+        beta_h = jnp.repeat(beta, r) if r > 1 else beta
+        want = core_loglin.loglin_attention_ref(
+            q, kf, vf, alpha, beta_h, granule=CH, num_scales=L,
+            scale_decay=DECAY)
+        got = kops.loglin_attention(q, k, v, alpha, beta, True, CH,
+                                    num_scales=L, scale_decay=DECAY,
+                                    backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-5, rtol=5e-5)
+
+    def test_attention_bf16(self):
+        n = 32
+        q, k, v, alpha, beta = _qkv(n, seed=2, dtype=jnp.bfloat16)
+        kf, vf = _rep(k, H // G), _rep(v, H // G)
+        beta_h = jnp.repeat(beta, H // G)
+        want = core_loglin.loglin_attention_ref(
+            q.astype(jnp.float32), kf.astype(jnp.float32),
+            vf.astype(jnp.float32), alpha, beta_h, granule=CH,
+            num_scales=L, scale_decay=DECAY)
+        got = kops.loglin_attention(q, k, v, alpha, beta, True, CH,
+                                    num_scales=L, scale_decay=DECAY,
+                                    backend="pallas")
+        assert got.dtype == v.dtype
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), atol=5e-2, rtol=5e-2)
+
+    def test_non_causal_raises(self):
+        q, k, v, alpha, beta = _qkv(16)
+        with pytest.raises(ValueError, match="causal"):
+            kops.loglin_attention(q, k, v, alpha, beta, False, CH)
+
+
+class TestLifecycle:
+    """Engine-level serving lifecycle on every backend × GQA cell."""
+
+    def _engine(self, backend, r):
+        spec = _spec(backend, r)
+        return AttentionEngine(spec=spec, heads=H, kv_heads=H // r,
+                               head_dim=D, v_dim=D), spec
+
+    def test_prefill_decode_matches_oracle(self, backend_gqa_cell):
+        backend, r = backend_gqa_cell
+        eng, _ = self._engine(backend, r)
+        n, t = 32, 5
+        q, k, v, alpha, beta = _qkv(n + t, seed=4, kv=H // r)
+        out_p, st = eng.prefill(q[:, :n], k[:, :n], v[:, :n],
+                                max_len=4096, alpha=alpha, beta=beta)
+        out_d, st2 = eng.decode(st, q[:, n:], k[:, n:], v[:, n:])
+        kf, vf = _rep(k, r), _rep(v, r)
+        beta_h = jnp.repeat(beta, r) if r > 1 else beta
+        want = core_loglin.loglin_attention_ref(
+            q, kf, vf, alpha, beta_h, granule=CH, num_scales=L,
+            scale_decay=DECAY)
+        np.testing.assert_allclose(np.asarray(out_p),
+                                   np.asarray(want[:, :n]),
+                                   atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(np.asarray(out_d),
+                                   np.asarray(want[:, n:]),
+                                   atol=5e-5, rtol=5e-5)
+        assert np.asarray(st2.pos).tolist() == [n + t] * B
+
+    def test_chunked_equals_sequential(self, backend_gqa_cell):
+        backend, r = backend_gqa_cell
+        eng, _ = self._engine(backend, r)
+        n, t = 16, 8     # chunk crosses a granule boundary mid-stream
+        q, k, v, alpha, beta = _qkv(n + t, seed=5, kv=H // r)
+        _, st = eng.prefill(q[:, :n], k[:, :n], v[:, :n], max_len=4096,
+                            alpha=alpha, beta=beta)
+        out_c, st_c = eng.decode(st, q[:, n:], k[:, n:], v[:, n:])
+        outs, s = [], st
+        for i in range(n, n + t):
+            o, s = eng.decode(s, q[:, i:i + 1], k[:, i:i + 1],
+                              v[:, i:i + 1])
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(out_c),
+                                   np.asarray(jnp.concatenate(outs, 1)),
+                                   atol=5e-5, rtol=5e-5)
+        for f in ("s", "z", "sl", "zl", "pos"):
+            np.testing.assert_allclose(np.asarray(getattr(st_c, f)),
+                                       np.asarray(getattr(s, f)),
+                                       atol=5e-5, rtol=5e-5, err_msg=f)
+
+    def test_commit_bitwise_equals_verify(self, backend_gqa_cell):
+        backend, r = backend_gqa_cell
+        eng, _ = self._engine(backend, r)
+        n, t = 24, 6
+        q, k, v, alpha, beta = _qkv(n + t, seed=6, kv=H // r)
+        _, st = eng.prefill(q[:, :n], k[:, :n], v[:, :n], max_len=4096,
+                            alpha=alpha, beta=beta)
+        cl = jnp.asarray([2, 6], jnp.int32)
+        # verify with commit_len=0 must be a bitwise no-op on the state
+        _, st0, res = eng.verify(st, q[:, n:], k[:, n:], v[:, n:],
+                                 commit_len=jnp.zeros((B,), jnp.int32),
+                                 return_residuals=True)
+        for f in ("s", "z", "c_k", "sl", "zl", "cl", "pos"):
+            assert (np.asarray(getattr(st0, f))
+                    == np.asarray(getattr(st, f))).all(), f
+        _, st_v = eng.verify(st, q[:, n:], k[:, n:], v[:, n:],
+                             commit_len=cl)
+        st_c = eng.commit(st, res, commit_len=cl)
+        for f in ("s", "z", "c_k", "sl", "zl", "cl", "pos"):
+            assert (np.asarray(getattr(st_c, f))
+                    == np.asarray(getattr(st_v, f))).all(), f
+        assert np.asarray(st_c.pos).tolist() == [n + 2, n + 6]
+
+    def test_row_mask_bitwise_inert(self, backend_gqa_cell):
+        backend, r = backend_gqa_cell
+        eng, _ = self._engine(backend, r)
+        n, t = 24, 4
+        q, k, v, alpha, beta = _qkv(n + t, seed=7, kv=H // r)
+        _, st = eng.prefill(q[:, :n], k[:, :n], v[:, :n], max_len=4096,
+                            alpha=alpha, beta=beta)
+        rm = jnp.asarray([True, False])
+        _, st_m = eng.decode(st, q[:, n:], k[:, n:], v[:, n:],
+                             row_mask=rm)
+        for f in ("s", "z", "c_k", "sl", "zl", "cl", "pos", "log_scale"):
+            a = np.asarray(getattr(st_m, f))
+            b = np.asarray(getattr(st, f))
+            assert (a[1] == b[1]).all(), f"masked row moved {f}"
+
+    def test_evict_resets_pyramid(self):
+        eng, _ = self._engine("scan", 2)
+        n = 24
+        q, k, v, alpha, beta = _qkv(n, seed=8, kv=H // 2)
+        _, st = eng.prefill(q, k, v, max_len=4096, alpha=alpha, beta=beta)
+        assert float(np.abs(np.asarray(st.sl)).max()) > 0
+        st_e = eng.evict(st, jnp.asarray([0], jnp.int32))
+        for f in ("s", "z", "c_k", "sl", "zl", "cl", "log_scale"):
+            assert float(np.abs(np.asarray(getattr(st_e, f))[0]).max()) \
+                == 0.0, f
+        assert int(st_e.pos[0]) == 0
+        # the untouched row keeps its pyramid bitwise
+        assert (np.asarray(st_e.sl[1]) == np.asarray(st.sl[1])).all()
+
+    def test_per_row_positions(self):
+        """Rows at different depths use different bucket layouts; a pooled
+        decode step must match each row's solo decode."""
+        eng, _ = self._engine("scan", 2)
+        n0, n1, t = 16, 24, 4
+        q, k, v, alpha, beta = _qkv(n1 + t, seed=9, kv=H // 2)
+        _, st_a = eng.prefill(q[:, :n0], k[:, :n0], v[:, :n0],
+                              max_len=4096, alpha=alpha, beta=beta)
+        _, st_b = eng.prefill(q[:, :n1], k[:, :n1], v[:, :n1],
+                              max_len=4096, alpha=alpha, beta=beta)
+        # pooled state: row 0 at depth n0, row 1 at depth n1
+        st = st_a.replace(
+            **{f: jnp.concatenate([getattr(st_a, f)[:1],
+                                   getattr(st_b, f)[1:]], 0)
+               for f in ("s", "z", "c_k", "sl", "zl", "cl", "pos",
+                         "alpha", "beta", "log_scale")})
+        q2 = jnp.concatenate([q[:1, n0:n0 + t], q[1:, n1:n1 + t]], 0)
+        k2 = jnp.concatenate([k[:1, n0:n0 + t], k[1:, n1:n1 + t]], 0)
+        v2 = jnp.concatenate([v[:1, n0:n0 + t], v[1:, n1:n1 + t]], 0)
+        out, st2 = eng.decode(st, q2, k2, v2)
+        o_a, _ = eng.decode(st_a, q[:, n0:n0 + t], k[:, n0:n0 + t],
+                            v[:, n0:n0 + t])
+        o_b, _ = eng.decode(st_b, q[:, n1:n1 + t], k[:, n1:n1 + t],
+                            v[:, n1:n1 + t])
+        np.testing.assert_allclose(np.asarray(out[0]), np.asarray(o_a[0]),
+                                   atol=5e-5, rtol=5e-5)
+        np.testing.assert_allclose(np.asarray(out[1]), np.asarray(o_b[1]),
+                                   atol=5e-5, rtol=5e-5)
+        assert np.asarray(st2.pos).tolist() == [n0 + t, n1 + t]
+
+    def test_renorm_semantics_preserving(self):
+        """The per-bucket drift guard changes carried magnitudes, not
+        outputs."""
+        n, t = 24, 4
+        q, k, v, alpha, beta = _qkv(n + t, seed=10, kv=H // 2)
+        outs = {}
+        for renorm in (0.0, 1.0):
+            spec = _spec("scan", 2, renorm=renorm)
+            eng = AttentionEngine(spec=spec, heads=H, kv_heads=G,
+                                  head_dim=D, v_dim=D)
+            _, st = eng.prefill(q[:, :n], k[:, :n], v[:, :n],
+                                max_len=4096, alpha=alpha, beta=beta)
+            o1, st = eng.decode(st, q[:, n:], k[:, n:], v[:, n:])
+            outs[renorm] = o1
+        np.testing.assert_allclose(np.asarray(outs[0.0]),
+                                   np.asarray(outs[1.0]),
+                                   atol=5e-5, rtol=5e-5)
+
+
+class TestHybridMaskedRows:
+    """ISSUE regression: masked hybrid rows are bitwise-unchanged across
+    EVERY cache leaf — SSM recurrent state, conv windows, and the shared
+    block's log_linear pyramid."""
+
+    def _cfg(self):
+        from repro.configs.base import ArchConfig
+        return ArchConfig(
+            name="hybrid-mask", family="hybrid", n_layers=4, d_model=32,
+            n_heads=2, n_kv_heads=2, d_ff=64, vocab=64, head_dim=16,
+            attn_impl="log_linear", lln_chunk=8, lln_fixed_ab=2.1,
+            lln_num_scales=3, ssm_state=8, ssm_expand=2, ssm_head_dim=16,
+            ssm_groups=1, conv_width=4, shared_attn_period=2,
+            compute_dtype="float32", param_dtype="float32", remat="none",
+            tie_embeddings=True)
+
+    def test_masked_rows_bitwise_unchanged(self):
+        from repro.models import hybrid as hy
+        cfg = self._cfg()
+        p = hy.hybrid_init(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (3, 6), 0,
+                                  cfg.vocab)
+        _, caches = hy.hybrid_prefill(p, toks, cfg, 32)
+        nxt = jax.random.randint(jax.random.PRNGKey(2), (3,), 0, cfg.vocab)
+        rm = jnp.asarray([True, False, True])
+        _, cm = hy.hybrid_decode(p, caches, nxt, cfg,
+                                 jnp.asarray(6, jnp.int32), row_mask=rm)
+        old = jax.tree_util.tree_leaves(caches)
+        new = jax.tree_util.tree_leaves(cm)
+        assert len(old) == len(new)
+        for a, b in zip(old, new):
+            aa, bb = np.asarray(a), np.asarray(b)
+            assert aa.shape == bb.shape
+            # batch is axis 1 on every hybrid cache leaf (layer/group
+            # stacking is axis 0)
+            assert (aa[:, 1] == bb[:, 1]).all(), aa.shape
+
+    def test_ssm_chunked_decode_partial_commit(self):
+        """ssm_decode_chunk folds exactly the accepted prefix."""
+        from repro.configs.base import ArchConfig
+        from repro.models.ssm import (ssm_cache_init, ssm_decode,
+                                      ssm_decode_chunk, ssm_init)
+        cfg = self._cfg()
+        p = ssm_init(jax.random.PRNGKey(3), cfg)
+        bsz, t = 3, 5
+        x = jax.random.normal(jax.random.PRNGKey(4),
+                              (bsz, t, cfg.d_model)) * 0.5
+        cache = ssm_cache_init(cfg, bsz)
+        for i in range(2):       # warm with non-trivial state
+            w = jax.random.normal(jax.random.PRNGKey(5 + i),
+                                  (bsz, 1, cfg.d_model)) * 0.5
+            _, cache = ssm_decode(p, w, cache, cfg)
+        cl = jnp.asarray([2, 0, 5], jnp.int32)
+        _, cp = ssm_decode_chunk(p, x, cache, cfg, commit_len=cl)
+        for b, nacc in enumerate([2, 0, 5]):
+            cb = jax.tree_util.tree_map(lambda a: a[b:b + 1], cache)
+            for i in range(nacc):
+                _, cb = ssm_decode(p, x[b:b + 1, i:i + 1], cb, cfg)
+            np.testing.assert_allclose(np.asarray(cp["state"][b]),
+                                       np.asarray(cb["state"][0]),
+                                       atol=5e-5, rtol=5e-5)
+            np.testing.assert_allclose(
+                np.asarray(cp["conv"][b], np.float32),
+                np.asarray(cb["conv"][0], np.float32),
+                atol=5e-5, rtol=5e-5)

@@ -47,27 +47,33 @@ SLOTS, SEGMENT, MAX_LEN = 2, 3, 48
 SPEC_K, DRAFT_LAYERS = 2, 1
 PROMPT_MENU = (6, 9)          # small menus bound the compile count
 GEN_MENU = (1, 2, 4, 7)
+#: The fuzzed impl axis: each schedule draws the attention state family —
+#: lln_diag (O(d^2) state + diag tails) or log_linear (Fenwick bucket
+#: pyramid).  Oracle parity over random admit/evict/quarantine+replay
+#: schedules is exactly the "lifecycle preserves the bucket pyramid
+#: bitwise" property: any merge/occupancy corruption changes tokens.
+IMPL_MENU = ("lln_diag", "log_linear")
 
 
-def _cfg():
+def _cfg(impl: str = "lln_diag"):
     h = 4
     return ArchConfig(
-        name="pool-fuzz", family="dense", n_layers=2, d_model=64,
+        name=f"pool-fuzz-{impl}", family="dense", n_layers=2, d_model=64,
         n_heads=h, n_kv_heads=h // 2, d_ff=128, vocab=128, head_dim=16,
-        attn_impl="lln_diag", diag_block=8, lln_chunk=8, softmax_chunk=16,
-        lln_fixed_ab=2.1, compute_dtype="float32", param_dtype="float32",
-        remat="none", tie_embeddings=True)
+        attn_impl=impl, diag_block=8, lln_chunk=8, softmax_chunk=16,
+        lln_fixed_ab=2.1, lln_num_scales=3, compute_dtype="float32",
+        param_dtype="float32", remat="none", tie_embeddings=True)
 
 
 _STATE: dict = {}
 
 
-def _pool(spec: bool):
+def _pool(spec: bool, impl: str = "lln_diag"):
     """Module-cached pool (cfg, model, params, mesh, setup): every
     schedule reuses the same jitted executables."""
-    key = ("pool", spec)
+    key = ("pool", spec, impl)
     if key not in _STATE:
-        cfg = _cfg()
+        cfg = _cfg(impl)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         mesh = compat_mesh((1, 1), ("data", "model"))
@@ -80,16 +86,17 @@ def _pool(spec: bool):
     return _STATE[key]
 
 
-def _oracle(spec: bool, prompt: tuple, gen_len: int) -> np.ndarray:
+def _oracle(spec: bool, impl: str, prompt: tuple,
+            gen_len: int) -> np.ndarray:
     """Solo greedy reference for one request, cached per (prompt, len)."""
-    key = ("oracle", spec, prompt, gen_len)
+    key = ("oracle", spec, impl, prompt, gen_len)
     if key in _STATE:
         return _STATE[key]
-    cfg, model, params, mesh, _ = _pool(spec)
+    cfg, model, params, mesh, _ = _pool(spec, impl)
     plen = len(prompt)
     with mesh:
         if not spec:
-            skey = ("serve", spec, plen)
+            skey = ("serve", spec, impl, plen)
             if skey not in _STATE:
                 shape = ShapeSpec("fuzz-solo", MAX_LEN, 1, "decode")
                 _STATE[skey] = make_serve_setup(cfg, shape, mesh,
@@ -103,7 +110,7 @@ def _oracle(spec: bool, prompt: tuple, gen_len: int) -> np.ndarray:
             tok0 = jnp.argmax(last, -1).astype(jnp.int32)
             toks = [int(tok0[0])]
             if gen_len > 1:
-                gkey = ("gen", spec, plen, gen_len)
+                gkey = ("gen", spec, impl, plen, gen_len)
                 if gkey not in _STATE:
                     _STATE[gkey] = ss.make_generate(gen_len - 1, 0.0)
                 out, _ = _STATE[gkey](params, caches, tok0,
@@ -111,7 +118,7 @@ def _oracle(spec: bool, prompt: tuple, gen_len: int) -> np.ndarray:
                                       jax.random.PRNGKey(0))
                 toks.extend(int(t) for t in np.asarray(out)[0])
         else:
-            skey = ("spec-solo", plen)
+            skey = ("spec-solo", impl, plen)
             if skey not in _STATE:
                 shape = ShapeSpec("fuzz-spec", MAX_LEN, 1, "decode")
                 _STATE[skey] = make_spec_setup(cfg, shape, mesh,
@@ -125,7 +132,7 @@ def _oracle(spec: bool, prompt: tuple, gen_len: int) -> np.ndarray:
             toks = [int(tok0[0])]
             steps = gen_len - 1
             if steps > 0:
-                gkey = ("gen", spec, plen, steps)
+                gkey = ("gen", spec, impl, plen, steps)
                 if gkey not in _STATE:
                     _STATE[gkey] = ss.make_generate(steps, 0.0)
                 t, n_emit, *_ = _STATE[gkey](
@@ -139,7 +146,8 @@ def _oracle(spec: bool, prompt: tuple, gen_len: int) -> np.ndarray:
 
 
 def make_schedule(seed: int, spec: bool, n_req: int,
-                  fault_mode: int, deadline_mode: int) -> dict:
+                  fault_mode: int, deadline_mode: int,
+                  impl_idx: int = 0) -> dict:
     """Expand drawn knobs into a fully explicit, replayable schedule."""
     rng = np.random.RandomState(seed)
     vocab = 128
@@ -164,7 +172,8 @@ def make_schedule(seed: int, spec: bool, n_req: int,
     elif fault_mode == 3:
         faults = [{"kind": "delay", "segment": 1, "seconds": 0.002},
                   {"kind": "nan", "segment": 2}]
-    return {"seed": seed, "spec": bool(spec), "requests": reqs,
+    return {"seed": seed, "spec": bool(spec),
+            "impl": IMPL_MENU[impl_idx % len(IMPL_MENU)], "requests": reqs,
             "faults": {"seed": seed, "events": faults}}
 
 
@@ -172,7 +181,8 @@ def run_schedule(schedule: dict) -> None:
     """Run one schedule and assert the oracle-parity properties.  Feed a
     printed failure seed straight back in to reproduce."""
     spec = schedule["spec"]
-    cfg, model, params, mesh, setup = _pool(spec)
+    impl = schedule.get("impl", "lln_diag")
+    cfg, model, params, mesh, setup = _pool(spec, impl)
     reqs = [Request(rid=r["rid"],
                     prompt=np.asarray(r["prompt"], np.int32),
                     gen_len=r["gen_len"],
@@ -191,7 +201,7 @@ def run_schedule(schedule: dict) -> None:
         got = np.asarray(stats.outputs[req.rid], np.int32)
         assert len(got) <= req.budget, \
             f"rid {req.rid}: harvested {len(got)} > budget {req.budget}"
-        ref = _oracle(spec, tuple(int(t) for t in req.prompt),
+        ref = _oracle(spec, impl, tuple(int(t) for t in req.prompt),
                       req.budget)
         if status in ("done", "retried"):
             assert len(got) == req.budget, \
@@ -204,8 +214,9 @@ def run_schedule(schedule: dict) -> None:
                 err_msg=f"rid {req.rid} (prefix, status={status})")
 
 
-def _fuzz_one(seed, spec, n_req, fault_mode, deadline_mode):
-    schedule = make_schedule(seed, spec, n_req, fault_mode, deadline_mode)
+def _fuzz_one(seed, spec, n_req, fault_mode, deadline_mode, impl_idx=0):
+    schedule = make_schedule(seed, spec, n_req, fault_mode, deadline_mode,
+                             impl_idx)
     try:
         run_schedule(schedule)
     except AssertionError:
@@ -218,25 +229,27 @@ class TestPoolFuzz:
     @settings(max_examples=12, deadline=None)
     @given(seed=st.integers(0, 10**6), spec=st.booleans(),
            n_req=st.integers(1, 5), fault_mode=st.integers(0, 3),
-           deadline_mode=st.integers(0, 2))
+           deadline_mode=st.integers(0, 2),
+           impl_idx=st.integers(0, len(IMPL_MENU) - 1))
     def test_fuzz_quick(self, seed, spec, n_req, fault_mode,
-                        deadline_mode):
+                        deadline_mode, impl_idx):
         """Tier-1 smoke sweep (12 random schedules)."""
-        _fuzz_one(seed, spec, n_req, fault_mode, deadline_mode)
+        _fuzz_one(seed, spec, n_req, fault_mode, deadline_mode, impl_idx)
 
     @pytest.mark.slow
     @settings(max_examples=200, deadline=None)
     @given(seed=st.integers(0, 10**6), spec=st.booleans(),
            n_req=st.integers(1, 5), fault_mode=st.integers(0, 3),
-           deadline_mode=st.integers(0, 2))
+           deadline_mode=st.integers(0, 2),
+           impl_idx=st.integers(0, len(IMPL_MENU) - 1))
     def test_fuzz_deep(self, seed, spec, n_req, fault_mode,
-                       deadline_mode):
+                       deadline_mode, impl_idx):
         """The deep sweep: 200 schedules, zero parity violations
         (``pytest -m slow tests/test_pool_fuzz.py``)."""
-        _fuzz_one(seed, spec, n_req, fault_mode, deadline_mode)
+        _fuzz_one(seed, spec, n_req, fault_mode, deadline_mode, impl_idx)
 
     def test_replay_seed_roundtrip(self):
         """A printed failure seed replays: make_schedule -> JSON ->
         run_schedule is the documented reproduction loop."""
-        schedule = make_schedule(1234, True, 3, 1, 0)
+        schedule = make_schedule(1234, True, 3, 1, 0, impl_idx=1)
         run_schedule(json.loads(json.dumps(schedule)))

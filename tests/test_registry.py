@@ -89,7 +89,11 @@ class TestBackendParity:
         q, k, v = _qkv(r, b, n, h, g, d)
         alpha = jnp.full((h,), 1.2)
         beta = jnp.full((g,), 1.0)
-        fn = kops.lln_attention if impl == "lln" else kops.lln_diag_attention
+        if impl == "log_linear" and not causal:
+            pytest.skip("log_linear is causal-only")
+        fn = {"lln": kops.lln_attention,
+              "lln_diag": kops.lln_diag_attention,
+              "log_linear": kops.loglin_attention}[impl]
         ref = fn(q, k, v, alpha, beta, causal, 16, backend="auto")
         out = fn(q, k, v, alpha, beta, causal, 16, backend=backend)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
